@@ -1,0 +1,59 @@
+"""Shared benchmark utilities: datasets, timing, device models.
+
+Hardware models used when a figure needs the paper's GPUs (this container is
+CPU-only): V100 PCIe gen3 ~12 GB/s H2D/D2H; paper Fig. 12 saturated kernel
+throughputs (MGARD 45, ZFP 210, Huffman 150 GB/s on V100-class).  Our own
+measured CPU numbers are always reported alongside the modeled ones.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+V100 = {
+    "h2d_bps": 12e9,
+    "d2h_bps": 12e9,
+    "kernel_bps": {"mgard": 45e9, "zfp": 210e9, "huffman": 150e9},
+    "output_fraction": {"mgard": 0.2, "zfp": 0.5, "huffman": 0.7},
+}
+
+FRONTIER = {"nodes": 9408, "gpus_per_node": 4, "fs_bw": 9.4e12}
+SUMMIT = {"nodes": 4608, "gpus_per_node": 6, "fs_bw": 2.5e12}
+
+
+def nyx_like(n: int = 64, seed: int = 0) -> np.ndarray:
+    """Smooth-ish cosmology-like density field (NYX stand-in)."""
+    rng = np.random.default_rng(seed)
+    g = np.linspace(0, 8 * np.pi, n)
+    x, y, z = np.meshgrid(g, g, g, indexing="ij")
+    f = (
+        np.sin(x) * np.cos(y) * np.sin(z)
+        + 0.5 * np.sin(2 * x + 1) * np.cos(3 * z)
+        + 0.05 * rng.normal(size=x.shape)
+    )
+    return np.exp(f.astype(np.float32))  # positive, skewed like density
+
+
+def timeit(fn, *args, repeat: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def emit(self) -> None:
+        print(f"{self.name},{self.us_per_call:.1f},{self.derived}")

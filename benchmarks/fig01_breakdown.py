@@ -1,0 +1,57 @@
+"""Fig. 1 — time breakdown of un-pipelined reduction (memory ops vs compute).
+
+Paper claim: 34–89% of end-to-end time is memory operations (H2D/D2H/alloc)
+when reducing 500 MB NYX on V100 without pipelining.  We reproduce the
+breakdown with the paper's V100 device model (kernel throughputs from its
+own Fig. 12, PCIe ~12 GB/s) and report our measured CPU-XLA kernel
+throughput alongside.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import V100, Row, nyx_like, timeit
+from repro.core import api
+
+
+def breakdown(method: str, nbytes: float) -> dict:
+    k_bps = V100["kernel_bps"][method]
+    out_frac = V100["output_fraction"][method]
+    t_h2d = nbytes / V100["h2d_bps"]
+    t_kernel = nbytes / k_bps
+    t_d2h = nbytes * out_frac / V100["d2h_bps"]
+    t_total = t_h2d + t_kernel + t_d2h
+    return {
+        "mem_share": (t_h2d + t_d2h) / t_total,
+        "t_total": t_total,
+        "t_kernel": t_kernel,
+    }
+
+
+def main() -> None:
+    nbytes = 500e6  # paper: 500 MB NYX
+    for method in ("mgard", "zfp", "huffman"):
+        b = breakdown(method, nbytes)
+        Row(
+            f"fig01.{method}.v100_model",
+            b["t_total"] * 1e6,
+            f"mem_share={b['mem_share']:.1%}",
+        ).emit()
+
+    # our measured CPU-XLA compress throughput (small field; compute only)
+    data = nyx_like(48)
+    x = jnp.asarray(data)
+    for method, kw in (("mgard", {"error_bound": 1e-2}), ("zfp", {"rate": 16})):
+        t = timeit(lambda: api.compress(x, method, **kw), repeat=2)
+        bps = data.nbytes / t
+        Row(
+            f"fig01.{method}.cpu_measured",
+            t * 1e6,
+            f"kernel_bps={bps/1e6:.1f}MB/s",
+        ).emit()
+
+
+if __name__ == "__main__":
+    main()

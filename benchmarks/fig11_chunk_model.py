@@ -1,0 +1,39 @@
+"""Fig. 11 — Φ(C) roofline chunk-size model, fitted from real profiles.
+
+Profiles OUR ZFP-X pipeline on CPU across chunk sizes, fits the paper's
+piecewise linear→constant model, and reports fit quality — the same
+procedure the paper uses to build its adaptive-pipeline estimator.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Row, nyx_like, timeit
+from repro.core import chunk_model as cm
+from repro.core import zfp
+
+
+def main() -> None:
+    data = nyx_like(64).reshape(-1)
+    sizes = [4096, 16384, 65536, 262144]
+    chunk_bytes, bps = [], []
+    for n in sizes:
+        x = jnp.asarray(data[:n])
+        t = timeit(lambda x=x: zfp.compress_jit(x, 16, 1, (n,)), repeat=2)
+        chunk_bytes.append(n * 4)
+        bps.append(n * 4 / t)
+        Row(f"fig11.profile.{n*4>>10}KB", t * 1e6, f"bps={n*4/t/1e6:.1f}MB/s").emit()
+    phi = cm.fit_phi(np.array(chunk_bytes), np.array(bps))
+    pred = phi(np.array(chunk_bytes))
+    r2 = 1 - np.sum((pred - bps) ** 2) / max(np.sum((bps - np.mean(bps)) ** 2), 1e-12)
+    Row(
+        "fig11.phi_fit",
+        0.0,
+        f"gamma={phi.gamma/1e6:.1f}MB/s c_thr={phi.c_threshold/1024:.0f}KB r2={r2:.3f}",
+    ).emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fig. 14 — compression ratio vs pipeline setting (none / fixed / adaptive).
+
+Paper claim: small fixed chunks cost 5–67% of MGARD's ratio (decorrelation
+range is truncated); adaptive ends within 1% of un-chunked because most
+bytes flow through large chunks.  ZFP is insensitive (4^d blocks ≪ chunk).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .common import Row, nyx_like
+from repro.core import api
+
+
+def _ratio_chunked(data: np.ndarray, method: str, kw: dict, rows: list[int]) -> float:
+    total_raw, total_comp = 0, 0
+    start = 0
+    for r in rows:
+        chunk = data[start : start + r]
+        c = api.compress(jnp.asarray(chunk), method, **kw)
+        total_raw += chunk.nbytes
+        total_comp += c.nbytes()
+        start += r
+    return total_raw / total_comp
+
+
+def main() -> None:
+    data = nyx_like(64)
+    flat = data.reshape(64, -1)
+    n = flat.shape[0]
+    for method, kw in (
+        ("mgard", {"error_bound": 1e-2}),
+        ("zfp", {"rate": 12}),
+    ):
+        whole = api.compress(jnp.asarray(data), method, **kw).ratio()
+        small = _ratio_chunked(flat, method, kw, [4] * (n // 4))       # tiny chunks
+        # adaptive-like: one small lead-in chunk then big ones
+        adaptive = _ratio_chunked(flat, method, kw, [4, 12, 48])
+        Row(f"fig14.{method}.none", 0.0, f"ratio={whole:.2f}x").emit()
+        Row(f"fig14.{method}.fixed_small", 0.0,
+            f"ratio={small:.2f}x loss={(1-small/whole):.1%}").emit()
+        Row(f"fig14.{method}.adaptive", 0.0,
+            f"ratio={adaptive:.2f}x loss={(1-adaptive/whole):.1%}").emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Figs. 15/17/18 — multi-node aggregate throughput & parallel-I/O acceleration.
+
+Weak-scaling model (Fig. 15): aggregate = nodes × gpus × per-GPU end-to-end
+throughput × scalability(CMM vs not).  Per-GPU end-to-end throughput comes
+from the Fig. 10/13 pipeline simulation; scalability factors from Fig. 16.
+
+I/O acceleration (Figs. 17/18): write = raw/(fs_bw) vs compressed =
+raw/ratio/fs_bw + raw/reduction_throughput (reduction overlaps I/O only
+partially — worst-case additive, like the paper's measured configuration).
+Ratios are measured from OUR pipelines on the NYX stand-in; filesystem
+constants are Summit GPFS 2.5 TB/s and Frontier Lustre 9.4 TB/s.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import FRONTIER, SUMMIT, V100, Row, nyx_like
+from repro.core import api, chunk_model as cm, pipeline as pl
+from .fig10_13_pipeline import v100_phi
+
+
+def per_gpu_e2e(method: str) -> float:
+    rep = pl.simulate_pipeline(
+        int(4.3e9), "adaptive", v100_phi(method),
+        V100["h2d_bps"], V100["d2h_bps"],
+        output_fraction=V100["output_fraction"][method],
+    )
+    return rep.sustained_bps
+
+
+def main() -> None:
+    data = nyx_like(64)
+    ratios = {
+        "mgard": api.compress(jnp.asarray(data), "mgard", error_bound=1e-2).ratio(),
+        "zfp": api.compress(jnp.asarray(data), "zfp", rate=12).ratio(),
+        "lz_class": api.compress(jnp.asarray(data), "huffman-bytes").ratio(),
+    }
+
+    # Fig. 15: weak-scaling aggregate reduction throughput
+    for system, nodes in (("summit", 512), ("frontier", 1024)):
+        sysc = SUMMIT if system == "summit" else FRONTIER
+        gpus = nodes * sysc["gpus_per_node"]
+        for method in ("mgard", "zfp"):
+            bps = per_gpu_e2e(method)
+            for name, scal in (("hpdr", 0.96), ("baseline", 0.72)):
+                agg = gpus * bps * scal
+                Row(
+                    f"fig15.{system}.{method}.{name}",
+                    0.0,
+                    f"aggregate={agg/1e12:.1f}TB/s ({gpus} GPUs)",
+                ).emit()
+
+    # Figs. 17/18: I/O acceleration
+    for system in ("summit", "frontier"):
+        sysc = SUMMIT if system == "summit" else FRONTIER
+        nodes = 512 if system == "summit" else 1024
+        gpus = nodes * sysc["gpus_per_node"]
+        raw = 7.5e9 * gpus  # paper: 7.5 GB per GPU weak scaling
+        t_write_raw = raw / sysc["fs_bw"]
+        for method, red_scal in (("mgard", 0.96), ("zfp", 0.96)):
+            ratio = ratios[method]
+            red_bps = per_gpu_e2e(method) * gpus * red_scal
+            t_comp = raw / red_bps
+            t_write = raw / ratio / sysc["fs_bw"] + t_comp
+            Row(
+                f"fig17.{system}.{method}.write_accel",
+                t_write * 1e6,
+                f"accel={t_write_raw/t_write:.1f}x ratio={ratio:.1f}x",
+            ).emit()
+        # LZ-class: low ratio + overhead → no acceleration (paper's NVCOMP-LZ4)
+        ratio = ratios["lz_class"]
+        red_bps = 10e9 * gpus
+        t_write = raw / ratio / sysc["fs_bw"] + raw / red_bps
+        Row(
+            f"fig17.{system}.lz_class.write_accel",
+            t_write * 1e6,
+            f"accel={t_write_raw/t_write:.2f}x ratio={ratio:.2f}x",
+        ).emit()
+
+    # Fig. 18: strong scaling (32 TB E3SM-like, ratio from our MGARD @1e-4)
+    e3sm_ratio = 7.9  # paper-measured; our small-field proxy recorded alongside
+    our_proxy = api.compress(jnp.asarray(nyx_like(48)), "mgard",
+                             error_bound=1e-4).ratio()
+    for nodes in (512, 1024, 2048):
+        gpus = nodes * FRONTIER["gpus_per_node"]
+        raw = 32e12
+        t_raw = raw / FRONTIER["fs_bw"]
+        red_bps = per_gpu_e2e("mgard") * gpus * 0.96
+        t_hpdr = raw / e3sm_ratio / FRONTIER["fs_bw"] + raw / red_bps
+        slow_bps = 5e9 * gpus  # MGARD-GPU-class reduction throughput
+        t_slow = raw / e3sm_ratio / FRONTIER["fs_bw"] + raw / slow_bps
+        Row(
+            f"fig18.frontier.{nodes}nodes",
+            0.0,
+            f"hpdr_accel={t_raw/t_hpdr:.1f}x slow_reduction_accel={t_raw/t_slow:.2f}x our_proxy_ratio={our_proxy:.1f}x",
+        ).emit()
+
+
+if __name__ == "__main__":
+    main()

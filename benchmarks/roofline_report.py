@@ -1,0 +1,40 @@
+"""Roofline report: aggregate results/dryrun/*.json into the §Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from .common import Row
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(variant: str = "baseline") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(str(RESULTS / f"*__{variant}.json"))):
+        recs.append(json.loads(Path(f).read_text()))
+    return recs
+
+
+def main() -> None:
+    recs = load()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    Row("roofline.cells_ok", 0.0, f"{len(ok)}/{len(recs)}").emit()
+    for r in ok:
+        if r["multi_pod"]:
+            continue  # roofline table is single-pod (brief)
+        rf = r["roofline"]
+        bound = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        frac = rf["t_compute_s"] / bound if bound else 0.0
+        Row(
+            f"roofline.{r['arch']}.{r['shape']}",
+            bound * 1e6,
+            f"dom={rf['dominant']} tc={rf['t_compute_s']:.3e} tm={rf['t_memory_s']:.3e} "
+            f"tl={rf['t_collective_s']:.3e} compute_frac={frac:.2f}",
+        ).emit()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — HPDR (High-Performance Portable Data Reduction) on JAX/TPU,
+integrated into a multi-pod LM training/serving framework.
+
+Subpackages: core (the paper), kernels (Pallas), models, configs, runtime,
+optim, checkpoint, serving, data, launch.
+"""
+
+__version__ = "0.1.0"

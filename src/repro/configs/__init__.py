@@ -1,0 +1,40 @@
+"""Architecture config registry: one module per assigned architecture."""
+
+from __future__ import annotations
+
+from .base import SHAPES, ModelConfig, ShapeConfig, applicable_shapes  # noqa: F401
+
+from . import (  # noqa: E402
+    deepseek_67b,
+    deepseek_v3_671b,
+    llama4_scout_17b_a16e,
+    mamba2_370m,
+    minicpm_2b,
+    qwen1_5_4b,
+    qwen2_5_3b,
+    qwen2_vl_72b,
+    recurrentgemma_9b,
+    seamless_m4t_medium,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        deepseek_v3_671b,
+        llama4_scout_17b_a16e,
+        recurrentgemma_9b,
+        mamba2_370m,
+        seamless_m4t_medium,
+        qwen2_5_3b,
+        qwen1_5_4b,
+        minicpm_2b,
+        deepseek_67b,
+        qwen2_vl_72b,
+    )
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,21 @@
+"""HPDR core — the paper's contribution: portable reduction framework.
+
+Layers (paper Fig. 2, bottom-up): device adapters (`adapters`), machine
+abstraction (`machine`: GEM/DEM, `context`: CMM, `pipeline`: HDEM), parallel
+abstractions (`abstractions`), reduction pipelines (`mgard`, `zfp`,
+`huffman`), and the high-level API (`api`).
+"""
+
+from . import (  # noqa: F401
+    abstractions,
+    adapters,
+    api,
+    bitstream,
+    context,
+    huffman,
+    machine,
+    mgard,
+    quantize,
+    zfp,
+)
+from .api import Compressed, compress, decompress  # noqa: F401

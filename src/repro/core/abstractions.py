@@ -1,0 +1,183 @@
+"""Parallel abstractions — HPDR §III-A (Fig. 3).
+
+Four abstractions through which reduction algorithms express fine-grain
+parallelism.  Table I of the paper maps them onto execution models; we keep
+that mapping (Locality/Iterative → GEM, Map&Process/Global → DEM):
+
+  locality        block-wise f over (optionally halo'd) blocks     → GEM
+  iterative       sequential f along one axis, batched over vectors → GEM
+  map_and_process per-subset functions over a decomposed hierarchy  → DEM
+  global_pipeline whole-domain multi-stage program                  → DEM
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .machine import DEMProgram, GEMProgram, run_dem, run_gem
+
+# ---------------------------------------------------------------------------
+# block helpers
+# ---------------------------------------------------------------------------
+
+
+def padded_shape(shape: Sequence[int], block_shape: Sequence[int]) -> tuple[int, ...]:
+    return tuple(int(math.ceil(d / b)) * b for d, b in zip(shape, block_shape))
+
+
+def pad_to_blocks(
+    data: jax.Array, block_shape: Sequence[int], mode: str = "edge"
+) -> jax.Array:
+    """Pad every dim of ``data`` up to a multiple of ``block_shape``.
+
+    ``edge`` padding keeps block statistics (max exponent, value range) close
+    to the real data so padded blocks stay compressible — same choice as zfp's
+    partial-block extension.
+    """
+    target = padded_shape(data.shape, block_shape)
+    pad = [(0, t - d) for d, t in zip(data.shape, target)]
+    if all(p == (0, 0) for p in pad):
+        return data
+    return jnp.pad(data, pad, mode=mode)
+
+
+def num_blocks(shape: Sequence[int], block_shape: Sequence[int]) -> int:
+    return int(
+        math.prod(math.ceil(d / b) for d, b in zip(shape, block_shape))
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1) Locality abstraction  (paper Fig. 3a)
+# ---------------------------------------------------------------------------
+
+
+def locality(
+    data: jax.Array,
+    fn: Callable,
+    block_shape: Sequence[int],
+    *args,
+    halo: int = 0,
+    name: str = "locality",
+):
+    """Apply ``fn`` cooperatively to each block of ``block_shape``.
+
+    Blocks are 1:1 mapped to GEM groups (Table I); on TPU the hot-spot ops use
+    Pallas kernels with the same block decomposition (BlockSpec), staged in
+    VMEM.  ``halo`` extends each block read-only by ``halo`` elements per side
+    (algorithms like MGARD's lerp need coarse-node neighbours).
+    """
+    block_shape = tuple(block_shape)
+    if halo == 0:
+        padded = pad_to_blocks(data, block_shape)
+        prog = GEMProgram(block_shape=block_shape, stages=(fn,), name=name)
+        out = run_gem(prog, padded, *args)
+        if out.shape == padded.shape:
+            return out[tuple(slice(0, d) for d in data.shape)]
+        return out
+    # Halo path: gather overlapping patches (XLA portable route).
+    padded = pad_to_blocks(data, block_shape)
+    halo_pad = jnp.pad(padded, [(halo, halo)] * data.ndim, mode="edge")
+    counts = tuple(p // b for p, b in zip(padded.shape, block_shape))
+    idx_grids = jnp.meshgrid(
+        *[jnp.arange(c) * b for c, b in zip(counts, block_shape)], indexing="ij"
+    )
+    starts = jnp.stack([g.reshape(-1) for g in idx_grids], axis=-1)
+    patch_shape = tuple(b + 2 * halo for b in block_shape)
+
+    def one(start):
+        patch = jax.lax.dynamic_slice(halo_pad, start, patch_shape)
+        return fn(patch, *args)
+
+    out_blocks = jax.vmap(one)(starts)
+    if out_blocks.shape[1:] == block_shape:
+        from .machine import unblock_view
+
+        full = unblock_view(out_blocks, counts, block_shape)
+        return full[tuple(slice(0, d) for d in data.shape)]
+    return out_blocks
+
+
+# ---------------------------------------------------------------------------
+# 2) Iterative abstraction  (paper Fig. 3b)
+# ---------------------------------------------------------------------------
+
+
+def iterative(
+    data: jax.Array,
+    step: Callable,
+    init_carry,
+    axis: int,
+    reverse: bool = False,
+):
+    """Run ``step`` sequentially along ``axis``, in parallel over all other dims.
+
+    ``step(carry, x_slice) -> (carry, y_slice)`` where ``x_slice`` is the
+    data with ``axis`` removed.  This is the B-vectors-per-group pattern:
+    the vector (solve) axis is scanned with ``lax.scan``; every other axis is
+    a batch lane, so the VPU's lane dimension is filled by construction
+    (the paper's B:1 vector→group mapping).
+    """
+    moved = jnp.moveaxis(data, axis, 0)
+    carry, out = jax.lax.scan(step, init_carry, moved, reverse=reverse)
+    return carry, jnp.moveaxis(out, 0, axis)
+
+
+# ---------------------------------------------------------------------------
+# 3) Map & Process abstraction  (paper Fig. 3c)
+# ---------------------------------------------------------------------------
+
+
+def map_and_process(
+    data: jax.Array,
+    subset_ids: jax.Array,
+    fns: Sequence[Callable],
+):
+    """Map elements to subsets, then process each subset with its own fn.
+
+    TPU adaptation: instead of gather/scatter per subset (fast on GPUs, slow
+    on TPUs), every ``fn`` is evaluated densely and combined with a subset
+    mask — the masked-dense idiom.  For K small (MGARD levels: ≤ ~25) this
+    is cheaper than any scatter on the MXU/VPU.
+    """
+    out = None
+    for k, fn in enumerate(fns):
+        val = fn(data)
+        mask = subset_ids == k
+        out = jnp.where(mask, val, out if out is not None else val)
+    return out
+
+
+def map_and_process_param(
+    data: jax.Array,
+    subset_ids: jax.Array,
+    fn: Callable,
+    params: jax.Array,
+):
+    """Map&Process special case: one fn, per-subset parameters.
+
+    ``params[k]`` is gathered per element (K-entry table gather is fine on
+    TPU), then ``fn(data, param)`` runs densely — this is how per-level
+    quantisation bins are applied without K passes.
+    """
+    per_elem = params[subset_ids]
+    return fn(data, per_elem)
+
+
+# ---------------------------------------------------------------------------
+# 4) Global pipeline abstraction  (paper Fig. 3d)
+# ---------------------------------------------------------------------------
+
+
+def global_pipeline(*stages: Callable, name: str = "global"):
+    """Whole-domain multi-stage program with global sync between stages (DEM)."""
+    prog = DEMProgram(stages=tuple(stages), name=name)
+
+    def run(data, *args):
+        return run_dem(prog, data, *args)
+
+    return run

@@ -1,0 +1,89 @@
+"""Device adapters — HPDR §III-C, adapted to JAX backends.
+
+The paper lowers its two execution models (GEM/DEM) through per-backend
+*device adapters* (OpenMP / CUDA / HIP).  In JAX the portable layer is XLA
+itself, so our adapters select *how a reduction op is lowered*, not a
+hand-written backend:
+
+  * ``xla``              — pure ``jnp`` program; lowers to CPU/GPU/TPU via XLA.
+                           This is the portability baseline and the oracle.
+  * ``pallas``           — hand-tiled TPU kernels (``pl.pallas_call`` +
+                           ``BlockSpec`` VMEM staging).  Target path on TPU.
+  * ``pallas_interpret`` — same kernels executed with ``interpret=True``
+                           (Python/CPU), used for validation in this container.
+
+The portability contract of the paper carries over: a bitstream produced
+under any adapter decodes under any other (tested in
+``tests/test_portability.py``).
+
+Ops register one implementation per adapter in ``_REGISTRY``; callers go
+through :func:`dispatch` so the choice is a runtime config, exactly like the
+paper's pluggable adapters.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+
+XLA = "xla"
+PALLAS = "pallas"
+PALLAS_INTERPRET = "pallas_interpret"
+AUTO = "auto"
+
+ADAPTERS = (XLA, PALLAS, PALLAS_INTERPRET)
+
+_REGISTRY: dict[tuple[str, str], Callable] = {}
+
+
+def register(op: str, adapter: str) -> Callable[[Callable], Callable]:
+    """Decorator: register ``fn`` as the implementation of ``op`` under ``adapter``."""
+    if adapter not in ADAPTERS:
+        raise ValueError(f"unknown adapter {adapter!r}; expected one of {ADAPTERS}")
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[(op, adapter)] = fn
+        return fn
+
+    return deco
+
+
+@functools.cache
+def default_adapter() -> str:
+    """Pick the best adapter for the current platform (paper: 'best processor')."""
+    platform = jax.devices()[0].platform
+    if platform == "tpu":
+        return PALLAS
+    # Pallas-interpret is functionally correct everywhere but slow; XLA is the
+    # fast portable path on CPU/GPU.
+    return XLA
+
+
+def resolve(adapter: str | None) -> str:
+    if adapter is None or adapter == AUTO:
+        return default_adapter()
+    if adapter not in ADAPTERS:
+        raise ValueError(f"unknown adapter {adapter!r}; expected one of {ADAPTERS}")
+    return adapter
+
+
+def dispatch(op: str, adapter: str | None = None) -> Callable:
+    """Return the registered implementation of ``op`` for ``adapter``.
+
+    Falls back to the ``xla`` implementation if the requested adapter has no
+    specialised kernel for this op (mirrors the paper: not every algorithm
+    stage needs a hand-written kernel on every backend).
+    """
+    a = resolve(adapter)
+    impl = _REGISTRY.get((op, a))
+    if impl is None:
+        impl = _REGISTRY.get((op, XLA))
+    if impl is None:
+        raise KeyError(f"op {op!r} has no implementation (adapter={a!r})")
+    return impl
+
+
+def registered_ops() -> dict[tuple[str, str], Callable]:
+    return dict(_REGISTRY)

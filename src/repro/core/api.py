@@ -1,0 +1,237 @@
+"""Public HPDR compression API (paper Fig. 2 'High-level APIs' layer).
+
+``compress``/``decompress`` front the three pipelines (MGARD-X, ZFP-X,
+Huffman-X) behind one interface, route plan reuse through the CMM context
+cache, and provide a portable byte serialization (header + sections) used by
+the checkpoint manager and the I/O benchmarks.
+
+Methods
+-------
+  mgard          error-bounded lossy (float arrays, 1-4D)
+  zfp            fixed-rate lossy (float arrays, 1-4D)
+  huffman        lossless entropy coding of integer key arrays
+  huffman-bytes  lossless byte-wise entropy coding of arbitrary arrays
+                 (the LZ-class baseline analogue in the paper's comparisons)
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import huffman, mgard, zfp
+from .context import GLOBAL_CMM, ReductionContext, context_key
+
+_MAGIC = b"HPDR"
+_VERSION = 1
+
+METHODS = ("mgard", "zfp", "huffman", "huffman-bytes")
+
+
+@dataclass
+class Compressed:
+    """Method-tagged compressed object with byte (de)serialization."""
+
+    method: str
+    meta: dict[str, Any]
+    arrays: dict[str, np.ndarray]
+
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in self.arrays.values())
+
+    def ratio(self) -> float:
+        orig = math.prod(self.meta["shape"]) * np.dtype(self.meta["dtype"]).itemsize
+        return orig / max(self.nbytes(), 1)
+
+    # -- portable byte format (used by checkpoint/I-O layers) ---------------
+
+    def to_bytes(self) -> bytes:
+        buf = io.BytesIO()
+        names = sorted(self.arrays)
+        header = {
+            "method": self.method,
+            "meta": _jsonable(self.meta),
+            "arrays": {
+                n: {"dtype": str(self.arrays[n].dtype), "shape": list(self.arrays[n].shape)}
+                for n in names
+            },
+        }
+        hbytes = json.dumps(header).encode()
+        buf.write(_MAGIC)
+        buf.write(np.uint32(_VERSION).tobytes())
+        buf.write(np.uint64(len(hbytes)).tobytes())
+        buf.write(hbytes)
+        for n in names:
+            buf.write(np.ascontiguousarray(self.arrays[n]).tobytes())
+        return buf.getvalue()
+
+    @classmethod
+    def from_bytes(cls, raw: bytes) -> "Compressed":
+        if raw[:4] != _MAGIC:
+            raise ValueError("not an HPDR stream")
+        hlen = int(np.frombuffer(raw[8:16], np.uint64)[0])
+        header = json.loads(raw[16 : 16 + hlen].decode())
+        off = 16 + hlen
+        arrays = {}
+        for n in sorted(header["arrays"]):
+            spec = header["arrays"][n]
+            dt = np.dtype(spec["dtype"])
+            count = math.prod(spec["shape"]) if spec["shape"] else 1
+            nb = count * dt.itemsize
+            arrays[n] = np.frombuffer(raw[off : off + nb], dt).reshape(spec["shape"])
+            off += nb
+        return cls(method=header["method"], meta=header["meta"], arrays=arrays)
+
+
+def _jsonable(d: dict) -> dict:
+    out = {}
+    for k, v in d.items():
+        if isinstance(v, (np.integer,)):
+            v = int(v)
+        elif isinstance(v, (np.floating,)):
+            v = float(v)
+        elif isinstance(v, tuple):
+            v = list(v)
+        out[k] = v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# compress / decompress
+# ---------------------------------------------------------------------------
+
+
+def compress(
+    data: jax.Array | np.ndarray,
+    method: str = "mgard",
+    *,
+    error_bound: float = 1e-2,
+    relative: bool = True,
+    rate: int = 16,
+    dict_size: int = 4096,
+    adapter: str | None = None,
+) -> Compressed:
+    """Compress ``data`` with the selected pipeline.
+
+    ``error_bound`` is relative to the value range when ``relative=True``
+    (the paper's evaluation convention).
+    """
+    del adapter  # plumbed through kernels' ops.py; the jnp path is portable
+    data = jnp.asarray(data)
+    key = context_key(method, data.shape, data.dtype,
+                      eb=error_bound, rel=relative, rate=rate, dict=dict_size)
+    GLOBAL_CMM.get_or_create(key, lambda: ReductionContext(key=key, plan=None))
+
+    if method == "mgard":
+        vrange = float(jnp.max(data) - jnp.min(data)) if relative else 1.0
+        eb = error_bound * (vrange if relative else 1.0)
+        obj = mgard.compress(data, eb if eb > 0 else error_bound, dict_size=dict_size)
+        return Compressed(
+            method=method,
+            meta={
+                "shape": tuple(obj.shape), "padded": tuple(obj.padded),
+                "dtype": obj.dtype, "error_bound": obj.error_bound,
+                "dict_size": obj.dict_size,
+                "chunk_size": obj.entropy.chunk_size,
+                "total_bits": obj.entropy.total_bits,
+                "n_symbols": obj.entropy.n_symbols,
+                "num_keys": obj.entropy.num_keys,
+            },
+            arrays={
+                "words": np.asarray(obj.entropy.words),
+                "chunk_offsets": np.asarray(obj.entropy.chunk_offsets),
+                "length_table": obj.entropy.length_table,
+                "outlier_idx": obj.outlier_idx,
+                "outlier_val": obj.outlier_val,
+                "bins": obj.bins,
+            },
+        )
+    if method == "zfp":
+        obj = zfp.compress(data, rate=rate)
+        return Compressed(
+            method=method,
+            meta={"shape": tuple(obj.shape), "dtype": obj.dtype, "rate": obj.rate},
+            arrays={"payload": np.asarray(obj.payload), "emax": np.asarray(obj.emax)},
+        )
+    if method == "huffman":
+        if not jnp.issubdtype(data.dtype, jnp.integer):
+            raise ValueError("huffman method expects integer keys; use huffman-bytes")
+        num_keys = int(jnp.max(data)) + 1
+        enc = huffman.compress(data, num_keys)
+        return _huffman_compressed(enc, data.shape, str(data.dtype), "huffman")
+    if method == "huffman-bytes":
+        byte_view = jnp.asarray(np.asarray(data).view(np.uint8))
+        enc = huffman.compress(byte_view.astype(jnp.int32), 256)
+        return _huffman_compressed(
+            enc, data.shape, str(data.dtype), "huffman-bytes"
+        )
+    raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+
+
+def _huffman_compressed(enc: huffman.Encoded, shape, dtype, method) -> Compressed:
+    return Compressed(
+        method=method,
+        meta={
+            "shape": tuple(shape), "dtype": dtype,
+            "chunk_size": enc.chunk_size, "total_bits": enc.total_bits,
+            "n_symbols": enc.n_symbols, "num_keys": enc.num_keys,
+        },
+        arrays={
+            "words": np.asarray(enc.words),
+            "chunk_offsets": np.asarray(enc.chunk_offsets),
+            "length_table": enc.length_table,
+        },
+    )
+
+
+def _huffman_encoded(c: Compressed) -> huffman.Encoded:
+    return huffman.Encoded(
+        words=jnp.asarray(c.arrays["words"]),
+        total_bits=int(c.meta["total_bits"]),
+        n_symbols=int(c.meta["n_symbols"]),
+        chunk_size=int(c.meta["chunk_size"]),
+        chunk_offsets=jnp.asarray(c.arrays["chunk_offsets"]),
+        length_table=np.asarray(c.arrays["length_table"]),
+        num_keys=int(c.meta["num_keys"]),
+    )
+
+
+def decompress(c: Compressed) -> jax.Array:
+    if c.method == "mgard":
+        obj = mgard.MGARDCompressed(
+            entropy=_huffman_encoded(c),
+            outlier_idx=np.asarray(c.arrays["outlier_idx"]),
+            outlier_val=np.asarray(c.arrays["outlier_val"]),
+            bins=np.asarray(c.arrays["bins"]),
+            shape=tuple(c.meta["shape"]),
+            padded=tuple(c.meta["padded"]),
+            error_bound=float(c.meta["error_bound"]),
+            dict_size=int(c.meta["dict_size"]),
+            dtype=c.meta["dtype"],
+        )
+        return mgard.decompress(obj)
+    if c.method == "zfp":
+        obj = zfp.ZFPCompressed(
+            payload=jnp.asarray(c.arrays["payload"]),
+            emax=jnp.asarray(c.arrays["emax"]),
+            shape=tuple(c.meta["shape"]),
+            rate=int(c.meta["rate"]),
+            dtype=c.meta["dtype"],
+        )
+        return zfp.decompress(obj)
+    if c.method == "huffman":
+        keys = huffman.decompress(_huffman_encoded(c))
+        return keys.reshape(tuple(c.meta["shape"])).astype(jnp.dtype(c.meta["dtype"]))
+    if c.method == "huffman-bytes":
+        keys = np.asarray(huffman.decompress(_huffman_encoded(c))).astype(np.uint8)
+        return jnp.asarray(
+            keys.view(np.dtype(c.meta["dtype"])).reshape(tuple(c.meta["shape"]))
+        )
+    raise ValueError(f"unknown method {c.method!r}")

@@ -1,0 +1,137 @@
+"""Parallel bitstream packing/unpacking — HPDR's global serialization stage.
+
+GPU compressors compact variable-length codes with warp ballots and atomic
+ORs.  TPUs have neither; the TPU-native equivalent used here:
+
+  * offsets come from an exclusive scan of code lengths (DEM global stage);
+  * every code contributes to exactly two consecutive 32-bit words, with
+    **disjoint bit ownership**, so an unsigned ``segment_sum`` is exactly a
+    bitwise OR (no carries can occur) — scatter-free compaction;
+  * fixed-rate streams (ZFP) have affine offsets, so their bitplane packing
+    is a pure reshape + shift-reduce (see ``bits_to_words``), which XLA/Pallas
+    turn into vector ops.
+
+All streams are MSB-first within 32-bit big-endian words — the natural order
+for canonical-Huffman decoding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+_U32 = jnp.uint32
+
+
+def exclusive_cumsum(x: jax.Array) -> jax.Array:
+    """Exclusive prefix sum along the last axis (global-pipeline scan stage)."""
+    inc = jnp.cumsum(x, axis=-1)
+    return inc - x
+
+
+def _safe_shl(x: jax.Array, n: jax.Array) -> jax.Array:
+    """x << n with n possibly >= 32 (result 0) or arbitrary; n >= 0 required."""
+    n = jnp.asarray(n)
+    big = n >= WORD_BITS
+    return jnp.where(big, _U32(0), (x.astype(_U32) << jnp.minimum(n, WORD_BITS - 1).astype(_U32)))
+
+
+def _safe_shr(x: jax.Array, n: jax.Array) -> jax.Array:
+    """Logical x >> n with n possibly >= 32 (result 0); n >= 0 required."""
+    n = jnp.asarray(n)
+    big = n >= WORD_BITS
+    return jnp.where(big, _U32(0), (x.astype(_U32) >> jnp.minimum(n, WORD_BITS - 1).astype(_U32)))
+
+
+def _iota_desc(n: int) -> jax.Array:
+    """[n-1, n-2, ..., 0] as uint32 via traced ops (Pallas-safe: no captured consts)."""
+    return (n - 1) - jax.lax.iota(_U32, n)
+
+
+def bits_to_words(bits: jax.Array) -> jax.Array:
+    """Pack a ``(..., 32)`` array of 0/1 into ``(...,)`` uint32, MSB-first."""
+    if bits.shape[-1] != WORD_BITS:
+        raise ValueError(f"last dim must be {WORD_BITS}, got {bits.shape[-1]}")
+    weights = jnp.left_shift(np.uint32(1), _iota_desc(WORD_BITS))
+    return jnp.sum(bits.astype(_U32) * weights, axis=-1, dtype=_U32)
+
+
+def words_to_bits(words: jax.Array) -> jax.Array:
+    """Inverse of :func:`bits_to_words`: uint32 ``(...,)`` → 0/1 ``(..., 32)``."""
+    shifts = _iota_desc(WORD_BITS)
+    return ((words.astype(_U32)[..., None] >> shifts) & np.uint32(1)).astype(jnp.uint32)
+
+
+def pack_bits(
+    codes: jax.Array,
+    lengths: jax.Array,
+    total_bits: jax.Array | int,
+    num_words: int,
+) -> jax.Array:
+    """Pack N variable-length codes (≤32 bits each) into a uint32 word stream.
+
+    ``codes[i]`` holds the code right-aligned (low ``lengths[i]`` bits);
+    bit position is MSB-first.  ``num_words`` must be a static bound
+    ≥ ceil(total_bits/32).  Returns uint32[num_words].
+
+    Each code lands in words ``w`` and ``w+1`` with disjoint bits, so the two
+    ``segment_sum`` calls below are exact bitwise ORs (the paper's "global
+    coordination" for compaction, scatter-free).
+    """
+    del total_bits  # static layout comes from num_words; kept for API clarity
+    codes = codes.astype(_U32)
+    lengths = lengths.astype(jnp.int32)
+    offsets = exclusive_cumsum(lengths)
+    w = offsets // WORD_BITS
+    b = offsets % WORD_BITS
+
+    # Mask codes to their length so stray high bits can't corrupt neighbours.
+    mask = jnp.where(lengths >= WORD_BITS, _U32(0xFFFFFFFF), _safe_shl(jnp.asarray(_U32(1)), lengths) - _U32(1))
+    codes = codes & mask
+
+    shift_hi = WORD_BITS - b - lengths  # >=0: fits in word w entirely
+    hi = jnp.where(
+        shift_hi >= 0,
+        _safe_shl(codes, jnp.maximum(shift_hi, 0)),
+        _safe_shr(codes, jnp.maximum(-shift_hi, 0)),
+    )
+    lo = jnp.where(
+        shift_hi >= 0,
+        _U32(0),
+        _safe_shl(codes, jnp.maximum(WORD_BITS + shift_hi, 0)),
+    )
+    valid = lengths > 0
+    hi = jnp.where(valid, hi, _U32(0))
+    lo = jnp.where(valid, lo, _U32(0))
+
+    words = jax.ops.segment_sum(hi, w, num_segments=num_words)
+    words = words + jax.ops.segment_sum(lo, jnp.minimum(w + 1, num_words - 1), num_segments=num_words)
+    return words.astype(_U32)
+
+
+def read_window(words: jax.Array, bit_offset: jax.Array) -> jax.Array:
+    """Read a 32-bit MSB-aligned window starting at ``bit_offset``.
+
+    Reads past the end of ``words`` return zero bits.
+    """
+    n = words.shape[0]
+    w = bit_offset // WORD_BITS
+    b = bit_offset % WORD_BITS
+    w0 = jnp.where(w < n, words[jnp.minimum(w, n - 1)], _U32(0))
+    w1 = jnp.where(w + 1 < n, words[jnp.minimum(w + 1, n - 1)], _U32(0))
+    return _safe_shl(w0, b) | jnp.where(b == 0, _U32(0), _safe_shr(w1, WORD_BITS - b))
+
+
+def unpack_bits(
+    words: jax.Array, offsets: jax.Array, lengths: jax.Array
+) -> jax.Array:
+    """Extract N codes given their bit offsets/lengths (inverse of pack_bits)."""
+    windows = jax.vmap(lambda o: read_window(words, o))(offsets)
+    vals = _safe_shr(windows, WORD_BITS - lengths)
+    return jnp.where(lengths > 0, vals, _U32(0))
+
+
+def words_needed(total_bits: int) -> int:
+    return (int(total_bits) + WORD_BITS - 1) // WORD_BITS

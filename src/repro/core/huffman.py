@@ -1,0 +1,338 @@
+"""Huffman-X — HPDR §IV-B (Algorithm 2), TPU-native.
+
+Pipeline (paper Fig. 6):  histogram → (sort/filter) → two-phase codebook →
+encode → compact serialization.
+
+Stage → abstraction mapping (faithful to Table I):
+  * ``histogram``      Global pipeline (DEM) — all threads update shared
+                       counters; TPU lowering is one-hot × MXU matmul or
+                       ``bincount`` (XLA adapter), Pallas kernel in
+                       ``repro/kernels/histogram``.
+  * codebook           two-phase treeless generation [paper ref 44]: phase 1
+                       produces code *lengths* (two-queue O(n) merge after a
+                       sort), phase 2 assigns canonical codes.  Runs on host:
+                       it is metadata-scale (≤ 2^16 entries) and sits at the
+                       same histogram→codebook sync point the GPU
+                       implementations have.
+  * encode             Locality (GEM) — each key encoded independently via
+                       table gather.
+  * serialize          Global pipeline (DEM) — exclusive scan of lengths +
+                       conflict-free segment-sum bit OR (``core.bitstream``).
+
+Decoding is self-synchronising per fixed-size symbol chunk (per-chunk bit
+offsets are stored, as GPU Huffman decoders do), so chunks decode in
+parallel (vmap) with a sequential ``lax.scan`` inside.
+
+Canonical codes mean the codebook serialises as the *lengths array only*.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitstream as bs
+
+MAX_CODE_LEN = 32
+DEFAULT_CHUNK = 4096
+
+
+# ---------------------------------------------------------------------------
+# Global-pipeline stage: histogram
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("num_bins",))
+def histogram(keys: jax.Array, num_bins: int) -> jax.Array:
+    """Frequency histogram over the whole domain (DEM global stage)."""
+    return jnp.bincount(keys.reshape(-1).astype(jnp.int32), length=num_bins)
+
+
+# ---------------------------------------------------------------------------
+# Two-phase codebook generation (host / metadata scale)
+# ---------------------------------------------------------------------------
+
+
+def _huffman_code_lengths(freq: np.ndarray) -> np.ndarray:
+    """Phase 1: code lengths from frequencies (two-queue merge, O(n log n) w/ sort)."""
+    freq = np.asarray(freq, dtype=np.int64)
+    n = freq.shape[0]
+    lengths = np.zeros(n, dtype=np.int32)
+    nz = np.nonzero(freq)[0]
+    if nz.size == 0:
+        return lengths
+    if nz.size == 1:
+        lengths[nz[0]] = 1
+        return lengths
+    # Heap of (weight, tiebreak, node_id); leaves are 0..n-1, internals follow.
+    heap = [(int(freq[i]), int(i), int(i)) for i in nz]
+    heapq.heapify(heap)
+    parent = np.full(n + nz.size, -1, dtype=np.int64)
+    next_id = n
+    counter = n
+    while len(heap) > 1:
+        w1, _, a = heapq.heappop(heap)
+        w2, _, b = heapq.heappop(heap)
+        parent[a] = next_id
+        parent[b] = next_id
+        heapq.heappush(heap, (w1 + w2, counter, next_id))
+        next_id += 1
+        counter += 1
+    root = heap[0][2]
+    # Depth of each leaf by walking parent pointers from the top down:
+    depth = np.zeros(next_id, dtype=np.int32)
+    for node in range(next_id - 2, -1, -1):  # all non-root, parents have higher ids
+        if parent[node] >= 0:
+            depth[node] = depth[parent[node]] + 1
+    depth[root] = max(depth[root], 0)
+    lengths[nz] = depth[nz]
+    return lengths
+
+
+def _limit_lengths(lengths: np.ndarray, freq: np.ndarray, max_len: int) -> np.ndarray:
+    """Clamp code lengths to ``max_len`` and repair the Kraft sum.
+
+    Standard post-pass (zlib-style): clamp, then while Kraft > 1 lengthen the
+    lowest-frequency symbols still shorter than max_len; finally shorten
+    symbols (highest freq first) while Kraft + 2^-len stays ≤ 1.
+    """
+    lengths = lengths.copy()
+    used = lengths > 0
+    if not used.any():
+        return lengths
+    lengths[used & (lengths > max_len)] = max_len
+
+    def kraft() -> float:
+        return float(np.sum(np.exp2(-lengths[used].astype(np.float64))))
+
+    if kraft() > 1.0:
+        order = np.argsort(freq)  # least frequent first
+        while kraft() > 1.0:
+            changed = False
+            for s in order:
+                if used[s] and lengths[s] < max_len:
+                    lengths[s] += 1
+                    changed = True
+                    if kraft() <= 1.0:
+                        break
+            if not changed:
+                raise ValueError("cannot satisfy Kraft inequality")
+    # Tighten: shorten most frequent symbols while staying prefix-feasible.
+    order = np.argsort(-freq)
+    improved = True
+    while improved:
+        improved = False
+        for s in order:
+            if used[s] and lengths[s] > 1:
+                slack = 1.0 - kraft()
+                if slack >= np.exp2(-float(lengths[s])):
+                    lengths[s] -= 1
+                    improved = True
+    return lengths
+
+
+@dataclass(frozen=True)
+class Codebook:
+    """Canonical Huffman codebook (decode tables derivable from lengths)."""
+
+    lengths: np.ndarray          # int32[K], 0 = unused key
+    codes: np.ndarray            # uint32[K]
+    first_code: np.ndarray       # uint32[max_len+1]
+    count: np.ndarray            # int32[max_len+1]
+    sym_offset: np.ndarray       # int32[max_len+1] index into sym_sorted
+    sym_sorted: np.ndarray       # int32[num_used]
+    max_len: int
+
+    @property
+    def num_keys(self) -> int:
+        return int(self.lengths.shape[0])
+
+
+def canonical_codebook_from_lengths(lengths: np.ndarray) -> Codebook:
+    """Phase 2: assign canonical codes given lengths (and build decode tables)."""
+    lengths = np.asarray(lengths, dtype=np.int32)
+    K = lengths.shape[0]
+    used = np.nonzero(lengths)[0]
+    max_len = int(lengths.max()) if used.size else 0
+    count = np.zeros(max_len + 1, dtype=np.int32)
+    for l in lengths[used]:
+        count[l] += 1
+    first_code = np.zeros(max_len + 1, dtype=np.uint32)
+    code = 0
+    for l in range(1, max_len + 1):
+        code = (code + int(count[l - 1])) << 1
+        first_code[l] = code
+    # symbols sorted by (length, symbol): canonical order
+    sym_sorted = used[np.lexsort((used, lengths[used]))].astype(np.int32)
+    sym_offset = np.zeros(max_len + 1, dtype=np.int32)
+    acc = 0
+    for l in range(1, max_len + 1):
+        sym_offset[l] = acc
+        acc += int(count[l])
+    codes = np.zeros(K, dtype=np.uint32)
+    next_code = first_code.copy()
+    for s in sym_sorted:
+        l = lengths[s]
+        codes[s] = next_code[l]
+        next_code[l] += 1
+    return Codebook(
+        lengths=lengths,
+        codes=codes,
+        first_code=first_code,
+        count=count,
+        sym_offset=sym_offset,
+        sym_sorted=sym_sorted,
+        max_len=max_len,
+    )
+
+
+def build_codebook(freq: np.ndarray, max_len: int = MAX_CODE_LEN) -> Codebook:
+    """Two-phase codebook generation (paper Alg. 2 line 5)."""
+    freq = np.asarray(freq)
+    lengths = _huffman_code_lengths(freq)
+    if lengths.max(initial=0) > max_len:
+        lengths = _limit_lengths(lengths, freq, max_len)
+    return canonical_codebook_from_lengths(lengths)
+
+
+# ---------------------------------------------------------------------------
+# Encode (Locality gather) + serialize (Global scan + OR)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Encoded:
+    """A Huffman-X bitstream with self-synchronising chunk offsets."""
+
+    words: jax.Array             # uint32[W]
+    total_bits: int
+    n_symbols: int
+    chunk_size: int
+    chunk_offsets: jax.Array     # int32[n_chunks] bit offsets
+    length_table: np.ndarray     # int32[K] — serialised codebook
+    num_keys: int
+
+    def nbytes(self) -> int:
+        return int(self.words.nbytes + self.chunk_offsets.nbytes + self.length_table.nbytes)
+
+
+@partial(jax.jit, static_argnames=("num_words", "chunk_size"))
+def _encode_jit(
+    keys: jax.Array,
+    codes_t: jax.Array,
+    lengths_t: jax.Array,
+    num_words: int,
+    chunk_size: int,
+):
+    keys = keys.reshape(-1).astype(jnp.int32)
+    code = codes_t[keys]
+    length = lengths_t[keys]
+    offsets = bs.exclusive_cumsum(length)
+    total_bits = offsets[-1] + length[-1] if keys.shape[0] else jnp.int32(0)
+    words = bs.pack_bits(code, length, total_bits, num_words)
+    chunk_offsets = offsets[::chunk_size].astype(jnp.int32)
+    return words, chunk_offsets, total_bits
+
+
+def symbol_lengths_total(keys: jax.Array, lengths_t: jax.Array) -> int:
+    """Host-synced total bit count (needed to size the exact output buffer)."""
+    total = jnp.sum(lengths_t[keys.reshape(-1).astype(jnp.int32)])
+    return int(total)
+
+
+def encode(
+    keys: jax.Array, book: Codebook, chunk_size: int = DEFAULT_CHUNK
+) -> Encoded:
+    """Encode ``keys`` (int in [0, K)) into a compact bitstream."""
+    keys = keys.reshape(-1)
+    lengths_t = jnp.asarray(book.lengths, jnp.int32)
+    codes_t = jnp.asarray(book.codes, jnp.uint32)
+    total_bits = symbol_lengths_total(keys, lengths_t)
+    num_words = max(1, bs.words_needed(total_bits))
+    words, chunk_offsets, _ = _encode_jit(keys, codes_t, lengths_t, num_words, chunk_size)
+    return Encoded(
+        words=words,
+        total_bits=int(total_bits),
+        n_symbols=int(keys.shape[0]),
+        chunk_size=chunk_size,
+        chunk_offsets=chunk_offsets,
+        length_table=np.asarray(book.lengths, np.int32),
+        num_keys=book.num_keys,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode (parallel over chunks, sequential scan within)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("chunk_size", "n_chunks", "max_len"))
+def _decode_jit(
+    words: jax.Array,
+    chunk_offsets: jax.Array,
+    first_code: jax.Array,   # uint32[max_len+1]
+    count: jax.Array,        # int32[max_len+1]
+    sym_offset: jax.Array,   # int32[max_len+1]
+    sym_sorted: jax.Array,   # int32[num_used]
+    chunk_size: int,
+    n_chunks: int,
+    max_len: int,
+):
+    lens = jnp.arange(1, max_len + 1, dtype=jnp.int32)
+    fc = first_code[1:]
+    ct = count[1:]
+    so = sym_offset[1:]
+
+    def step(cursor, _):
+        window = bs.read_window(words, cursor)
+        cands = bs._safe_shr(jnp.broadcast_to(window, (max_len,)), 32 - lens)
+        rel = cands - fc  # uint32; wraps when cands < fc, guarded below
+        valid = (cands >= fc) & (rel < ct.astype(jnp.uint32))
+        li = jnp.argmax(valid)  # first (shortest) valid length index
+        l = lens[li]
+        sym = sym_sorted[so[li] + rel[li].astype(jnp.int32)]
+        return cursor + l, sym
+
+    def chunk(off):
+        _, syms = jax.lax.scan(step, off, None, length=chunk_size)
+        return syms
+
+    return jax.vmap(chunk)(chunk_offsets.astype(jnp.int32))
+
+
+def decode(enc: Encoded) -> jax.Array:
+    """Decode a Huffman-X bitstream back to keys (uint/int32 array)."""
+    book = canonical_codebook_from_lengths(enc.length_table)
+    n_chunks = int(enc.chunk_offsets.shape[0])
+    syms = _decode_jit(
+        enc.words,
+        enc.chunk_offsets,
+        jnp.asarray(book.first_code, jnp.uint32),
+        jnp.asarray(book.count, jnp.int32),
+        jnp.asarray(book.sym_offset, jnp.int32),
+        jnp.asarray(book.sym_sorted, jnp.int32),
+        enc.chunk_size,
+        n_chunks,
+        max(book.max_len, 1),
+    )
+    return syms.reshape(-1)[: enc.n_symbols]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end compress/decompress for integer keys (paper Alg. 2)
+# ---------------------------------------------------------------------------
+
+
+def compress(keys: jax.Array, num_keys: int, chunk_size: int = DEFAULT_CHUNK) -> Encoded:
+    freq = np.asarray(histogram(keys, num_keys))
+    book = build_codebook(freq)
+    return encode(keys, book, chunk_size=chunk_size)
+
+
+def decompress(enc: Encoded) -> jax.Array:
+    return decode(enc)

@@ -1,0 +1,133 @@
+"""Machine abstraction — HPDR §III-B: GEM / DEM execution models.
+
+GEM (Group Execution Model): threads partitioned into independent groups;
+multi-stage GEM programs stage working data in a fast memory tier between
+stages (shared memory on GPU → **VMEM** on TPU, cache on CPU).
+
+DEM (Domain Execution Model): all threads in one synchronised domain;
+multi-stage DEM programs share working data through DRAM/HBM, with global
+synchronisation between stages (cooperative-groups grid sync on GPU → XLA
+program order on TPU).
+
+JAX mapping
+-----------
+* GEM → one Pallas grid cell per group (``BlockSpec`` pins the group's block
+  in VMEM; fused stages execute inside one kernel body so intermediates never
+  leave VMEM).  The portable XLA path executes the same program as
+  ``vmap(compose(stages))`` over the group axis — XLA's fusion keeps
+  intermediates in registers/VMEM where it can.
+* DEM → a single ``jit`` of the composed stages over the whole array; stage
+  boundaries are HBM-resident values, global sync is XLA's data dependence.
+
+These descriptors are what the parallel abstractions (``abstractions.py``)
+lower to, mirroring Table I of the paper.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import adapters
+
+
+@dataclass(frozen=True)
+class GEMProgram:
+    """A (possibly multi-stage) group-execution program.
+
+    ``stages`` are functions ``block -> block_like``; they are fused so that
+    between-stage data stays in the staging tier (VMEM / cache).
+    """
+
+    block_shape: tuple[int, ...]
+    stages: tuple[Callable, ...]
+    name: str = "gem"
+    staging: str = "vmem"
+
+    def fused(self) -> Callable:
+        def run(block, *args):
+            out = block
+            for stage in self.stages:
+                out = stage(out, *args)
+            return out
+
+        return run
+
+
+@dataclass(frozen=True)
+class DEMProgram:
+    """A (possibly multi-stage) domain-execution program over the whole array."""
+
+    stages: tuple[Callable, ...]
+    name: str = "dem"
+
+    def fused(self) -> Callable:
+        def run(data, *args):
+            out = data
+            for stage in self.stages:
+                out = stage(out, *args)
+            return out
+
+        return run
+
+
+def block_view(data: jax.Array, block_shape: Sequence[int]) -> jax.Array:
+    """Reshape ``data`` into ``(num_blocks, *block_shape)``.
+
+    Requires every dim divisible by the block dim (pad first via
+    ``abstractions.pad_to_blocks``).
+    """
+    bs = tuple(block_shape)
+    if data.ndim != len(bs):
+        raise ValueError(f"rank mismatch: data {data.shape} vs block {bs}")
+    counts = []
+    for d, b in zip(data.shape, bs):
+        if d % b:
+            raise ValueError(f"dim {d} not divisible by block {b}; pad first")
+        counts.append(d // b)
+    # (c0, b0, c1, b1, ...) -> (c0, c1, ..., b0, b1, ...)
+    interleaved = data.reshape(tuple(x for cb in zip(counts, bs) for x in cb))
+    perm = tuple(range(0, 2 * len(bs), 2)) + tuple(range(1, 2 * len(bs), 2))
+    blocked = interleaved.transpose(perm)
+    return blocked.reshape((-1,) + bs), tuple(counts)
+
+
+def unblock_view(
+    blocks: jax.Array, counts: tuple[int, ...], block_shape: tuple[int, ...]
+) -> jax.Array:
+    nd = len(block_shape)
+    expanded = blocks.reshape(counts + tuple(block_shape))
+    perm = tuple(x for pair in zip(range(nd), range(nd, 2 * nd)) for x in pair)
+    interleaved = expanded.transpose(perm)
+    full = tuple(c * b for c, b in zip(counts, block_shape))
+    return interleaved.reshape(full)
+
+
+def run_gem(prog: GEMProgram, data: jax.Array, *args, adapter: str | None = None):
+    """Execute a GEM program.  XLA path: vmap over groups of the fused stages.
+
+    Hot-spot ops ship hand-written Pallas kernels (``repro/kernels``) that are
+    dispatched through the adapter registry by their ``ops.py`` wrappers; this
+    generic executor is the portable fallback, so arbitrary algorithm-defined
+    ``f`` (paper Fig. 3a) still runs everywhere.
+    """
+    del adapter  # generic executor is adapter-agnostic; kernels dispatch themselves
+    blocks, counts = block_view(data, prog.block_shape)
+    out_blocks = jax.vmap(lambda b: prog.fused()(b, *args))(blocks)
+    if out_blocks.shape[1:] == tuple(prog.block_shape):
+        return unblock_view(out_blocks, counts, prog.block_shape)
+    return out_blocks  # stage changed block shape (e.g. block -> packed words)
+
+
+def run_dem(prog: DEMProgram, data, *args):
+    """Execute a DEM program: one fused jitted program over the whole domain."""
+    return prog.fused()(data, *args)
+
+
+@functools.cache
+def jitted_dem(prog: DEMProgram) -> Callable:
+    return jax.jit(prog.fused())

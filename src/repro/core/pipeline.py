@@ -1,0 +1,398 @@
+"""HDEM — Host-Device Execution Model and the optimized pipeline (HPDR §V).
+
+Machine abstraction (paper Fig. 8): one compute engine + two independent DMA
+engines (H2D, D2H).  Restrictions (paper §V-B): one reduction kernel at a
+time (structurally true per TPU core); one DMA per direction.
+
+The optimized pipeline (paper Fig. 9) is a depth-3, two-buffer chunked DAG:
+
+  queue i:   I_i (H2D) → R_i (compute) → O_i (D2H) → S_i (serialize)
+  anti-dep:  I_i depends on S_{i-2}   — the (X+2)%3 rule that cuts the
+             buffer requirement from 3 sets to 2;
+  launch-order inversion (reconstruction): deserialize D_{i+1} is issued
+             *before* output copy O_i on the shared DMA so the next
+             reconstruction's compute is not delayed.
+
+Two execution surfaces:
+
+  * :class:`TimelineSimulator` — deterministic event-driven schedule for a
+    task DAG with per-resource issue order (CUDA-stream semantics).  This is
+    how Fig. 10/13 overlap numbers are derived on hardware we don't have:
+    durations come from measured/modeled Φ and link bandwidths.
+  * :class:`ChunkedPipeline` — real chunked execution through JAX async
+    dispatch with double-buffered ``device_put``/compute/fetch, used by the
+    benchmarks and the compressed-checkpoint writer.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+from . import chunk_model
+
+H2D, D2H, COMPUTE = "h2d", "d2h", "compute"
+RESOURCES = (H2D, D2H, COMPUTE)
+
+
+# ---------------------------------------------------------------------------
+# Task DAG + event-driven timeline simulator
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Task:
+    name: str
+    resource: str
+    duration: float
+    deps: tuple[str, ...] = ()
+
+
+@dataclass
+class ScheduledTask:
+    name: str
+    resource: str
+    start: float
+    end: float
+
+
+class TimelineSimulator:
+    """Schedule tasks in issue order with per-resource serialization.
+
+    Tasks issue in list order; a task starts at
+    ``max(resource_free, max(dep.end))`` — exactly the semantics of enqueueing
+    onto per-engine hardware queues (CUDA streams / TPU DMA queues).
+    """
+
+    def run(self, tasks: Sequence[Task]) -> dict[str, ScheduledTask]:
+        free = {r: 0.0 for r in RESOURCES}
+        done: dict[str, ScheduledTask] = {}
+        for t in tasks:
+            dep_end = max((done[d].end for d in t.deps if d in done), default=0.0)
+            start = max(free[t.resource], dep_end)
+            end = start + t.duration
+            done[t.name] = ScheduledTask(t.name, t.resource, start, end)
+            free[t.resource] = end
+        return done
+
+    @staticmethod
+    def makespan(sched: dict[str, ScheduledTask]) -> float:
+        return max((s.end for s in sched.values()), default=0.0)
+
+    @staticmethod
+    def overlap_ratio(sched: dict[str, ScheduledTask]) -> float:
+        """Paper §V-C: overlapped copy time / total copy time.
+
+        A copy instant counts as overlapped ("hidden") when any *other*
+        engine — compute or the opposite-direction DMA — is busy at that
+        instant.
+        """
+        copies = [s for s in sched.values() if s.resource in (H2D, D2H)]
+        total = sum(s.end - s.start for s in copies)
+        if total == 0:
+            return 1.0
+        overlapped = 0.0
+        for s in copies:
+            others = [
+                (o.start, o.end)
+                for o in sched.values()
+                if o.resource != s.resource
+            ]
+            # merge other-engine busy intervals, intersect with this copy
+            others.sort()
+            merged: list[tuple[float, float]] = []
+            for st, en in others:
+                if merged and st <= merged[-1][1]:
+                    merged[-1] = (merged[-1][0], max(merged[-1][1], en))
+                else:
+                    merged.append((st, en))
+            for cs, ce in merged:
+                lo, hi = max(s.start, cs), min(s.end, ce)
+                if hi > lo:
+                    overlapped += hi - lo
+        return overlapped / total
+
+
+def build_reduction_dag(
+    chunk_sizes: Sequence[int],
+    h2d_time: Callable[[int], float],
+    compute_time: Callable[[int], float],
+    d2h_time: Callable[[int], float],
+    serialize_time: Callable[[int], float],
+    two_buffer_dep: bool = True,
+) -> list[Task]:
+    """Reduction pipeline DAG of paper Fig. 9 (top)."""
+    tasks: list[Task] = []
+    for i, c in enumerate(chunk_sizes):
+        deps_i = (f"S{i-2}",) if (two_buffer_dep and i >= 2) else ()
+        tasks.append(Task(f"I{i}", H2D, h2d_time(c), deps_i))
+        tasks.append(Task(f"R{i}", COMPUTE, compute_time(c), (f"I{i}",)))
+        tasks.append(Task(f"O{i}", D2H, d2h_time(c), (f"R{i}",)))
+        tasks.append(Task(f"S{i}", D2H, serialize_time(c), (f"O{i}",)))
+    return tasks
+
+
+def build_reconstruction_dag(
+    chunk_sizes: Sequence[int],
+    h2d_time: Callable[[int], float],
+    compute_time: Callable[[int], float],
+    d2h_time: Callable[[int], float],
+    deserialize_time: Callable[[int], float],
+    two_buffer_dep: bool = True,
+    invert_launch_order: bool = True,
+) -> list[Task]:
+    """Reconstruction DAG of paper Fig. 9 (bottom).
+
+    ``invert_launch_order=True`` applies the red-arrow optimization: the next
+    chunk's deserialization is issued before the current chunk's output copy
+    on the shared DMA engine, so reconstruction compute i+1 starts earlier
+    and O_i overlaps with it.
+    """
+    per_chunk: list[dict[str, Task]] = []
+    for i, c in enumerate(chunk_sizes):
+        deps_i = (f"O{i-2}",) if (two_buffer_dep and i >= 2) else ()
+        per_chunk.append(
+            {
+                "I": Task(f"I{i}", H2D, h2d_time(c), deps_i),
+                "D": Task(f"D{i}", D2H, deserialize_time(c), (f"I{i}",)),
+                "R": Task(f"R{i}", COMPUTE, compute_time(c), (f"D{i}",)),
+                "O": Task(f"O{i}", D2H, d2h_time(c), (f"R{i}",)),
+            }
+        )
+    tasks: list[Task] = []
+    n = len(per_chunk)
+    if invert_launch_order:
+        # Issue: I0 D0 R0, then for i>0: I_i D_i (before O_{i-1}) R_i O_{i-1}; tail O_{n-1}.
+        for i in range(n):
+            tasks.append(per_chunk[i]["I"])
+            tasks.append(per_chunk[i]["D"])
+            tasks.append(per_chunk[i]["R"])
+            if i > 0:
+                tasks.append(per_chunk[i - 1]["O"])
+        tasks.append(per_chunk[n - 1]["O"])
+    else:
+        for i in range(n):
+            tasks.extend(per_chunk[i][k] for k in ("I", "D", "R", "O"))
+    return tasks
+
+
+@dataclass
+class PipelineReport:
+    makespan: float
+    overlap_ratio: float
+    sustained_bps: float
+    chunk_sizes: list[int]
+    schedule: dict[str, ScheduledTask]
+
+
+def simulate_pipeline(
+    total_bytes: int,
+    mode: str,
+    phi: chunk_model.PhiModel,
+    h2d_bps: float,
+    d2h_bps: float,
+    output_fraction: float = 0.3,
+    serialize_fraction: float = 0.02,
+    c_init: int = 16 << 20,
+    c_fixed: int = 100 << 20,
+    c_limit: int = 2 << 30,
+    reconstruction: bool = False,
+    invert_launch_order: bool = True,
+) -> PipelineReport:
+    """End-to-end pipeline model: 'none' | 'fixed' | 'adaptive' (Fig. 13)."""
+    theta = chunk_model.ThetaModel(beta=1.0 / h2d_bps)
+    if mode == "none":
+        sizes = [total_bytes]
+        two_buf = False
+    elif mode == "fixed":
+        sizes = chunk_model.fixed_chunk_schedule(total_bytes, c_fixed)
+        two_buf = True
+    elif mode == "adaptive":
+        sizes = chunk_model.adaptive_chunk_schedule(
+            total_bytes, c_init, c_limit, phi, theta
+        )
+        two_buf = True
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    h2d = lambda c: c / h2d_bps
+    d2h = lambda c: (c * output_fraction) / d2h_bps
+    comp = lambda c: phi.time_for(c)
+    ser = lambda c: (c * output_fraction * serialize_fraction) / d2h_bps
+    if reconstruction:
+        dag = build_reconstruction_dag(
+            sizes, lambda c: c * output_fraction / h2d_bps, comp,
+            lambda c: c / d2h_bps, ser, two_buf, invert_launch_order
+        )
+    else:
+        dag = build_reduction_dag(sizes, h2d, comp, d2h, ser, two_buf)
+    sched = TimelineSimulator().run(dag)
+    makespan = TimelineSimulator.makespan(sched)
+    return PipelineReport(
+        makespan=makespan,
+        overlap_ratio=TimelineSimulator.overlap_ratio(sched),
+        sustained_bps=total_bytes / makespan if makespan else float("inf"),
+        chunk_sizes=list(sizes),
+        schedule=sched,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Real chunked execution (double-buffered async dispatch)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ChunkTiming:
+    h2d: float
+    compute: float
+    d2h: float
+    nbytes: int
+
+
+@dataclass
+class ChunkedResult:
+    chunks: list                 # list[Compressed]
+    boundaries: list[int]        # chunk starts along the split axis
+    axis: int
+    shape: tuple[int, ...]
+    timings: list[ChunkTiming] = field(default_factory=list)
+    wall_time: float = 0.0
+
+    def nbytes(self) -> int:
+        return sum(c.nbytes() for c in self.chunks)
+
+    def ratio(self) -> float:
+        import math
+
+        import numpy as _np
+
+        orig = math.prod(self.shape) * _np.dtype(
+            self.chunks[0].meta["dtype"]
+        ).itemsize
+        return orig / max(self.nbytes(), 1)
+
+
+class ChunkedPipeline:
+    """Double-buffered chunked compression over the largest dimension.
+
+    JAX adaptation of the paper's queue machinery: ``device_put`` is the H2D
+    DMA (async), the jitted reduction is the compute engine, and host fetch
+    (``np.asarray``) is the D2H DMA.  Issue order follows Fig. 9: put chunk
+    i+1 before computing chunk i; fetch chunk i−1 after issuing compute i —
+    on a real TPU runtime all three overlap; buffer reuse is bounded at two
+    in-flight device chunks, matching the (X+2)%3 anti-dependency.
+    """
+
+    def __init__(
+        self,
+        compress_fn: Callable,   # (jax.Array chunk) -> Compressed-like
+        mode: str = "adaptive",
+        c_init_elems: int = 1 << 20,
+        c_fixed_elems: int = 8 << 20,
+        c_limit_elems: int = 1 << 28,
+        phi: chunk_model.PhiModel | None = None,
+        theta: chunk_model.ThetaModel | None = None,
+    ):
+        self.compress_fn = compress_fn
+        self.mode = mode
+        self.c_init = c_init_elems
+        self.c_fixed = c_fixed_elems
+        self.c_limit = c_limit_elems
+        self.phi = phi
+        self.theta = theta
+
+    def _schedule(self, total: int) -> list[int]:
+        if self.mode == "none":
+            return [total]
+        if self.mode == "fixed" or self.phi is None or self.theta is None:
+            return chunk_model.fixed_chunk_schedule(total, self.c_fixed)
+        return chunk_model.adaptive_chunk_schedule(
+            total, self.c_init, self.c_limit, self.phi, self.theta
+        )
+
+    def run(self, data: np.ndarray) -> ChunkedResult:
+        axis = int(np.argmax(data.shape))  # paper: LargestDim(u)
+        n = data.shape[axis]
+        row_elems = data.size // n
+        sizes_elems = self._schedule(data.size)
+        # convert element counts to row counts along the split axis
+        rows: list[int] = []
+        acc = 0
+        for s in sizes_elems:
+            r = max(1, int(round(s / row_elems)))
+            r = min(r, n - acc)
+            if r <= 0:
+                break
+            rows.append(r)
+            acc += r
+        if acc < n:
+            rows.append(n - acc)
+
+        boundaries, chunks, timings = [], [], []
+        start = 0
+        t_wall = time.perf_counter()
+        device = jax.devices()[0]
+        pending_put = None
+        pending_rows = None
+
+        idx = 0
+        while idx < len(rows):
+            r = rows[idx]
+            sl = [slice(None)] * data.ndim
+            sl[axis] = slice(start, start + r)
+            host_chunk = np.ascontiguousarray(data[tuple(sl)])
+
+            t0 = time.perf_counter()
+            if pending_put is None:
+                dev_chunk = jax.device_put(host_chunk, device)
+            else:
+                dev_chunk = pending_put
+                host_chunk = pending_rows
+            # issue H2D for the NEXT chunk before computing this one (Fig. 9)
+            nxt = idx + 1
+            if nxt < len(rows):
+                sl2 = [slice(None)] * data.ndim
+                sl2[axis] = slice(start + r, start + r + rows[nxt])
+                nxt_host = np.ascontiguousarray(data[tuple(sl2)])
+                pending_put = jax.device_put(nxt_host, device)
+                pending_rows = nxt_host
+            else:
+                pending_put = None
+            t1 = time.perf_counter()
+            comp = self.compress_fn(dev_chunk)
+            jax.block_until_ready(
+                [a for a in getattr(comp, "arrays", {}).values()] or dev_chunk
+            )
+            t2 = time.perf_counter()
+            # D2H: materialize compressed payload on host
+            for k, v in list(getattr(comp, "arrays", {}).items()):
+                comp.arrays[k] = np.asarray(v)
+            t3 = time.perf_counter()
+
+            boundaries.append(start)
+            chunks.append(comp)
+            timings.append(
+                ChunkTiming(h2d=t1 - t0, compute=t2 - t1, d2h=t3 - t2,
+                            nbytes=host_chunk.nbytes)
+            )
+            start += r
+            idx += 1
+
+        return ChunkedResult(
+            chunks=chunks,
+            boundaries=boundaries,
+            axis=axis,
+            shape=tuple(data.shape),
+            timings=timings,
+            wall_time=time.perf_counter() - t_wall,
+        )
+
+
+def decompress_chunked(result: ChunkedResult, decompress_fn: Callable) -> np.ndarray:
+    parts = [np.asarray(decompress_fn(c)) for c in result.chunks]
+    return np.concatenate(parts, axis=result.axis)

@@ -1,0 +1,54 @@
+"""Linear quantization — the Map&Process stage of MGARD (paper Alg. 1 l.14).
+
+MGARD distributes the user error budget across decomposition levels by giving
+each level its own quantization bin size; elements are mapped to their level
+(subset) and quantized with that level's bin — a textbook Map&Process
+abstraction.  The TPU lowering is the masked-dense / param-gather idiom from
+``abstractions.map_and_process_param``.
+
+Error property (tested): |x - dequantize(quantize(x))| <= bin/2 elementwise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .abstractions import map_and_process_param
+
+
+def quantize(x: jax.Array, bin_size) -> jax.Array:
+    """Uniform scalar quantizer: q = round(x / bin)."""
+    return jnp.round(x / bin_size).astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, bin_size, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float64) * jnp.asarray(bin_size, jnp.float64)).astype(dtype)
+
+
+def quantize_by_subset(
+    x: jax.Array, subset_ids: jax.Array, bins: jax.Array
+) -> jax.Array:
+    """Per-subset (per-level) quantization via Map&Process."""
+    return map_and_process_param(
+        x, subset_ids, lambda v, b: jnp.round(v / b), bins
+    ).astype(jnp.int32)
+
+
+def dequantize_by_subset(
+    q: jax.Array, subset_ids: jax.Array, bins: jax.Array, dtype=jnp.float32
+) -> jax.Array:
+    return map_and_process_param(
+        q.astype(dtype), subset_ids, lambda v, b: v * b, bins.astype(dtype)
+    )
+
+
+def signed_to_unsigned(q: jax.Array) -> jax.Array:
+    """Zig-zag map int32 → uint32 so Huffman sees small magnitudes as small keys."""
+    q = q.astype(jnp.int32)
+    return ((q << 1) ^ (q >> 31)).astype(jnp.uint32)
+
+
+def unsigned_to_signed(u: jax.Array) -> jax.Array:
+    u = u.astype(jnp.uint32)
+    return ((u >> 1).astype(jnp.int32)) ^ -(u & jnp.uint32(1)).astype(jnp.int32)

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticLMStream  # noqa: F401

@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for HPDR's compute hot-spots.
+
+Each kernel package has:
+  kernel.py — ``pl.pallas_call`` body + ``BlockSpec`` VMEM tiling (TPU target)
+  ops.py    — jit'd wrapper with adapter dispatch (pallas | pallas_interpret | xla)
+  ref.py    — pure-jnp oracle used for validation and as the XLA adapter impl
+
+Kernels:
+  zfp_block      — ZFP-X per-4^d-block compress/decompress (GEM: block→grid cell)
+  histogram      — one-hot × MXU matmul histogram (DEM global stage)
+  huffman_encode — VMEM-staged codebook gather (encode stage of Huffman-X)
+  quantize_map   — fused per-level quantize + zigzag (Map&Process)
+  mgard_lerp     — level-0 interpolation-coefficient stencil (Locality)
+  tridiag        — B-vectors-per-group Thomas solver (Iterative)
+"""
+
+from . import (  # noqa: F401
+    histogram,
+    huffman_encode,
+    mgard_lerp,
+    quantize_map,
+    tridiag,
+    zfp_block,
+)

@@ -1,0 +1,61 @@
+"""Histogram kernel — Pallas TPU (DEM global stage of Huffman-X).
+
+GPU histograms use shared-memory atomics [paper ref 43]; TPUs have no
+atomics, so the TPU-native formulation is a **one-hot compare + reduce**
+over a 2-D grid: grid axis 0 tiles the key stream, grid axis 1 tiles the bin
+range (so the per-cell one-hot block ``(KT, BT)`` fits VMEM).  Accumulation
+across key tiles uses the sequential-grid read-modify-write pattern — the
+TPU analogue of the paper's global-synchronisation stage.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_KT = 8192   # keys per grid cell
+DEFAULT_BT = 512    # bins per grid cell
+
+
+def _hist_kernel(keys_ref, out_ref, *, bt):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...]  # (KT,) int32
+    j = pl.program_id(1)
+    base = j * bt
+    local = keys[:, None] - (base + jax.lax.iota(jnp.int32, bt)[None, :])
+    onehot = (local == 0).astype(jnp.int32)  # (KT, BT)
+    out_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "kt", "bt", "interpret"))
+def histogram(
+    keys: jax.Array,
+    num_bins: int,
+    kt: int = DEFAULT_KT,
+    bt: int = DEFAULT_BT,
+    interpret: bool = True,
+) -> jax.Array:
+    keys = keys.reshape(-1).astype(jnp.int32)
+    n = keys.shape[0]
+    n_pad = (-n) % kt
+    if n_pad:
+        keys = jnp.pad(keys, (0, n_pad), constant_values=-1)  # -1 matches no bin
+    bins_pad = (-num_bins) % bt
+    nb = num_bins + bins_pad
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, bt=bt),
+        grid=(keys.shape[0] // kt, nb // bt),
+        in_specs=[pl.BlockSpec((kt,), lambda i, j: (i,))],
+        out_specs=pl.BlockSpec((bt,), lambda i, j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.int32),
+        interpret=interpret,
+    )(keys)
+    return out[:num_bins]

@@ -1,0 +1,28 @@
+"""Adapter-dispatched entry points for the histogram kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import adapters
+
+from . import kernel, ref
+
+
+@adapters.register("histogram", adapters.XLA)
+def _hist_xla(keys, num_bins):
+    return ref.histogram(keys, num_bins)
+
+
+@adapters.register("histogram", adapters.PALLAS)
+def _hist_pallas(keys, num_bins):
+    return kernel.histogram(keys, num_bins, interpret=False)
+
+
+@adapters.register("histogram", adapters.PALLAS_INTERPRET)
+def _hist_interp(keys, num_bins):
+    return kernel.histogram(keys, num_bins, interpret=True)
+
+
+def histogram(keys: jax.Array, num_bins: int, adapter: str | None = None) -> jax.Array:
+    return adapters.dispatch("histogram", adapter)(keys, num_bins)

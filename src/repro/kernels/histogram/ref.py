@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the histogram kernel (XLA adapter implementation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def histogram(keys: jax.Array, num_bins: int) -> jax.Array:
+    return jnp.bincount(keys.reshape(-1).astype(jnp.int32), length=num_bins).astype(
+        jnp.int32
+    )

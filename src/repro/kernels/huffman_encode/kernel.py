@@ -1,0 +1,62 @@
+"""Huffman encode kernel — Pallas TPU (Locality stage of Huffman-X).
+
+Per grid cell: a tile of keys is encoded by gathering (code, length) from the
+canonical codebook staged in VMEM — the exact analogue of the GPU kernel's
+shared-memory codebook.  The downstream global compaction (exclusive scan +
+segment-OR) stays a DEM/XLA stage because it needs the global prefix.
+
+VMEM budget: a 2^16-key codebook is 2 × 256 KiB — comfortably resident, so
+every gather hits VMEM (on GPU this is the difference between L2 and shared
+memory; the paper's Fig. 12 Huffman numbers depend on it).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_T = 16384  # keys per grid cell
+
+
+def _encode_kernel(keys_ref, codes_t_ref, lens_t_ref, codes_ref, lens_ref):
+    keys = keys_ref[...]
+    codes_ref[...] = jnp.take(codes_t_ref[...], keys, axis=0)
+    lens_ref[...] = jnp.take(lens_t_ref[...], keys, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "interpret"))
+def encode_lookup(
+    keys: jax.Array,       # (N,) int32 in [0, K)
+    codes_table: jax.Array,  # (K,) uint32
+    lens_table: jax.Array,   # (K,) int32
+    t: int = DEFAULT_T,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    keys = keys.reshape(-1).astype(jnp.int32)
+    n = keys.shape[0]
+    n_pad = (-n) % t
+    if n_pad:
+        keys = jnp.pad(keys, (0, n_pad))
+    k = codes_table.shape[0]
+    codes, lens = pl.pallas_call(
+        _encode_kernel,
+        grid=(keys.shape[0] // t,),
+        in_specs=[
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),  # codebook replicated in VMEM
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((keys.shape[0],), jnp.uint32),
+            jax.ShapeDtypeStruct((keys.shape[0],), jnp.int32),
+        ),
+        interpret=interpret,
+    )(keys, codes_table.astype(jnp.uint32), lens_table.astype(jnp.int32))
+    return codes[:n], lens[:n]

@@ -1,0 +1,35 @@
+"""Adapter-dispatched entry points for the huffman_encode kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import adapters
+
+from . import kernel, ref
+
+
+@adapters.register("huffman_encode_lookup", adapters.XLA)
+def _enc_xla(keys, codes_table, lens_table):
+    return ref.encode_lookup(keys, codes_table, lens_table)
+
+
+@adapters.register("huffman_encode_lookup", adapters.PALLAS)
+def _enc_pallas(keys, codes_table, lens_table):
+    return kernel.encode_lookup(keys, codes_table, lens_table, interpret=False)
+
+
+@adapters.register("huffman_encode_lookup", adapters.PALLAS_INTERPRET)
+def _enc_interp(keys, codes_table, lens_table):
+    return kernel.encode_lookup(keys, codes_table, lens_table, interpret=True)
+
+
+def encode_lookup(
+    keys: jax.Array,
+    codes_table: jax.Array,
+    lens_table: jax.Array,
+    adapter: str | None = None,
+):
+    return adapters.dispatch("huffman_encode_lookup", adapter)(
+        keys, codes_table, lens_table
+    )

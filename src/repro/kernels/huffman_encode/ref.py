@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the huffman_encode kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def encode_lookup(
+    keys: jax.Array, codes_table: jax.Array, lens_table: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    keys = keys.reshape(-1).astype(jnp.int32)
+    return (
+        codes_table.astype(jnp.uint32)[keys],
+        lens_table.astype(jnp.int32)[keys],
+    )

@@ -1,0 +1,28 @@
+"""Adapter-dispatched entry points for the mgard_lerp kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import adapters
+
+from . import kernel, ref
+
+
+@adapters.register("mgard_lerp", adapters.XLA)
+def _lerp_xla(rows):
+    return ref.lerp_coefficients(rows)
+
+
+@adapters.register("mgard_lerp", adapters.PALLAS)
+def _lerp_pallas(rows):
+    return kernel.lerp_coefficients(rows, interpret=False)
+
+
+@adapters.register("mgard_lerp", adapters.PALLAS_INTERPRET)
+def _lerp_interp(rows):
+    return kernel.lerp_coefficients(rows, interpret=True)
+
+
+def lerp_coefficients(rows: jax.Array, adapter: str | None = None) -> jax.Array:
+    return adapters.dispatch("mgard_lerp", adapter)(rows)

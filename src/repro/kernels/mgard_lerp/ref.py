@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the mgard_lerp kernel."""
+
+from __future__ import annotations
+
+import jax
+
+
+def lerp_coefficients(rows: jax.Array) -> jax.Array:
+    u = rows
+    return u[:, 1::2] - 0.5 * (u[:, 0:-2:2] + u[:, 2::2])

@@ -1,0 +1,95 @@
+"""Quantize kernel — Pallas TPU (Map&Process stage of MGARD-X).
+
+Fuses per-level bin gather + uniform quantization + zig-zag in one pass over
+the coefficient array: each grid cell stages a tile of coefficients and the
+(tiny) per-level bin table in VMEM.  The inverse kernel fuses the matching
+dequantize.  This is the masked-dense / param-gather lowering of the paper's
+Map&Process abstraction (Fig. 3c).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_T = 65536
+
+
+def _quant_kernel(x_ref, lvl_ref, bins_ref, q_ref):
+    x = x_ref[...]
+    bins = jnp.take(bins_ref[...], lvl_ref[...], axis=0)
+    q = jnp.round(x / bins).astype(jnp.int32)
+    q_ref[...] = ((q << 1) ^ (q >> 31)).view(jnp.uint32)  # zig-zag
+
+
+def _dequant_kernel(u_ref, lvl_ref, bins_ref, x_ref):
+    u = u_ref[...].astype(jnp.uint32)
+    q = ((u >> 1).astype(jnp.int32)) ^ -(u & np.uint32(1)).astype(jnp.int32)
+    bins = jnp.take(bins_ref[...], lvl_ref[...], axis=0)
+    x_ref[...] = q.astype(jnp.float32) * bins
+
+
+@functools.partial(jax.jit, static_argnames=("t", "interpret"))
+def quantize(
+    x: jax.Array,        # (N,) float32 coefficients
+    levels: jax.Array,   # (N,) int32 subset ids
+    bins: jax.Array,     # (L+1,) float32
+    t: int = DEFAULT_T,
+    interpret: bool = True,
+) -> jax.Array:
+    x = x.reshape(-1).astype(jnp.float32)
+    levels = levels.reshape(-1).astype(jnp.int32)
+    n = x.shape[0]
+    n_pad = (-n) % t
+    if n_pad:
+        x = jnp.pad(x, (0, n_pad))
+        levels = jnp.pad(levels, (0, n_pad))
+    nl = bins.shape[0]
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=(x.shape[0] // t,),
+        in_specs=[
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((nl,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0],), jnp.uint32),
+        interpret=interpret,
+    )(x, levels, bins.astype(jnp.float32))
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("t", "interpret"))
+def dequantize(
+    u: jax.Array,
+    levels: jax.Array,
+    bins: jax.Array,
+    t: int = DEFAULT_T,
+    interpret: bool = True,
+) -> jax.Array:
+    u = u.reshape(-1).astype(jnp.uint32)
+    levels = levels.reshape(-1).astype(jnp.int32)
+    n = u.shape[0]
+    n_pad = (-n) % t
+    if n_pad:
+        u = jnp.pad(u, (0, n_pad))
+        levels = jnp.pad(levels, (0, n_pad))
+    nl = bins.shape[0]
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(u.shape[0] // t,),
+        in_specs=[
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((nl,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((u.shape[0],), jnp.float32),
+        interpret=interpret,
+    )(u, levels, bins.astype(jnp.float32))
+    return out[:n]

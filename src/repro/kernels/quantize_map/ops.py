@@ -1,0 +1,47 @@
+"""Adapter-dispatched entry points for the quantize_map kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import adapters
+
+from . import kernel, ref
+
+
+@adapters.register("quantize_map", adapters.XLA)
+def _q_xla(x, levels, bins):
+    return ref.quantize(x, levels, bins)
+
+
+@adapters.register("quantize_map", adapters.PALLAS)
+def _q_pallas(x, levels, bins):
+    return kernel.quantize(x, levels, bins, interpret=False)
+
+
+@adapters.register("quantize_map", adapters.PALLAS_INTERPRET)
+def _q_interp(x, levels, bins):
+    return kernel.quantize(x, levels, bins, interpret=True)
+
+
+@adapters.register("dequantize_map", adapters.XLA)
+def _dq_xla(u, levels, bins):
+    return ref.dequantize(u, levels, bins)
+
+
+@adapters.register("dequantize_map", adapters.PALLAS)
+def _dq_pallas(u, levels, bins):
+    return kernel.dequantize(u, levels, bins, interpret=False)
+
+
+@adapters.register("dequantize_map", adapters.PALLAS_INTERPRET)
+def _dq_interp(u, levels, bins):
+    return kernel.dequantize(u, levels, bins, interpret=True)
+
+
+def quantize(x, levels, bins, adapter: str | None = None) -> jax.Array:
+    return adapters.dispatch("quantize_map", adapter)(x, levels, bins)
+
+
+def dequantize(u, levels, bins, adapter: str | None = None) -> jax.Array:
+    return adapters.dispatch("dequantize_map", adapter)(u, levels, bins)

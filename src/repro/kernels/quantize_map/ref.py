@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the quantize_map kernel (reuses core.quantize)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.quantize import (
+    dequantize_by_subset,
+    quantize_by_subset,
+    signed_to_unsigned,
+    unsigned_to_signed,
+)
+
+
+def quantize(x: jax.Array, levels: jax.Array, bins: jax.Array) -> jax.Array:
+    q = quantize_by_subset(x.reshape(-1), levels.reshape(-1), bins)
+    return signed_to_unsigned(q)
+
+
+def dequantize(u: jax.Array, levels: jax.Array, bins: jax.Array) -> jax.Array:
+    q = unsigned_to_signed(u.reshape(-1))
+    return dequantize_by_subset(q, levels.reshape(-1), bins)

@@ -1,0 +1,28 @@
+"""Adapter-dispatched entry points for the tridiag kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import adapters
+
+from . import kernel, ref
+
+
+@adapters.register("tridiag_solve", adapters.XLA)
+def _tri_xla(rhs, h):
+    return ref.solve_mass(rhs, h)
+
+
+@adapters.register("tridiag_solve", adapters.PALLAS)
+def _tri_pallas(rhs, h):
+    return kernel.solve_mass(rhs, h, interpret=False)
+
+
+@adapters.register("tridiag_solve", adapters.PALLAS_INTERPRET)
+def _tri_interp(rhs, h):
+    return kernel.solve_mass(rhs, h, interpret=True)
+
+
+def solve_mass(rhs: jax.Array, h: float, adapter: str | None = None) -> jax.Array:
+    return adapters.dispatch("tridiag_solve", adapter)(rhs, h)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the tridiag kernel (reuses core.mgard's solver)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.mgard import tridiag_solve_1d
+
+
+def solve_mass(rhs: jax.Array, h: float) -> jax.Array:
+    return tridiag_solve_1d(rhs, axis=1, h=h)

@@ -1,0 +1,144 @@
+"""ZFP-X block kernel — Pallas TPU implementation (GEM lowering).
+
+One grid cell processes ``TB`` 4^d blocks staged in VMEM (the paper's
+block→SM mapping becomes block-batch→grid-cell: TPU grid cells consume whole
+tiles, so we batch blocks to fill the 8×128 VPU registers).  All five stages
+(exponent align → lift → negabinary → permute → bitplane pack) run fused in
+VMEM — the multi-stage GEM execution of Table I/II.
+
+Layout: ``(TB, block_size)`` with TB a multiple of 8 sublanes; the
+block-coefficient axis rides the 128-wide lane dimension.  The sequency
+permutation is passed as a (replicated) VMEM operand — the same pattern GPU
+kernels use for constant tables in shared memory.  Matmul-free: this kernel
+is VPU (shift/add) bound, which is why ZFP is the highest-throughput
+pipeline on every backend (paper Fig. 12).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import zfp as core_zfp
+
+DEFAULT_TB = 256  # blocks per grid cell
+
+
+def _compress_tile(blocks_f32: jax.Array, perm: jax.Array, rate: int, dims: int):
+    """(TB, 4^dims) float32 → ((TB, wpb) uint32, (TB,) int32). Pure jnp on VMEM."""
+    tb, bs = blocks_f32.shape
+    shaped = blocks_f32.reshape((tb,) + (4,) * dims)
+    absmax = jnp.max(jnp.abs(blocks_f32), axis=1)
+    _, e = jnp.frexp(absmax)
+    emax = jnp.where(absmax > 0, e, 0).astype(jnp.int32)
+    scale = jnp.exp2(30.0 - emax.astype(jnp.float32))
+    q = jnp.round(shaped * scale.reshape((tb,) + (1,) * dims)).astype(jnp.int32)
+    t = q
+    for axis in range(1, dims + 1):
+        moved = jnp.moveaxis(t, axis, -1)
+        moved = core_zfp.fwd_lift_vec(moved)
+        t = jnp.moveaxis(moved, -1, axis)
+    u = core_zfp.int_to_negabinary(t.reshape(tb, bs))
+    u = jnp.take(u, perm, axis=1)
+    payload = core_zfp.pack_bitplanes(u, rate)
+    return payload, emax
+
+
+def _decompress_tile(
+    payload: jax.Array, emax: jax.Array, inv_perm: jax.Array, rate: int, dims: int
+):
+    tb = payload.shape[0]
+    bs = 4 ** dims
+    u = core_zfp.unpack_bitplanes(payload, rate, bs)
+    u = jnp.take(u, inv_perm, axis=1)
+    t = core_zfp.negabinary_to_int(u).reshape((tb,) + (4,) * dims)
+    for axis in range(dims, 0, -1):
+        moved = jnp.moveaxis(t, axis, -1)
+        moved = core_zfp.inv_lift_vec(moved)
+        t = jnp.moveaxis(moved, -1, axis)
+    scale = jnp.exp2(emax.astype(jnp.float32) - 30.0)
+    return t.reshape(tb, bs).astype(jnp.float32) * scale[:, None]
+
+
+def _compress_kernel(x_ref, perm_ref, payload_ref, emax_ref, *, rate, dims):
+    payload, emax = _compress_tile(x_ref[...], perm_ref[...], rate, dims)
+    payload_ref[...] = payload
+    emax_ref[...] = emax
+
+
+def _decompress_kernel(p_ref, e_ref, iperm_ref, out_ref, *, rate, dims):
+    out_ref[...] = _decompress_tile(p_ref[...], e_ref[...], iperm_ref[...], rate, dims)
+
+
+@functools.partial(jax.jit, static_argnames=("rate", "dims", "tb", "interpret"))
+def compress_blocks(
+    blocks: jax.Array,  # (N, 4^dims) float32
+    rate: int,
+    dims: int,
+    tb: int = DEFAULT_TB,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    n, bs = blocks.shape
+    assert bs == 4 ** dims
+    wpb = core_zfp.words_per_block(bs, rate)
+    n_pad = (-n) % tb
+    if n_pad:
+        blocks = jnp.pad(blocks, ((0, n_pad), (0, 0)))
+    n_t = blocks.shape[0]
+    perm = jnp.asarray(core_zfp.sequency_permutation(dims))
+    payload, emax = pl.pallas_call(
+        functools.partial(_compress_kernel, rate=rate, dims=dims),
+        grid=(n_t // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, bs), lambda i: (i, 0)),
+            pl.BlockSpec((bs,), lambda i: (0,)),  # replicated table (VMEM-staged)
+        ],
+        out_specs=(
+            pl.BlockSpec((tb, wpb), lambda i: (i, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_t, wpb), jnp.uint32),
+            jax.ShapeDtypeStruct((n_t,), jnp.int32),
+        ),
+        interpret=interpret,
+    )(blocks, perm)
+    return payload[:n], emax[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("rate", "dims", "tb", "interpret"))
+def decompress_blocks(
+    payload: jax.Array,  # (N, wpb) uint32
+    emax: jax.Array,     # (N,) int32
+    rate: int,
+    dims: int,
+    tb: int = DEFAULT_TB,
+    interpret: bool = True,
+) -> jax.Array:
+    n, wpb = payload.shape
+    bs = 4 ** dims
+    n_pad = (-n) % tb
+    if n_pad:
+        payload = jnp.pad(payload, ((0, n_pad), (0, 0)))
+        emax = jnp.pad(emax, (0, n_pad))
+    n_t = payload.shape[0]
+    inv_perm = jnp.asarray(
+        np.argsort(core_zfp.sequency_permutation(dims)).astype(np.int32)
+    )
+    out = pl.pallas_call(
+        functools.partial(_decompress_kernel, rate=rate, dims=dims),
+        grid=(n_t // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, wpb), lambda i: (i, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, bs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_t, bs), jnp.float32),
+        interpret=interpret,
+    )(payload, emax, inv_perm)
+    return out[:n]

@@ -1,0 +1,7 @@
+"""Launchers: mesh construction, multi-pod dry-run, training, input specs.
+
+NB: do not import ``dryrun`` here — it sets XLA_FLAGS at import time and
+must only ever be run as a standalone entry point.
+"""
+
+from . import mesh, specs  # noqa: F401

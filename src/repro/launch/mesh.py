@@ -1,0 +1,28 @@
+"""Production mesh construction (DESIGN.md §6 / brief MULTI-POD DRY-RUN).
+
+A function, not a module-level constant: importing this module never touches
+JAX device state (device count is locked on first backend init, and only
+``launch/dryrun.py`` is allowed to request 512 placeholder devices).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh over however many devices exist (tests / examples)."""
+    n = len(jax.devices())
+    n_data = min(n_data, n)
+    n_model = min(n_model, max(1, n // n_data))
+    return jax.make_mesh((n_data, n_model), ("data", "model"), axis_types=_auto(2))

@@ -1,0 +1,195 @@
+"""Input specs (ShapeDtypeStruct stand-ins) + step builders for every cell.
+
+``input_specs(cfg, shape)`` returns sharded ShapeDtypeStructs for every model
+input — weak-type-correct, shardable, zero allocation.  Modality frontends
+are stubs per the brief: audio/vlm cells receive precomputed frame/patch
+embeddings (and 3-D M-RoPE position triplets for qwen2-vl).
+
+``make_train_step`` / ``make_prefill_step`` / ``make_decode_step`` build the
+pure step functions the dry-run lowers and the trainer executes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.model import Model
+from ..optim import adamw
+from ..runtime import sharding as shr
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    """Abstract train/prefill batch for this (arch × shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    dp = shr.dp_axes(mesh)
+    dp = dp if (dp and b % shr._axis_size(mesh, dp) == 0) else None
+    dt = jnp.dtype(cfg.dtype)
+    tok = lambda *sh: _sds(sh, jnp.int32, NamedSharding(mesh, P(dp, *[None] * (len(sh) - 1))))
+    emb = lambda *sh: _sds(sh, dt, NamedSharding(mesh, P(dp, *[None] * (len(sh) - 1))))
+    batch: dict[str, Any] = {}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = emb(b, s, cfg.d_model)
+        batch["tokens"] = tok(b, s)
+        batch["labels"] = tok(b, s)
+    elif cfg.family == "vlm":
+        batch["embeds"] = emb(b, s, cfg.d_model)
+        batch["positions_3d"] = tok(b, s, 3)
+        batch["labels"] = tok(b, s)
+    else:
+        batch["tokens"] = tok(b, s)
+        batch["labels"] = tok(b, s)
+    if shape.kind == "prefill":
+        batch.pop("labels", None)
+    return batch
+
+
+def param_specs(model: Model, mesh: Mesh):
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    shardings = shr.param_shardings(params_shape, model.cfg, mesh)
+    return jax.tree.map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), params_shape, shardings
+    )
+
+
+def opt_state_specs(
+    param_sds, mesh: Mesh, opt_cfg: adamw.AdamWConfig,
+    cfg: ModelConfig | None = None,
+):
+    state_shape = jax.eval_shape(lambda p: adamw.init_state(p, opt_cfg), param_sds)
+    zero1 = cfg is not None and cfg.sharding_policy == "dp_zero1"
+
+    def attach(path, leaf):
+        names = [str(getattr(e, "key", getattr(e, "idx", ""))) for e in path]
+        if names and names[0] in ("m", "v"):
+            if zero1:
+                # ZeRO-1: moments sharded over "model" even though params
+                # are replicated — the update computes on moment shards and
+                # all-gathers the new params once per step.
+                from ..runtime.sharding import _param_spec_fsdp_dp
+
+                spec = _param_spec_fsdp_dp(names[1:] or ["_"], leaf, cfg, mesh)
+                return _sds(leaf.shape, leaf.dtype, NamedSharding(mesh, spec))
+            # mirror the param sharding at the same subpath
+            sub = param_sds
+            for n in names[1:]:
+                sub = sub[int(n)] if isinstance(sub, (list, tuple)) else sub[n]
+            return _sds(leaf.shape, leaf.dtype, sub.sharding)
+        return _sds(leaf.shape, leaf.dtype, NamedSharding(mesh, P()))
+
+    return jax.tree_util.tree_map_with_path(attach, state_shape)
+
+
+def cache_specs(model: Model, shape: ShapeConfig, mesh: Mesh):
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(b, s, jnp.bfloat16)
+    )
+    if cfg.family == "encdec":
+        # cross K/V filled at prefill: (L, B, S_enc, KH, hd)
+        hd = cfg.resolved_head_dim
+        n_dec = cfg.n_dec_layers or cfg.n_layers
+        cross = jax.ShapeDtypeStruct((n_dec, b, s, cfg.n_kv_heads, hd), jnp.bfloat16)
+        cache_shape = dict(cache_shape)
+        cache_shape["cross_k"] = cross
+        cache_shape["cross_v"] = cross
+    shardings = shr.cache_shardings(cache_shape, cfg, mesh)
+    return jax.tree.map(
+        lambda sds, sh: _sds(sds.shape, sds.dtype, sh), cache_shape, shardings
+    )
+
+
+def token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    b = shape.global_batch
+    dp = shr.dp_axes(mesh)
+    dp = dp if (dp and b % shr._axis_size(mesh, dp) == 0) else None
+    return _sds((b,), jnp.int32, NamedSharding(mesh, P(dp)))
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig, lr: float = 3e-4):
+    cfg = model.cfg
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        if cfg.sharding_policy == "dp_zero1":
+            # ZeRO-1, made structural: constrain each grad onto the moment
+            # shards so XLA lowers the cross-replica sum as reduce-scatter
+            # (link ≈ D) instead of all-reduce (≈ 2D); the updated params are
+            # all-gathered once on output.  (The AR→RS folding pass exists on
+            # TPU; the constraint makes the dry-run — and any backend —
+            # produce the intended schedule.)
+            grads = _constrain_tree_model_shard(grads, cfg)
+        params, opt_state, om = adamw.apply_updates(
+            params, grads, opt_state, lr, opt_cfg
+        )
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def _constrain_tree_model_shard(tree, cfg: ModelConfig):
+    from ..runtime.sharding import _param_spec_fsdp_dp
+
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return tree
+    except Exception:  # pragma: no cover
+        return tree
+
+    def con(path, leaf):
+        names = [str(getattr(e, "key", getattr(e, "idx", ""))) for e in path]
+        spec = _param_spec_fsdp_dp(names or ["_"], leaf, cfg, mesh)
+        try:
+            return jax.lax.with_sharding_constraint(leaf, spec)
+        except Exception:
+            return leaf
+
+    return jax.tree_util.tree_map_with_path(con, tree)
+
+
+def make_prefill_step(model: Model):
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        if cfg.family == "encdec":
+            from ..models import encdec as ed
+
+            memory = ed.encode(
+                params, batch["enc_embeds"].astype(jnp.dtype(cfg.dtype)), cfg
+            )
+            logits = ed.decode_train(params, batch["tokens"], memory, cfg)
+            return logits[:, -1]
+        x = model._embed_in(params, batch)
+        h, _ = model._backbone(params, x, batch)
+        from ..models.layers import rms_norm
+
+        h = rms_norm(h, params["ln_f"]["scale"], cfg.norm_eps)
+        return model._head(params, h[:, -1:, :])[:, 0]
+
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, token, cache, cache_len):
+        return model.decode_step(params, token, cache, cache_len)
+
+    return decode_step

@@ -1,0 +1,4 @@
+"""Model substrate: the 10 assigned architectures as composable JAX modules."""
+
+from . import attention, encdec, layers, moe, model, rglru, ssm, transformer  # noqa: F401
+from .model import Model, build_model, cross_entropy  # noqa: F401

@@ -1,0 +1,278 @@
+"""Attention variants: GQA (causal / local / cross), MLA, decode paths.
+
+Shapes: hidden (B, S, D); q/k/v (B, S, H, hd).  All masks are additive
+float32 −inf masks computed from position iotas (TPU-friendly: no boolean
+gather).  Decode steps take a KV cache pytree and a scalar ``cache_len``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import MLAConfig, ModelConfig
+from .layers import apply_mrope, apply_rope, init_linear, init_rms_norm, linear, rms_norm
+
+NEG_INF = -1e9
+
+
+def causal_mask(s_q: int, s_k: int, q_offset=0) -> jax.Array:
+    q_pos = jax.lax.iota(jnp.int32, s_q)[:, None] + q_offset
+    k_pos = jax.lax.iota(jnp.int32, s_k)[None, :]
+    return jnp.where(k_pos <= q_pos, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def local_causal_mask(s_q: int, s_k: int, window: int, q_offset=0) -> jax.Array:
+    q_pos = jax.lax.iota(jnp.int32, s_q)[:, None] + q_offset
+    k_pos = jax.lax.iota(jnp.int32, s_k)[None, :]
+    ok = (k_pos <= q_pos) & (k_pos > q_pos - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q/k: (B,S,·,qk_dim), v: (B,Sk,KH,v_dim); H = G·KH (GQA repeat).
+
+    qk_dim and v_dim may differ (MLA: 192 vs 128).
+    """
+    b, sq, h, _ = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    vd = v.shape[-1]
+    dtype = q.dtype
+    q = q.reshape(b, sq, kh, g, q.shape[-1])
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    if mask is not None:
+        scores = scores + mask  # (Sq, Sk) broadcast
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, vd).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], cfg.d_model, cfg.n_heads * hd, cfg.qkv_bias, dtype),
+        "wk": init_linear(ks[1], cfg.d_model, cfg.n_kv_heads * hd, cfg.qkv_bias, dtype),
+        "wv": init_linear(ks[2], cfg.d_model, cfg.n_kv_heads * hd, cfg.qkv_bias, dtype),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, cfg.d_model, False, dtype),
+    }
+
+
+def gqa_qkv(x, p, cfg: ModelConfig):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = linear(x, p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = linear(x, p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = linear(x, p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def gqa_attention(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    positions: jax.Array | None = None,
+    window: int = 0,
+    mrope_positions: jax.Array | None = None,
+) -> jax.Array:
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = gqa_qkv(x, p, cfg)
+    if positions is None:
+        positions = jnp.broadcast_to(jax.lax.iota(jnp.int32, s)[None], (b, s))
+    if cfg.mrope and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    mask = (
+        local_causal_mask(s, s, window) if window > 0 else causal_mask(s, s)
+    )
+    out = _sdpa(q, k, v, mask, 1.0 / np.sqrt(hd))
+    return linear(out.reshape(b, s, -1), p["wo"])
+
+
+def gqa_decode(
+    x: jax.Array,               # (B, 1, D)
+    p: dict,
+    cfg: ModelConfig,
+    cache: dict,                # {"k": (B, S_max, KH, hd), "v": ...}
+    cache_len: jax.Array,       # scalar int32 — tokens already in cache
+    window: int = 0,
+) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = gqa_qkv(x, p, cfg)
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    if cfg.kv_replicate > 1:
+        # §Perf decode lever: physically replicate KV heads so the cache's
+        # head dim fills the model axis — updates stay shard-local and the
+        # per-device cache shrinks by model_size/replicate.
+        k = jnp.repeat(k, cfg.kv_replicate, axis=2)
+        v = jnp.repeat(v, cfg.kv_replicate, axis=2)
+    # Ring-buffer write: window caches are sized `window`, full caches are
+    # sized max_len (write_pos == cache_len there).  RoPE is absolute, so
+    # ring order does not matter — validity is all that's masked.
+    s_max = cache["k"].shape[1]
+    write_pos = jnp.remainder(cache_len, s_max)
+    if cfg.decode_masked_update:
+        # §Perf decode lever: scatter-free masked write — elementwise on the
+        # sequence-sharded cache, so no shard ever moves (the baseline's
+        # dynamic_update_slice makes GSPMD all-gather the whole cache).
+        sel = (jax.lax.iota(jnp.int32, s_max) == write_pos)[None, :, None, None]
+        k_cache = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+        v_cache = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, write_pos, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, write_pos, 0, 0)
+        )
+    slot = jax.lax.iota(jnp.int32, s_max)[None, :]
+    valid = slot <= cache_len  # ring-full ⇒ every slot holds a live token
+    del window
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[0][None, :]  # (1,S)
+    out = _sdpa(q, k_cache, v_cache, mask, 1.0 / np.sqrt(hd))
+    y = linear(out.reshape(b, 1, -1), p["wo"])
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def cross_attention(
+    x: jax.Array,       # (B, Sq, D) decoder states
+    memory: jax.Array,  # (B, Sk, D) encoder output
+    p: dict,
+    cfg: ModelConfig,
+) -> jax.Array:
+    b, sq, _ = x.shape
+    sk = memory.shape[1]
+    hd = cfg.resolved_head_dim
+    q = linear(x, p["wq"]).reshape(b, sq, cfg.n_heads, hd)
+    k = linear(memory, p["wk"]).reshape(b, sk, cfg.n_kv_heads, hd)
+    v = linear(memory, p["wv"]).reshape(b, sk, cfg.n_kv_heads, hd)
+    out = _sdpa(q, k, v, None, 1.0 / np.sqrt(hd))
+    return linear(out.reshape(b, sq, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    m: MLAConfig = cfg.mla
+    ks = jax.random.split(key, 7)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": init_linear(ks[0], cfg.d_model, m.q_lora_rank, False, dtype),
+        "q_norm": init_rms_norm(m.q_lora_rank, dtype),
+        "wq_b": init_linear(ks[1], m.q_lora_rank, cfg.n_heads * qk_dim, False, dtype),
+        "wkv_a": init_linear(
+            ks[2], cfg.d_model, m.kv_lora_rank + m.qk_rope_head_dim, False, dtype
+        ),
+        "kv_norm": init_rms_norm(m.kv_lora_rank, dtype),
+        "wkv_b": init_linear(
+            ks[3],
+            m.kv_lora_rank,
+            cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim),
+            False,
+            dtype,
+        ),
+        "wo": init_linear(ks[4], cfg.n_heads * m.v_head_dim, cfg.d_model, False, dtype),
+    }
+
+
+def _mla_qkv(x, p, cfg: ModelConfig, positions):
+    """Expand MLA latents to per-head q, k, v (paper-faithful shapes)."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = linear(rms_norm(linear(x, p["wq_a"]), p["q_norm"]["scale"], cfg.norm_eps), p["wq_b"])
+    q = q.reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = linear(x, p["wkv_a"])  # (B,S, kv_rank + rope_dim)
+    c_kv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"]["scale"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # shared head
+    kv = linear(c_kv, p["wkv_b"]).reshape(
+        b, s, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k_rope_b = jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return q_full, k_full, v, (c_kv, k_rope)
+
+
+def mla_attention(
+    x: jax.Array, p: dict, cfg: ModelConfig, positions: jax.Array | None = None
+) -> jax.Array:
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jax.lax.iota(jnp.int32, s)[None], (b, s))
+    q, k, v, _ = _mla_qkv(x, p, cfg, positions)
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    out = _sdpa(q, k, v, causal_mask(s, s), scale)
+    return linear(out.reshape(b, s, -1), p["wo"])
+
+
+def mla_decode(
+    x: jax.Array,           # (B, 1, D)
+    p: dict,
+    cfg: ModelConfig,
+    cache: dict,            # {"c_kv": (B,S,kv_rank), "k_rope": (B,S,1,rope_dim)}
+    cache_len: jax.Array,
+) -> tuple[jax.Array, dict]:
+    """MLA decode with the *compressed* latent cache — MLA's core trade:
+    cache kv_rank+rope (576) floats/token instead of 2·H·hd (32768)."""
+    m: MLAConfig = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    q, k_new, v_new, (c_kv_new, k_rope_new) = _mla_qkv(x, p, cfg, pos)
+    if cfg.decode_masked_update:
+        s_max = cache["c_kv"].shape[1]
+        sel = (jax.lax.iota(jnp.int32, s_max) == cache_len)[None, :, None]
+        c_cache = jnp.where(sel, c_kv_new.astype(cache["c_kv"].dtype), cache["c_kv"])
+        r_cache = jnp.where(
+            sel[..., None], k_rope_new.astype(cache["k_rope"].dtype), cache["k_rope"]
+        )
+    else:
+        c_cache = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, cache_len, 0)
+        )
+        r_cache = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+            (0, cache_len, 0, 0),
+        )
+    # expand latents for attention (weight-absorbed form is the perf option;
+    # the faithful expanded form keeps the oracle simple)
+    kv = linear(c_cache, p["wkv_b"]).reshape(
+        b, -1, h, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    s_max = k_nope.shape[1]
+    k_rope_b = jnp.broadcast_to(r_cache, (b, s_max, h, m.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    k_pos = jax.lax.iota(jnp.int32, s_max)[None, :]
+    mask = jnp.where(k_pos <= cache_len, 0.0, NEG_INF).astype(jnp.float32)
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    out = _sdpa(q, k, v, mask, scale)
+    y = linear(out.reshape(b, 1, -1), p["wo"])
+    return y, {"c_kv": c_cache, "k_rope": r_cache}

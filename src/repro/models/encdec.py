@@ -1,0 +1,187 @@
+"""Encoder-decoder backbone (seamless-m4t-medium text/audio stub).
+
+Encoder: bidirectional self-attention + GELU FFN over precomputed frame
+embeddings (the audio frontend is a stub per the brief — ``input_specs``
+supplies (B, S_enc, D) features).  Decoder: causal self-attention +
+cross-attention + FFN over text tokens.  Both stacks are scanned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from . import transformer as tfm
+from .layers import (
+    embed,
+    init_embedding,
+    init_gelu_mlp,
+    init_linear,
+    init_rms_norm,
+    gelu_mlp,
+    linear,
+    rms_norm,
+)
+
+
+def init_enc_layer(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, dtype),
+        "attn": attn.init_gqa(ks[0], cfg, dtype),
+        "ln2": init_rms_norm(cfg.d_model, dtype),
+        "mlp": init_gelu_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_dec_layer(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_rms_norm(cfg.d_model, dtype),
+        "attn": attn.init_gqa(ks[0], cfg, dtype),
+        "lnx": init_rms_norm(cfg.d_model, dtype),
+        "cross": attn.init_gqa(ks[1], cfg, dtype),
+        "ln2": init_rms_norm(cfg.d_model, dtype),
+        "mlp": init_gelu_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+    return {
+        "embed": init_embedding(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "enc_layers": tfm.init_stack(ks[1], n_enc, lambda k: init_enc_layer(k, cfg, dtype)),
+        "dec_layers": tfm.init_stack(ks[2], n_dec, lambda k: init_dec_layer(k, cfg, dtype)),
+        "ln_enc": init_rms_norm(cfg.d_model, dtype),
+        "ln_dec": init_rms_norm(cfg.d_model, dtype),
+        "head": init_linear(ks[3], cfg.d_model, cfg.vocab, False, dtype),
+    }
+
+
+def _enc_block(x, p, cfg: ModelConfig):
+    h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = attn.gqa_qkv(h, p["attn"], cfg)
+    pos = jnp.broadcast_to(jax.lax.iota(jnp.int32, s)[None], (b, s))
+    from .layers import apply_rope
+
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    a = attn._sdpa(q, k, v, None, 1.0 / jnp.sqrt(float(hd)))  # bidirectional
+    x = x + linear(a.reshape(b, s, -1), p["attn"]["wo"])
+    h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    return x + gelu_mlp(h, p["mlp"])
+
+
+def _dec_block(x, memory, p, cfg: ModelConfig):
+    h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    x = x + attn.gqa_attention(h, p["attn"], cfg)
+    h = rms_norm(x, p["lnx"]["scale"], cfg.norm_eps)
+    x = x + attn.cross_attention(h, memory, p["cross"], cfg)
+    h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    return x + gelu_mlp(h, p["mlp"])
+
+
+def encode(params, enc_embeds: jax.Array, cfg: ModelConfig) -> jax.Array:
+    block = functools.partial(_enc_block, cfg=cfg)
+    x = tfm.scan_stack(enc_embeds, params["enc_layers"], block, cfg.remat)
+    return rms_norm(x, params["ln_enc"]["scale"], cfg.norm_eps)
+
+
+def decode_train(params, tokens: jax.Array, memory: jax.Array, cfg: ModelConfig):
+    x = embed(tokens, params["embed"], memory.dtype)
+    fn = functools.partial(_dec_block, cfg=cfg)
+    fn = jax.checkpoint(fn, static_argnums=()) if cfg.remat else fn
+
+    def step(h, lp):
+        return fn(h, memory, lp), None
+
+    x, _ = jax.lax.scan(step, x, params["dec_layers"])
+    h = rms_norm(x, params["ln_dec"]["scale"], cfg.norm_eps)
+    return linear(h, params["head"])
+
+
+def encdec_loss(params, batch, cfg: ModelConfig):
+    from .model import cross_entropy
+
+    memory = encode(params, batch["enc_embeds"].astype(jnp.dtype(cfg.dtype)), cfg)
+    logits = decode_train(params, batch["tokens"], memory, cfg)
+    ce = cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce, "loss": ce}
+
+
+# ---------------------------------------------------------------------------
+# serving path
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+    # cross-attention K/V are filled by ``precompute_cross`` after encoding
+    return {
+        "k": jnp.zeros((n_dec, batch_size, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((n_dec, batch_size, max_len, cfg.n_kv_heads, hd), dtype),
+        "cross_k": None,
+        "cross_v": None,
+    }
+
+
+def precompute_cross(params, memory: jax.Array, cfg: ModelConfig):
+    """Stacked cross-attention K/V from encoder memory (computed once)."""
+    b, sk, _ = memory.shape
+    hd = cfg.resolved_head_dim
+
+    def one(lp):
+        k = linear(memory, lp["cross"]["wk"]).reshape(b, sk, cfg.n_kv_heads, hd)
+        v = linear(memory, lp["cross"]["wv"]).reshape(b, sk, cfg.n_kv_heads, hd)
+        return k, v
+
+    ks, vs = jax.vmap(one)(params["dec_layers"])
+    return ks, vs
+
+
+def decode_step(params, token: jax.Array, cache, cache_len, cfg: ModelConfig):
+    x = embed(token[:, None], params["embed"], jnp.dtype(cfg.dtype))
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+
+    def block(h, inp):
+        lp, kc, vc, xk, xv = inp
+        hh = rms_norm(h, lp["ln1"]["scale"], cfg.norm_eps)
+        a, new_c = attn.gqa_decode(hh, lp["attn"], cfg, {"k": kc, "v": vc}, cache_len)
+        h = h + a
+        hh = rms_norm(h, lp["lnx"]["scale"], cfg.norm_eps)
+        q = linear(hh, lp["cross"]["wq"]).reshape(b, 1, cfg.n_heads, hd)
+        a = attn._sdpa(q, xk, xv, None, 1.0 / jnp.sqrt(float(hd)))
+        h = h + linear(a.reshape(b, 1, -1), lp["cross"]["wo"])
+        hh = rms_norm(h, lp["ln2"]["scale"], cfg.norm_eps)
+        h = h + gelu_mlp(hh, lp["mlp"])
+        return h, (new_c["k"], new_c["v"])
+
+    (x, (new_k, new_v)) = _scan_with_cache(
+        block, x, params["dec_layers"], cache["k"], cache["v"],
+        cache["cross_k"], cache["cross_v"],
+    )
+    h = rms_norm(x, params["ln_dec"]["scale"], cfg.norm_eps)
+    logits = linear(h, params["head"])[:, 0]
+    new_cache = dict(cache)
+    new_cache["k"] = new_k
+    new_cache["v"] = new_v
+    return logits, new_cache
+
+
+def _scan_with_cache(block, x, layers, kc, vc, xk, xv):
+    def step(h, inp):
+        h, (nk, nv) = block(h, inp)
+        return h, (nk, nv)
+
+    x, (new_k, new_v) = jax.lax.scan(step, x, (layers, kc, vc, xk, xv))
+    return x, (new_k, new_v)

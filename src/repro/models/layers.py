@@ -1,0 +1,138 @@
+"""Shared layers: norms, embeddings, MLPs, rotary embeddings (incl. M-RoPE).
+
+Parameters are plain pytrees (dicts of arrays); init functions take an RNG
+key and return the pytree, so the whole model works under ``jax.eval_shape``
+for the allocation-free dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def linear(x: jax.Array, p: dict) -> jax.Array:
+    out = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        out = out + p["b"].astype(x.dtype)
+    return out
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False,
+                dtype=jnp.float32, scale: float | None = None) -> dict:
+    std = float(scale) if scale is not None else float(1.0 / np.sqrt(d_in))
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def swiglu(x: jax.Array, p: dict) -> jax.Array:
+    """SwiGLU MLP: (silu(x W_g) ⊙ x W_u) W_d — the LM-family standard."""
+    g = jax.nn.silu(x @ p["wg"].astype(x.dtype))
+    u = x @ p["wu"].astype(x.dtype)
+    return (g * u) @ p["wd"].astype(x.dtype)
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = float(1.0 / np.sqrt(d_model))
+    s_out = float(1.0 / np.sqrt(d_ff))
+    return {
+        "wg": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "wu": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "wd": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+    }
+
+
+def gelu_mlp(x: jax.Array, p: dict) -> jax.Array:
+    """GELU MLP (seamless-m4t / classic transformer FFN)."""
+    h = jax.nn.gelu(x @ p["w1"].astype(x.dtype) + p["b1"].astype(x.dtype))
+    return h @ p["w2"].astype(x.dtype) + p["b2"].astype(x.dtype)
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (d_model, d_ff), dtype) / float(np.sqrt(d_model)),
+        "b1": jnp.zeros((d_ff,), dtype),
+        "w2": jax.random.normal(k2, (d_ff, d_model), dtype) / float(np.sqrt(d_ff)),
+        "b2": jnp.zeros((d_model,), dtype),
+    }
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32) -> dict:
+    return {"table": jax.random.normal(key, (vocab, d_model), dtype) * 0.02}
+
+
+def embed(tokens: jax.Array, p: dict, dtype=jnp.bfloat16) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for standard RoPE (half the head dim)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,       # (..., seq, 3) — (t, h, w) position triplets
+    theta: float,
+    sections: tuple[int, ...],  # splits of head_dim/2 across (t, h, w)
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): rotary sections keyed by 3-D positions.
+
+    Text tokens carry t=h=w so M-RoPE degenerates to standard RoPE on them —
+    property-tested in tests/test_models.py.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(head_dim, theta)  # (half,)
+    # angle per frequency using the section's coordinate
+    sect_id = np.concatenate(
+        [np.full(s, i) for i, s in enumerate(sections)]
+    )  # (half,) in {0,1,2}
+    sect_id = jnp.asarray(sect_id, jnp.int32)
+    pos_per_freq = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(sect_id, positions.shape[:-1] + (half,)),
+        axis=-1,
+    )  # (..., seq, half)
+    angles = pos_per_freq * inv
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

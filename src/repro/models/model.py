@@ -1,0 +1,336 @@
+"""Model facade: init / train forward / prefill / decode for all 10 archs.
+
+``build_model(cfg)`` returns a :class:`Model` whose methods are pure
+functions of (params, batch) — they trace under ``jax.eval_shape`` (the
+allocation-free dry-run), ``jax.jit`` with shardings, and plain CPU eval for
+smoke tests.
+
+Batch conventions
+-----------------
+train   {"tokens": (B,S) i32, "labels": (B,S) i32}
+        vlm/audio stubs add {"embeds": (B,S,D)} (+ {"positions_3d": (B,S,3)}
+        for M-RoPE); encdec uses {"enc_embeds": (B,Se,D), "tokens": (B,Sd),
+        "labels": (B,Sd)}.
+prefill same inputs, returns (last_logits, cache)
+decode  {"token": (B,) i32} + cache + cache_len → (logits, new_cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from . import encdec as encdec_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from . import transformer as tfm
+from .layers import embed, init_embedding, init_linear, init_rms_norm, linear, rms_norm
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - ll)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---------------- init ----------------
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = _pdtype(cfg)
+        ks = jax.random.split(key, 8)
+        params: dict[str, Any] = {}
+        if cfg.family == "encdec":
+            return encdec_mod.init_encdec(key, cfg, dt)
+        params["embed"] = init_embedding(ks[0], cfg.vocab, cfg.d_model, dt)
+        params["ln_f"] = init_rms_norm(cfg.d_model, dt)
+        if not cfg.tie_embeddings:
+            params["head"] = init_linear(ks[1], cfg.d_model, cfg.vocab, False, dt)
+
+        if cfg.family in ("dense", "vlm"):
+            params["layers"] = tfm.init_stack(
+                ks[2], cfg.n_layers, lambda k: tfm.init_dense_layer(k, cfg, dt)
+            )
+        elif cfg.family == "moe":
+            nd = cfg.moe.first_dense_layers
+            if nd:
+                dense_cfg = self._dense_ffn_cfg()
+                params["dense_layers"] = tfm.init_stack(
+                    ks[2], nd, lambda k: tfm.init_dense_layer(k, dense_cfg, dt)
+                )
+            params["moe_layers"] = tfm.init_stack(
+                ks[3], cfg.n_layers - nd, lambda k: tfm.init_moe_layer(k, cfg, dt)
+            )
+            if cfg.mtp:
+                params["mtp"] = {
+                    "proj": init_linear(ks[4], 2 * cfg.d_model, cfg.d_model, False, dt),
+                    "ln_h": init_rms_norm(cfg.d_model, dt),
+                    "ln_e": init_rms_norm(cfg.d_model, dt),
+                    "block": tfm.init_dense_layer(ks[5], self._dense_ffn_cfg(), dt),
+                }
+        elif cfg.family == "ssm":
+            params["layers"] = tfm.init_stack(
+                ks[2], cfg.n_layers, lambda k: tfm.init_ssm_layer(k, cfg, dt)
+            )
+        elif cfg.family == "hybrid":
+            nsuper, tail = divmod(cfg.n_layers, len(cfg.hybrid.pattern))
+            params["super"] = {
+                "rec_a": tfm.init_stack(
+                    ks[2], nsuper, lambda k: tfm.init_hybrid_sublayer(k, cfg, "rec", dt)
+                ),
+                "rec_b": tfm.init_stack(
+                    ks[3], nsuper, lambda k: tfm.init_hybrid_sublayer(k, cfg, "rec", dt)
+                ),
+                "attn": tfm.init_stack(
+                    ks[4], nsuper, lambda k: tfm.init_hybrid_sublayer(k, cfg, "attn", dt)
+                ),
+            }
+            params["tail"] = [
+                tfm.init_hybrid_sublayer(jax.random.fold_in(ks[5], i), cfg, "rec", dt)
+                for i in range(tail)
+            ]
+        else:
+            raise ValueError(f"unknown family {cfg.family}")
+        return params
+
+    def _dense_ffn_cfg(self) -> ModelConfig:
+        from dataclasses import replace
+
+        d_ff = self.cfg.moe.d_ff_dense or self.cfg.d_ff
+        return replace(self.cfg, d_ff=d_ff)
+
+    # ---------------- embedding / head ----------------
+
+    def _embed_in(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if "embeds" in batch:
+            x = batch["embeds"].astype(_dtype(cfg))
+        else:
+            x = embed(batch["tokens"], params["embed"], _dtype(cfg))
+        return x * cfg.scale_emb if cfg.scale_emb != 1.0 else x
+
+    def _head(self, params, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.scale_depth > 0:  # minicpm μP output scaling
+            h = h / (cfg.d_model / cfg.dim_model_base)
+        if cfg.tie_embeddings:
+            return h @ params["embed"]["table"].astype(h.dtype).T
+        return linear(h, params["head"])
+
+    # ---------------- backbone ----------------
+
+    def _backbone(self, params, x: jax.Array, batch) -> tuple[jax.Array, jax.Array]:
+        """Returns (hidden, aux_loss)."""
+        cfg = self.cfg
+        aux = jnp.float32(0.0)
+        if cfg.family in ("dense", "vlm"):
+            mrope_pos = batch.get("positions_3d") if cfg.mrope else None
+            block = functools.partial(tfm.dense_block, cfg=cfg, mrope_positions=mrope_pos)
+            x = tfm.scan_stack(x, params["layers"], block, cfg.remat)
+        elif cfg.family == "moe":
+            if "dense_layers" in params:
+                dense_cfg = self._dense_ffn_cfg()
+                block = functools.partial(tfm.dense_block, cfg=dense_cfg)
+                x = tfm.scan_stack(x, params["dense_layers"], block, cfg.remat)
+            block = functools.partial(tfm.moe_block, cfg=cfg)
+            fn = jax.checkpoint(block) if cfg.remat else block
+
+            def step(carry, lp):
+                return fn(carry, lp), None
+
+            (x, aux), _ = jax.lax.scan(step, (x, aux), params["moe_layers"])
+        elif cfg.family == "ssm":
+            block = functools.partial(tfm.ssm_block, cfg=cfg)
+            x = tfm.scan_stack(x, params["layers"], block, cfg.remat)
+        elif cfg.family == "hybrid":
+            def superblock(h, lp):
+                h = tfm.hybrid_sublayer(h, lp["rec_a"], cfg, "rec")
+                h = tfm.hybrid_sublayer(h, lp["rec_b"], cfg, "rec")
+                h = tfm.hybrid_sublayer(h, lp["attn"], cfg, "attn")
+                return h
+
+            x = tfm.scan_stack(x, params["super"], superblock, cfg.remat)
+            for tp in params["tail"]:
+                x = tfm.hybrid_sublayer(x, tp, cfg, "rec")
+        else:
+            raise ValueError(cfg.family)
+        return x, aux
+
+    # ---------------- train ----------------
+
+    def loss(self, params, batch) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec_mod.encdec_loss(params, batch, cfg)
+        x = self._embed_in(params, batch)
+        h, aux = self._backbone(params, x, batch)
+        h = rms_norm(h, params["ln_f"]["scale"], cfg.norm_eps)
+        logits = self._head(params, h)
+        ce = cross_entropy(logits, batch["labels"])
+        total = ce + aux
+        metrics = {"ce": ce, "aux": aux}
+        if cfg.mtp and "mtp" in params:
+            mtp = params["mtp"]
+            emb_next = embed(batch["labels"], params["embed"], h.dtype)
+            merged = jnp.concatenate(
+                [
+                    rms_norm(h, mtp["ln_h"]["scale"], cfg.norm_eps),
+                    rms_norm(emb_next, mtp["ln_e"]["scale"], cfg.norm_eps),
+                ],
+                axis=-1,
+            )
+            h2 = linear(merged, mtp["proj"])
+            h2 = tfm.dense_block(h2, mtp["block"], self._dense_ffn_cfg())
+            logits2 = self._head(params, h2)
+            # MTP predicts token t+2: shift labels left by one
+            mtp_labels = jnp.concatenate(
+                [batch["labels"][:, 1:], batch["labels"][:, -1:]], axis=1
+            )
+            mtp_ce = cross_entropy(logits2[:, :-1], mtp_labels[:, :-1])
+            total = total + 0.3 * mtp_ce
+            metrics["mtp_ce"] = mtp_ce
+        metrics["loss"] = total
+        return total, metrics
+
+    # ---------------- serving: cache init / prefill / decode ----------------
+
+    def init_cache(self, batch_size: int, max_len: int, dtype=jnp.bfloat16) -> Any:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        if cfg.family == "encdec":
+            return encdec_mod.init_cache(cfg, batch_size, max_len, dtype)
+        if cfg.family in ("dense", "vlm") or (
+            cfg.family == "moe" and cfg.attn_type != "mla"
+        ):
+            kh = cfg.n_kv_heads * cfg.kv_replicate
+            kv = lambda n: {
+                "k": jnp.zeros((n, batch_size, max_len, kh, hd), dtype),
+                "v": jnp.zeros((n, batch_size, max_len, kh, hd), dtype),
+            }
+            if cfg.family == "moe":
+                nd = cfg.moe.first_dense_layers
+                return {"dense": kv(nd) if nd else None, "moe": kv(cfg.n_layers - nd)}
+            return kv(cfg.n_layers)
+        if cfg.family == "moe":  # MLA compressed cache
+            m = cfg.mla
+            nd = cfg.moe.first_dense_layers
+            mk = lambda n: {
+                "c_kv": jnp.zeros((n, batch_size, max_len, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros(
+                    (n, batch_size, max_len, 1, m.qk_rope_head_dim), dtype
+                ),
+            }
+            return {"dense": mk(nd) if nd else None, "moe": mk(cfg.n_layers - nd)}
+        if cfg.family == "ssm":
+            d_inner, h, p_, g, n = ssm_mod._dims(cfg)
+            conv_dim = d_inner + 2 * g * n
+            return {
+                "state": jnp.zeros((cfg.n_layers, batch_size, h, p_, n), jnp.float32),
+                "conv": jnp.zeros(
+                    (cfg.n_layers, batch_size, cfg.ssm.d_conv - 1, conv_dim), dtype
+                ),
+            }
+        if cfg.family == "hybrid":
+            nsuper, tail = divmod(cfg.n_layers, len(cfg.hybrid.pattern))
+            w = cfg.hybrid.lru_width or cfg.d_model
+            cw = cfg.hybrid.conv_width
+            window = min(cfg.hybrid.window, max_len)
+            rec = lambda n: {
+                "h": jnp.zeros((n, batch_size, w), jnp.float32),
+                "conv": jnp.zeros((n, batch_size, cw - 1, w), dtype),
+            }
+            return {
+                "rec_a": rec(nsuper),
+                "rec_b": rec(nsuper),
+                "attn": {
+                    "k": jnp.zeros((nsuper, batch_size, window, cfg.n_kv_heads, hd), dtype),
+                    "v": jnp.zeros((nsuper, batch_size, window, cfg.n_kv_heads, hd), dtype),
+                },
+                "tail": rec(tail),
+            }
+        raise ValueError(cfg.family)
+
+    def decode_step(self, params, token: jax.Array, cache, cache_len):
+        """One decode step.  token: (B,) i32 (or {"embeds": (B,1,D)} for stubs)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec_mod.decode_step(params, token, cache, cache_len, cfg)
+        x = embed(token[:, None], params["embed"], _dtype(cfg))
+        if cfg.scale_emb != 1.0:
+            x = x * cfg.scale_emb
+
+        if cfg.family in ("dense", "vlm"):
+            block = lambda h, lp, lc: tfm.dense_block_decode(h, lp, cfg, lc, cache_len)
+            x, cache = tfm.scan_stack_decode(x, params["layers"], cache, block)
+        elif cfg.family == "moe":
+            new_cache = dict(cache)
+            if "dense_layers" in params:
+                dense_cfg = self._dense_ffn_cfg()
+                block = lambda h, lp, lc: tfm.dense_block_decode(
+                    h, lp, dense_cfg, lc, cache_len
+                )
+                x, new_cache["dense"] = tfm.scan_stack_decode(
+                    x, params["dense_layers"], cache["dense"], block
+                )
+            block = lambda h, lp, lc: tfm.moe_block_decode(h, lp, cfg, lc, cache_len)
+            x, new_cache["moe"] = tfm.scan_stack_decode(
+                x, params["moe_layers"], cache["moe"], block
+            )
+            cache = new_cache
+        elif cfg.family == "ssm":
+            block = lambda h, lp, lc: tfm.ssm_block_decode(h, lp, cfg, lc)
+            x, cache = tfm.scan_stack_decode(x, params["layers"], cache, block)
+        elif cfg.family == "hybrid":
+            new_cache = dict(cache)
+
+            def superblock(h, lp, lc):
+                h, ca = tfm.hybrid_sublayer_decode(h, lp["rec_a"], cfg, "rec", lc["rec_a"], cache_len)
+                h, cb = tfm.hybrid_sublayer_decode(h, lp["rec_b"], cfg, "rec", lc["rec_b"], cache_len)
+                h, cc = tfm.hybrid_sublayer_decode(h, lp["attn"], cfg, "attn", lc["attn"], cache_len)
+                return h, {"rec_a": ca, "rec_b": cb, "attn": cc}
+
+            stacked_cache = {
+                "rec_a": cache["rec_a"], "rec_b": cache["rec_b"], "attn": cache["attn"]
+            }
+            x, sc = tfm.scan_stack_decode(x, params["super"], stacked_cache, superblock)
+            new_cache.update(sc)
+            tail_cache = []
+            for i, tp in enumerate(params["tail"]):
+                lc = jax.tree.map(lambda a: a[i], cache["tail"])
+                x, lc = tfm.hybrid_sublayer_decode(x, tp, cfg, "rec", lc, cache_len)
+                tail_cache.append(lc)
+            if tail_cache:
+                new_cache["tail"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *tail_cache
+                )
+            cache = new_cache
+        else:
+            raise ValueError(cfg.family)
+
+        h = rms_norm(x, params["ln_f"]["scale"], cfg.norm_eps)
+        logits = self._head(params, h)[:, 0]
+        return logits, cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+Recurrence: h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t), with
+a_t = exp(c · r_t · log σ(Λ)), r/i input gates.  A *linear* recurrence, so
+training/prefill use ``jax.lax.associative_scan`` — O(log L) depth on TPU
+(the natural TPU mapping of the paper's sequential iterative abstraction);
+decode is a single fused step on the (B, W) state.
+
+Block layout (the "recurrent block" of the paper): two branches —
+gate branch (GeLU) and recurrence branch (causal conv1d → RG-LRU) — merged
+multiplicatively, then an output projection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .layers import init_linear, linear
+
+_C = 8.0  # paper constant
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    w = _lru_width(cfg)
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ [0.9, 0.999] (paper appendix)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.sqrt(u) / jnp.sqrt(1.0 - u))  # σ(Λ)=sqrt(u)
+    return {
+        "in_x": init_linear(ks[1], cfg.d_model, w, True, dtype),
+        "in_gate": init_linear(ks[2], cfg.d_model, w, True, dtype),
+        "conv_w": jax.random.normal(ks[3], (cfg.hybrid.conv_width, w), dtype) * 0.1,
+        "conv_b": jnp.zeros((w,), dtype),
+        "wr": init_linear(ks[4], w, w, True, dtype),
+        "wi": init_linear(ks[5], w, w, True, dtype),
+        "lam": lam.astype(dtype),
+        "out": init_linear(jax.random.fold_in(key, 7), w, cfg.d_model, False, dtype),
+    }
+
+
+def _gates(x: jax.Array, p: dict) -> tuple[jax.Array, jax.Array]:
+    """log a_t (f32) and gated input contribution."""
+    r = jax.nn.sigmoid(linear(x, p["wr"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear(x, p["wi"]).astype(jnp.float32))
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))  # ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    contrib = beta * (i * x.astype(jnp.float32))
+    return a, contrib
+
+
+def rglru_scan(x: jax.Array, p: dict) -> jax.Array:
+    """(B, L, W) linear recurrence via associative_scan over (a, b) pairs."""
+    a, contrib = _gates(x, p)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (a, contrib), axis=1)
+    del aa
+    return bb.astype(x.dtype)
+
+
+def rglru_block(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """Full recurrent block: conv1d + RG-LRU branch ⊙ GeLU gate branch."""
+    cw = cfg.hybrid.conv_width
+    gate = jax.nn.gelu(linear(x, p["in_gate"]))
+    u = linear(x, p["in_x"])
+    u_pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    l = u.shape[1]
+    conv = sum(
+        u_pad[:, k : k + l, :] * p["conv_w"][k].astype(u.dtype)[None, None, :]
+        for k in range(cw)
+    ) + p["conv_b"].astype(u.dtype)[None, None, :]
+    h = rglru_scan(conv, p)
+    return linear(h * gate, p["out"])
+
+
+def rglru_block_decode(
+    x: jax.Array,      # (B, 1, D)
+    p: dict,
+    cfg: ModelConfig,
+    cache: dict,       # {"h": (B, W) f32, "conv": (B, cw-1, W)}
+) -> tuple[jax.Array, dict]:
+    gate = jax.nn.gelu(linear(x, p["in_gate"]))
+    u = linear(x, p["in_x"])[:, 0]  # (B, W)
+    conv_buf = jnp.concatenate([cache["conv"], u[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    conv = (
+        jnp.sum(conv_buf * p["conv_w"].astype(conv_buf.dtype)[None, :, :], axis=1)
+        + p["conv_b"].astype(conv_buf.dtype)[None, :]
+    )
+    a, contrib = _gates(conv[:, None, :], p)
+    h = a[:, 0] * cache["h"] + contrib[:, 0]
+    y = linear((h[:, None, :].astype(x.dtype)) * gate, p["out"])
+    return y, {"h": h, "conv": conv_buf[:, 1:, :]}

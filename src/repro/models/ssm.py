@@ -1,0 +1,193 @@
+"""Mamba-2 block — SSD (state-space duality) chunked algorithm.
+
+Train/prefill use the chunked SSD form (arXiv:2405.21060 §6): intra-chunk
+attention-like matmuls + an inter-chunk state recurrence — matmul-rich, so
+the MXU does the work (the TPU-native choice; a token-sequential scan would
+be VPU-serial).  Decode keeps the (H, P, N) state and does one
+rank-1 update per token.
+
+Shapes: x (B, L, D); inner D_i = expand·D split into H heads of P=head_dim;
+B/C projections have G groups of state size N (GQA-like sharing).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .layers import init_linear, init_rms_norm, linear, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.head_dim, s.n_groups, s.d_state
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    d_inner, h, p_, g, n = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * g * n + h
+    conv_dim = d_inner + 2 * g * n
+    return {
+        "in_proj": init_linear(ks[0], cfg.d_model, d_in_proj, False, dtype),
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_dim), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(dtype)),
+        "D": jnp.ones((h,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))).astype(dtype),
+        "norm": init_rms_norm(d_inner, dtype),
+        "out_proj": init_linear(ks[2], d_inner, cfg.d_model, False, dtype),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """(..., q) log-decays → (..., q, q) lower-tri segment sums (SSD helper)."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    i = jax.lax.iota(jnp.int32, q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,    # (B, L, H, P)
+    dt: jax.Array,   # (B, L, H) — positive step sizes
+    A: jax.Array,    # (H,) — negative decay rates
+    Bm: jax.Array,   # (B, L, G, N)
+    Cm: jax.Array,   # (B, L, G, N)
+    chunk: int,
+) -> jax.Array:
+    b, l, h, p_ = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    rep = h // g
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lq = x.shape[1]
+    nc = lq // chunk
+    q = chunk
+
+    xc = x.reshape(b, nc, q, h, p_)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = Bm.reshape(b, nc, q, g, n)
+    Cc = Cm.reshape(b, nc, q, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (b,nc,q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    a = dtc * A  # (b,nc,q,h) log decay per step (negative)
+    a_hq = jnp.moveaxis(a, -1, 2)  # (b,nc,h,q)
+    L = jnp.exp(_segsum(a_hq))     # (b,nc,h,q,q)
+
+    dtx = xc * dtc[..., None]      # Δt·x
+
+    # 1) intra-chunk (diagonal blocks): Y_d = (C Bᵀ ⊙ L) · (Δt X)
+    cb = jnp.einsum("bzqhn,bzkhn->bzhqk", Ch, Bh)
+    yd = jnp.einsum("bzhqk,bzhqk,bzkhp->bzqhp", cb, L, dtx)
+
+    # 2) chunk-final states: S_z = Σ_j exp(Σ_{i>j} a_i) Δt x_j ⊗ B_j
+    cum = jnp.cumsum(a_hq, axis=-1)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # (b,nc,h,q)
+    states = jnp.einsum(
+        "bzhq,bzqhn,bzqhp->bzhpn", decay_to_end, Bh, dtx
+    )
+
+    # 3) inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(jnp.sum(a_hq, axis=-1))  # (b,nc,h)
+
+    def step(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    init = jnp.zeros((b, h, p_, n), jnp.float32)
+    _, s_before = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)),
+    )
+    s_before = jnp.moveaxis(s_before, 0, 1)  # (b,nc,h,p,n) state entering chunk
+
+    # 4) inter-chunk contribution: Y_off = C_t · exp(cum_t) · S_before
+    decay_in = jnp.exp(cum)  # (b,nc,h,q)
+    yoff = jnp.einsum(
+        "bzqhn,bzhq,bzhpn->bzqhp", Ch, decay_in, s_before.astype(Ch.dtype)
+    )
+
+    y = (yd + yoff).reshape(b, lq, h, p_)
+    return y[:, :l]
+
+
+def mamba2_forward(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """Full Mamba-2 mixer over a sequence (train/prefill path)."""
+    s = cfg.ssm
+    d_inner, h, p_, g, n = _dims(cfg)
+    b, l, _ = x.shape
+    zxbcdt = linear(x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * g * n], axis=-1)
+    # causal depthwise conv over (x, B, C)
+    xbc_pad = jnp.pad(xbc, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    idx = jax.lax.iota(jnp.int32, l)
+    conv = sum(
+        xbc_pad[:, k : k + l, :] * p["conv_w"][k][None, None, :]
+        for k in range(s.d_conv)
+    ) + p["conv_b"][None, None, :]
+    del idx
+    xbc = jax.nn.silu(conv)
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    xs = xs.reshape(b, l, h, p_)
+    Bm = Bm.reshape(b, l, g, n)
+    Cm = Cm.reshape(b, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y = ssd_chunked(xs.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
+                    Cm.astype(jnp.float32), s.chunk)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, l, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"]["scale"], cfg.norm_eps)
+    return linear(y, p["out_proj"])
+
+
+def mamba2_decode(
+    x: jax.Array,       # (B, 1, D)
+    p: dict,
+    cfg: ModelConfig,
+    cache: dict,        # {"state": (B,H,P,N) f32, "conv": (B, d_conv-1, conv_dim)}
+) -> tuple[jax.Array, dict]:
+    s = cfg.ssm
+    d_inner, h, p_, g, n = _dims(cfg)
+    b = x.shape[0]
+    zxbcdt = linear(x, p["in_proj"])[:, 0]  # (B, ·)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * g * n], axis=-1)
+    conv_buf = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    conv = (
+        jnp.sum(conv_buf * p["conv_w"][None, :, :], axis=1) + p["conv_b"][None, :]
+    )
+    xbc_t = jax.nn.silu(conv)
+    xs, Bm, Cm = jnp.split(xbc_t, [d_inner, d_inner + g * n], axis=-1)
+    xs = xs.reshape(b, h, p_).astype(jnp.float32)
+    Bm = Bm.reshape(b, g, n).astype(jnp.float32)
+    Cm = Cm.reshape(b, g, n).astype(jnp.float32)
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)  # (B,H)
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xs, Bh, dt
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + xs * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, None, :]), p["norm"]["scale"], cfg.norm_eps)
+    out = linear(y, p["out_proj"])
+    return out, {"state": state, "conv": conv_buf[:, 1:, :]}

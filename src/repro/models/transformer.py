@@ -1,0 +1,221 @@
+"""Decoder-only transformer assembly for all LM families.
+
+Layer stacks are ``lax.scan`` over stacked per-layer params — bounded HLO
+size and compile time at 512-way GSPMD partitioning (DESIGN.md §6); remat
+(``jax.checkpoint``) wraps the block body when ``cfg.remat``.
+
+Families:
+  dense   — [GQA attn + SwiGLU] × L              (qwen*, minicpm, deepseek-67b, qwen2-vl)
+  moe     — [attn + MoE-FFN] × L, optional leading dense layers (deepseek-v3, llama4)
+  ssm     — [Mamba-2 mixer] × L                  (mamba2-370m)
+  hybrid  — [(rec, rec, local-attn) superblock] × L/3 + remainder (recurrentgemma)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import (
+    embed,
+    init_embedding,
+    init_rms_norm,
+    init_swiglu,
+    rms_norm,
+    swiglu,
+)
+
+
+def _res_scale(cfg: ModelConfig) -> float:
+    """MiniCPM depth-scaled residuals (μP): scale_depth/√L; 1.0 otherwise."""
+    if cfg.scale_depth > 0:
+        return cfg.scale_depth / float(np.sqrt(cfg.n_layers))
+    return 1.0
+
+
+def _constrain(x, cfg: ModelConfig):
+    """fsdp_dp: pin the residual stream to the DP axes (see sharding.py)."""
+    if cfg.sharding_policy in ("fsdp_dp", "dp_zero1"):
+        from ..runtime.sharding import constrain_activation_dp
+
+        return constrain_activation_dp(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# per-layer blocks (forward + decode variants)
+# ---------------------------------------------------------------------------
+
+
+def init_dense_layer(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    init_attn = attn.init_mla if cfg.attn_type == "mla" else attn.init_gqa
+    return {
+        "ln1": init_rms_norm(cfg.d_model, dtype),
+        "attn": init_attn(ks[0], cfg, dtype),
+        "ln2": init_rms_norm(cfg.d_model, dtype),
+        "mlp": init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def dense_block(x, p, cfg: ModelConfig, mrope_positions=None):
+    x = _constrain(x, cfg)
+    s = _res_scale(cfg)
+    h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a = attn.mla_attention(h, p["attn"], cfg)
+    else:
+        a = attn.gqa_attention(h, p["attn"], cfg, mrope_positions=mrope_positions)
+    x = x + s * a
+    h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    x = x + s * swiglu(h, p["mlp"])
+    return x
+
+
+def dense_block_decode(x, p, cfg: ModelConfig, cache, cache_len):
+    s = _res_scale(cfg)
+    h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, cache = attn.mla_decode(h, p["attn"], cfg, cache, cache_len)
+    else:
+        a, cache = attn.gqa_decode(h, p["attn"], cfg, cache, cache_len)
+    x = x + s * a
+    h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    x = x + s * swiglu(h, p["mlp"])
+    return x, cache
+
+
+def init_moe_layer(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 2)
+    init_attn = attn.init_mla if cfg.attn_type == "mla" else attn.init_gqa
+    return {
+        "ln1": init_rms_norm(cfg.d_model, dtype),
+        "attn": init_attn(ks[0], cfg, dtype),
+        "ln2": init_rms_norm(cfg.d_model, dtype),
+        "moe": moe_mod.init_moe(ks[1], cfg, dtype),
+    }
+
+
+def moe_block(x_aux, p, cfg: ModelConfig):
+    x, aux = x_aux
+    x = _constrain(x, cfg)
+    h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a = attn.mla_attention(h, p["attn"], cfg)
+    else:
+        a = attn.gqa_attention(h, p["attn"], cfg)
+    x = x + a
+    h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    y, aux_l = moe_mod.moe_layer(h, p["moe"], cfg)
+    return (x + y, aux + aux_l)
+
+
+def moe_block_decode(x, p, cfg: ModelConfig, cache, cache_len):
+    h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, cache = attn.mla_decode(h, p["attn"], cfg, cache, cache_len)
+    else:
+        a, cache = attn.gqa_decode(h, p["attn"], cfg, cache, cache_len)
+    x = x + a
+    h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    y, _ = moe_mod.moe_layer(h, p["moe"], cfg, capacity_factor=2.0)
+    return x + y, cache
+
+
+def init_ssm_layer(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    return {
+        "ln": init_rms_norm(cfg.d_model, dtype),
+        "mixer": ssm_mod.init_mamba2(key, cfg, dtype),
+    }
+
+
+def ssm_block(x, p, cfg: ModelConfig):
+    x = _constrain(x, cfg)
+    h = rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    return x + ssm_mod.mamba2_forward(h, p["mixer"], cfg)
+
+
+def ssm_block_decode(x, p, cfg: ModelConfig, cache):
+    h = rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    y, cache = ssm_mod.mamba2_decode(h, p["mixer"], cfg, cache)
+    return x + y, cache
+
+
+def init_hybrid_sublayer(key, cfg: ModelConfig, kind: str, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 2)
+    p: dict[str, Any] = {
+        "ln1": init_rms_norm(cfg.d_model, dtype),
+        "ln2": init_rms_norm(cfg.d_model, dtype),
+        "mlp": init_swiglu(ks[0], cfg.d_model, cfg.d_ff, dtype),
+    }
+    if kind == "attn":
+        p["temporal"] = attn.init_gqa(ks[1], cfg, dtype)
+    else:
+        p["temporal"] = rglru_mod.init_rglru_block(ks[1], cfg, dtype)
+    return p
+
+
+def hybrid_sublayer(x, p, cfg: ModelConfig, kind: str):
+    x = _constrain(x, cfg)
+    h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if kind == "attn":
+        t = attn.gqa_attention(h, p["temporal"], cfg, window=cfg.hybrid.window)
+    else:
+        t = rglru_mod.rglru_block(h, p["temporal"], cfg)
+    x = x + t
+    h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    return x + swiglu(h, p["mlp"])
+
+
+def hybrid_sublayer_decode(x, p, cfg: ModelConfig, kind: str, cache, cache_len):
+    h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if kind == "attn":
+        t, cache = attn.gqa_decode(
+            h, p["temporal"], cfg, cache, cache_len, window=cfg.hybrid.window
+        )
+    else:
+        t, cache = rglru_mod.rglru_block_decode(h, p["temporal"], cfg, cache)
+    x = x + t
+    h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    return x + swiglu(h, p["mlp"]), cache
+
+
+# ---------------------------------------------------------------------------
+# stacked scans
+# ---------------------------------------------------------------------------
+
+
+def init_stack(key, n: int, init_fn) -> dict:
+    keys = jax.random.split(key, max(n, 1))
+    return jax.vmap(init_fn)(keys) if n > 0 else None
+
+
+def scan_stack(x, stacked, block_fn, remat: bool):
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+
+    def step(h, layer_params):
+        return fn(h, layer_params), None
+
+    out, _ = jax.lax.scan(step, x, stacked)
+    return out
+
+
+def scan_stack_decode(x, stacked_params, stacked_cache, block_fn):
+    """Scan layers threading both hidden state and per-layer cache."""
+
+    def step(h, inp):
+        lp, lc = inp
+        h, lc_new = block_fn(h, lp, lc)
+        return h, lc_new
+
+    out, new_cache = jax.lax.scan(step, x, (stacked_params, stacked_cache))
+    return out, new_cache

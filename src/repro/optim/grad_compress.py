@@ -1,0 +1,97 @@
+"""Error-feedback gradient compression for cross-pod data parallelism.
+
+HPDR's insight applied to training (DESIGN.md §3): the pod-to-pod gradient
+reduction is the slowest collective in a multi-pod mesh, and its payload is
+exactly the kind of low-entropy float field the paper compresses.  We apply
+ZFP-style fixed-rate block quantization (per-block max-exponent scale +
+int8/intN mantissas) to the gradient *before* crossing the pod axis:
+
+  all-reduce(bf16 grads)  →  all-gather(int8 blocks + f32 scales) + local sum
+
+which cuts pod-axis collective bytes ~2× vs bf16 (4× vs f32) at 8 bits, and
+error feedback keeps SGD unbiased-in-the-limit (the residual is replayed
+into the next step — standard EF-SGD).
+
+Used via ``shard_map`` over the "pod" axis in ``launch/train.py`` and the
+collective-bound hillclimb in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x: jax.Array) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def quantize_blocks(g: jax.Array, bits: int = 8) -> tuple[jax.Array, jax.Array]:
+    """g → (int8 mantissas, f32 per-block scales); ZFP-style exponent align."""
+    flat, _ = _pad_to_block(g)
+    blocks = flat.reshape(-1, BLOCK).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_blocks(
+    q: jax.Array, scale: jax.Array, shape: tuple[int, ...], dtype=jnp.float32
+) -> jax.Array:
+    vals = q.astype(jnp.float32) * scale[:, None]
+    flat = vals.reshape(-1)
+    import numpy as np
+
+    n = int(np.prod(shape))
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_decompress(g: jax.Array, bits: int = 8) -> jax.Array:
+    """Round-trip (for error-feedback residual computation)."""
+    q, s = quantize_blocks(g, bits)
+    return dequantize_blocks(q, s, g.shape, g.dtype)
+
+
+def ef_step(grad: jax.Array, residual: jax.Array, bits: int = 8):
+    """Error feedback: compress (grad + residual), return (compressed, new_residual)."""
+    corrected = grad.astype(jnp.float32) + residual
+    q, s = quantize_blocks(corrected, bits)
+    approx = dequantize_blocks(q, s, grad.shape)
+    return (q, s), corrected - approx
+
+
+def pod_compressed_mean(
+    grad: jax.Array, axis_name: str = "pod", bits: int = 8
+) -> jax.Array:
+    """Mean-reduce a gradient across ``axis_name`` with compressed payload.
+
+    Inside ``shard_map``: quantize locally, all-gather the int8 mantissas
+    (bytes/link = N·1B vs ring-all-reduce's ≈2·N·2B for bf16), then reduce
+    locally in f32.  Exact for the scales (f32, tiny).
+    """
+    q, s = quantize_blocks(grad, bits)
+    q_all = jax.lax.all_gather(q, axis_name)        # (P, nb, BLOCK) int8
+    s_all = jax.lax.all_gather(s, axis_name)        # (P, nb) f32
+    vals = q_all.astype(jnp.float32) * s_all[..., None]
+    mean_blocks = jnp.mean(vals, axis=0)
+    flat = mean_blocks.reshape(-1)
+    import numpy as np
+
+    n = int(np.prod(grad.shape))
+    return flat[:n].reshape(grad.shape).astype(grad.dtype)
+
+
+def tree_pod_compressed_mean(grads, axis_name: str = "pod", bits: int = 8):
+    return jax.tree.map(
+        partial(pod_compressed_mean, axis_name=axis_name, bits=bits), grads
+    )

@@ -1,0 +1,34 @@
+"""LR schedules: cosine (default) and WSD (MiniCPM, arXiv:2404.06395).
+
+WSD — Warmup-Stable-Decay: linear warmup → constant plateau → short
+exponential/linear decay tail; the schedule MiniCPM's data-scaling law study
+depends on, exposed because minicpm-2b is an assigned architecture.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, *, peak_lr: float, warmup: int, total: int,
+        decay_fraction: float = 0.1, min_ratio: float = 0.01):
+    step = jnp.asarray(step, jnp.float32)
+    decay_steps = jnp.maximum(total * decay_fraction, 1.0)
+    decay_start = total - decay_steps
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    stable = jnp.full_like(warm, peak_lr)
+    prog = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+    decay = peak_lr * (min_ratio ** prog)  # exponential tail (paper's choice)
+    out = jnp.where(step < warmup, warm, stable)
+    return jnp.where(step >= decay_start, decay, out)
+
+
+SCHEDULES = {"cosine": cosine, "wsd": wsd}

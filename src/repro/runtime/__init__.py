@@ -1,0 +1,1 @@
+from . import fault, hlo_analysis, roofline, sharding  # noqa: F401

@@ -1,0 +1,302 @@
+"""Sharding rules: param / batch / cache / optimizer-state PartitionSpecs.
+
+Policy (DESIGN.md §6):
+  * TP on "model": attention heads, FFN width, experts (EP), vocab;
+  * DP on ("pod","data"): batch;
+  * FSDP (cfg.fsdp): the non-TP weight dim additionally sharded over "data"
+    — ZeRO-3 expressed declaratively through GSPMD;
+  * decode caches shard batch over DP and the *sequence* dim over "model"
+    (flash-decoding style: XLA inserts the max/sum combines for the softmax
+    over the sharded axis) — KV memory scales with the full mesh even when
+    kv_heads < model-axis size.
+
+Every axis assignment is divisibility-guarded: a dim that doesn't divide
+falls back to replication (recorded by ``sharding_report``), so odd vocabs
+(50280, 122753, 256206) lower cleanly — vocab padding is the §Perf lever
+for those.
+
+Rules are name-based over the param tree path; stacked-layer leading dims
+are auto-padded with None.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+MODEL = "model"
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """Data-parallel meta-axis: ("pod","data") on multi-pod, ("data",) else."""
+    names = mesh.axis_names
+    return tuple(n for n in ("pod", "data") if n in names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, dim: int, axis):
+    """axis if dim divides its size, else None (replicate)."""
+    return axis if axis is not None and dim % _axis_size(mesh, axis) == 0 else None
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            names.append(str(entry.key))
+        elif hasattr(entry, "idx"):
+            names.append(str(entry.idx))
+    return names
+
+
+_STACK_KEYS = (
+    "layers", "moe_layers", "dense_layers", "enc_layers", "dec_layers",
+    "rec_a", "rec_b", "attn_stack", "super",
+)
+
+# trailing-dim rules: name -> (spec builder taking (mesh, trailing_shape, fsdp))
+_IN_WEIGHTS = {
+    "wq", "wk", "wv", "wu", "wg", "w1", "in_proj", "in_x", "in_gate",
+    "wq_a", "wq_b", "wkv_a", "wkv_b", "wr", "wi",
+}
+_OUT_WEIGHTS = {"wo", "wd", "out_proj", "out", "w2"}
+
+
+def flat_axes(mesh: Mesh) -> tuple:
+    """Every mesh axis flattened (pure-DP / ZeRO sharding target)."""
+    return tuple(mesh.axis_names)
+
+
+def best_dp_axes(mesh: Mesh, dim: int) -> tuple | None:
+    """Largest prefix of (pod, data, model) whose product divides ``dim``."""
+    axes = [n for n in ("pod", "data", "model") if n in mesh.axis_names]
+    best = None
+    for k in range(1, len(axes) + 1):
+        cand = tuple(axes[:k])
+        if dim % _axis_size(mesh, cand) == 0:
+            best = cand
+    return best
+
+
+def param_spec(path, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    names = _path_names(path)
+    shape = leaf.shape
+
+    if cfg.sharding_policy == "fsdp_dp":
+        return _param_spec_fsdp_dp(names, leaf, cfg, mesh)
+    if cfg.sharding_policy == "dp_zero1":
+        # ZeRO-1: params replicated (bf16 — they must fit per chip);
+        # only optimizer moments are sharded (see specs.opt_state_specs).
+        return P(*([None] * leaf.ndim))
+
+    fsdp_axis = "data" if (cfg.fsdp and "data" in mesh.axis_names) else None
+    in_moe_experts = "moe" in names and names[-1] in {"wg", "wu", "wd"}
+
+    # stacked leading dims: anything whose ancestors include a stack key
+    n_lead = 0
+    if any(k in names for k in _STACK_KEYS) and leaf.ndim >= 1:
+        n_lead = 1
+    trailing = shape[n_lead:]
+    name = names[-1]
+
+    def pad(spec_tail: tuple) -> P:
+        return P(*([None] * n_lead + list(spec_tail)))
+
+    if name == "table":  # embedding (vocab, d)
+        return pad((_fit(mesh, trailing[0], MODEL), _fit(mesh, trailing[1], fsdp_axis)))
+    if name == "scale":  # norm scales: replicated
+        return pad((None,) * len(trailing))
+    if name in {"lam", "conv_b", "dt_bias", "A_log", "D", "b"} and len(trailing) == 1:
+        return pad((_fit(mesh, trailing[0], MODEL),))
+    if name == "conv_w":  # (k, dim)
+        return pad((None, _fit(mesh, trailing[1], MODEL)))
+    if name == "router":  # (d, E)
+        return pad((None, _fit(mesh, trailing[1], MODEL)))
+    if in_moe_experts and len(trailing) == 3:
+        e, d1, d2 = trailing
+        if cfg.moe_group_size > 0:
+            # grouped-dispatch variant: full-mesh expert parallelism — no
+            # inner-dim sharding (kills partial-sum ARs + FSDP regathers)
+            espec = best_dp_axes(mesh, e)
+            return pad((espec, None, None))
+        espec = _fit(mesh, e, MODEL)
+        if name in {"wg", "wu"}:  # (E, d_model, d_ff)
+            return pad((espec, _fit(mesh, d1, fsdp_axis), None))
+        return pad((espec, None, _fit(mesh, d2, fsdp_axis)))  # wd (E, f, d)
+    if len(trailing) == 2:
+        d_in, d_out = trailing
+        if name in _IN_WEIGHTS or (name == "w" and _parent(names) in _IN_WEIGHTS):
+            return pad((_fit(mesh, d_in, fsdp_axis), _fit(mesh, d_out, MODEL)))
+        if name in _OUT_WEIGHTS or (name == "w" and _parent(names) in _OUT_WEIGHTS):
+            return pad((_fit(mesh, d_in, MODEL), _fit(mesh, d_out, fsdp_axis)))
+        if name == "w" and _parent(names) in {"head", "proj"}:
+            return pad((_fit(mesh, d_in, fsdp_axis), _fit(mesh, d_out, MODEL)))
+        # default 2-D: out dim on model
+        return pad((_fit(mesh, d_in, fsdp_axis), _fit(mesh, d_out, MODEL)))
+    if len(trailing) == 1:
+        # biases: shard if the matching weight's out-dim is model-sharded
+        return pad((_fit(mesh, trailing[0], MODEL),))
+    return pad((None,) * len(trailing))
+
+
+def _parent(names: list[str]) -> str:
+    return names[-2] if len(names) >= 2 else ""
+
+
+def _param_spec_fsdp_dp(names, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    """fsdp_dp policy: no tensor parallelism — batch spreads over the whole
+    mesh while weights are FSDP-sharded over the "model" axis only (MaxText's
+    data/fsdp split): XLA all-gathers each layer's params inside the scan
+    step (small, weight-sized) and reduce-scatters grads; activations never
+    cross the mesh.  Right choice when a model's TP activation all-reduces
+    dominate its roofline (small dense archs: the qwen2.5-3b hillclimb).
+
+    NB: sharding weights over the *same flattened axes as the batch* was
+    tried first and regressed 9× (resharding storm) — see EXPERIMENTS.md
+    §Perf iteration log.
+    """
+    fsdp_axis = MODEL
+    shape = leaf.shape
+    n_lead = 1 if any(k in names for k in _STACK_KEYS) and leaf.ndim >= 1 else 0
+    trailing = shape[n_lead:]
+    if not trailing or names[-1] == "scale":
+        return P(*([None] * leaf.ndim))
+    # shard the largest trailing dim divisible by the fsdp axis
+    sizes = list(trailing)
+    order = sorted(range(len(sizes)), key=lambda i: -sizes[i])
+    spec = [None] * len(sizes)
+    for i in order:
+        if sizes[i] % _axis_size(mesh, fsdp_axis) == 0:
+            spec[i] = fsdp_axis
+            break
+    return P(*([None] * n_lead + spec))
+
+
+def param_shardings(params_shape: Any, cfg: ModelConfig, mesh: Mesh):
+    """Map an eval_shape param tree to NamedShardings."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, cfg, mesh)),
+        params_shape,
+    )
+
+
+def batch_shardings(batch_shape: Any, cfg: ModelConfig, mesh: Mesh):
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        if cfg.sharding_policy in ("fsdp_dp", "dp_zero1"):
+            baxis = best_dp_axes(mesh, b)  # spread batch over the whole mesh
+        else:
+            baxis = dp if (dp and b % _axis_size(mesh, dp) == 0) else None
+        return NamedSharding(mesh, P(baxis, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def cache_shardings(cache_shape: Any, cfg: ModelConfig, mesh: Mesh):
+    """Decode caches: (L, B, S, ...) → batch on DP, sequence on model."""
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        nd = leaf.ndim
+        parts = [None] * nd
+        if nd >= 2:
+            b = leaf.shape[1]
+            if dp and b % _axis_size(mesh, dp) == 0:
+                parts[1] = dp
+        name = names[-1]
+        if name in {"k", "v", "cross_k", "cross_v"} and nd == 5 and cfg.kv_replicate > 1:
+            # opt variant: replicated KV heads fill the model axis → cache
+            # stays sequence-local (no gather on update), heads sharded.
+            if leaf.shape[3] % _axis_size(mesh, MODEL) == 0:
+                parts[3] = MODEL
+        elif name in {"k", "v", "c_kv", "k_rope", "cross_k", "cross_v"} and nd >= 3:
+            if leaf.shape[2] % _axis_size(mesh, MODEL) == 0:
+                parts[2] = MODEL  # sequence dim (flash-decoding split)
+        elif name == "state" and nd >= 3:  # ssm (L,B,H,P,N)
+            if leaf.shape[2] % _axis_size(mesh, MODEL) == 0:
+                parts[2] = MODEL
+        elif name == "h" and nd == 3:  # rglru (L,B,W)
+            if leaf.shape[2] % _axis_size(mesh, MODEL) == 0:
+                parts[2] = MODEL
+        elif name == "conv" and nd >= 4:  # (L,B,cw-1,dim)
+            if leaf.shape[3] % _axis_size(mesh, MODEL) == 0:
+                parts[3] = MODEL
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def constrain_activation_dp(x, batch_dim: int = 0):
+    """Pin an activation's batch dim to the DP axes of the *ambient* mesh.
+
+    The fsdp_dp policy relies on this: without an explicit constraint GSPMD
+    prefers resharding activations onto the weights' "model" axis (TP-style),
+    which is exactly the collective storm the policy exists to avoid.  Under
+    no ambient mesh (CPU smoke tests) this is a no-op.
+    """
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = tuple(mesh.axis_names) if mesh is not None else ()
+    except Exception:  # pragma: no cover
+        names = ()
+    if not names:
+        return x
+    avail = [n for n in ("pod", "data", "model") if n in names]
+    b = x.shape[batch_dim]
+    best = None
+    size = 1
+    for k in range(1, len(avail) + 1):
+        prod = 1
+        for a in avail[:k]:
+            prod *= mesh.shape[a]
+        if b % prod == 0:
+            best, size = tuple(avail[:k]), prod
+    if best is None or size == 1:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = best if len(best) > 1 else best[0]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def sharding_report(params_shape, cfg: ModelConfig, mesh: Mesh) -> dict:
+    """Bytes per device + replication diagnostics (consumed by EXPERIMENTS.md)."""
+    shardings = param_shardings(params_shape, cfg, mesh)
+    total, per_dev, replicated_bytes = 0, 0, 0
+    for leaf, sh in zip(
+        jax.tree.leaves(params_shape), jax.tree.leaves(shardings)
+    ):
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        spec = list(sh.spec) + [None] * (len(leaf.shape) - len(sh.spec))
+        shards = 1
+        for dim, axis in zip(leaf.shape, spec):
+            if axis is not None:
+                shards *= _axis_size(mesh, axis)
+        total += nbytes
+        per_dev += nbytes // shards
+        if shards == 1:
+            replicated_bytes += nbytes
+    return {
+        "total_bytes": total,
+        "bytes_per_device": per_dev,
+        "replicated_bytes": replicated_bytes,
+        "devices": mesh.size,
+    }

@@ -1,0 +1,1 @@
+from .engine import Request, ServingEngine, compress_kv_cache, decompress_kv_cache  # noqa: F401

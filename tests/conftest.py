@@ -1,0 +1,20 @@
+"""Shared fixtures. NB: no XLA_FLAGS here — tests see the real device count
+(the 512-device override belongs exclusively to launch/dryrun.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def smooth_field_3d(n: int = 48, noise: float = 0.0, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    g = np.linspace(0, 4 * np.pi, n)
+    x, y, z = np.meshgrid(g, g, g, indexing="ij")
+    f = np.sin(x) * np.cos(y) * np.sin(z)
+    if noise:
+        f = f + noise * rng.normal(size=f.shape)
+    return f.astype(np.float32)

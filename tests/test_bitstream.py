@@ -1,0 +1,57 @@
+"""Bitstream pack/unpack: unit + hypothesis property tests."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitstream as bs
+
+
+def _roundtrip(codes, lengths):
+    total = int(lengths.sum())
+    w = max(1, bs.words_needed(total))
+    words = bs.pack_bits(jnp.asarray(codes), jnp.asarray(lengths), total, w)
+    offsets = np.concatenate([[0], np.cumsum(lengths)[:-1]]).astype(np.int32)
+    out = np.asarray(bs.unpack_bits(words, jnp.asarray(offsets), jnp.asarray(lengths)))
+    return out
+
+
+def test_roundtrip_basic(rng):
+    lengths = rng.integers(1, 33, 500).astype(np.int32)
+    codes = np.array(
+        [rng.integers(0, 2 ** min(int(l), 31)) for l in lengths], dtype=np.uint32
+    )
+    assert (_roundtrip(codes, lengths) == codes).all()
+
+
+def test_zero_length_codes(rng):
+    lengths = np.array([4, 0, 7, 0, 32], np.int32)
+    codes = np.array([0xF, 0xFFFF, 0x55, 1, 0xDEADBEEF], np.uint32)
+    out = _roundtrip(codes, lengths)
+    masked = codes.copy()
+    masked[lengths == 0] = 0
+    masked[4] = 0xDEADBEEF  # full 32-bit survives
+    assert (out == masked).all()
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 32), min_size=1, max_size=200), st.integers(0, 2**31))
+def test_roundtrip_property(length_list, seed):
+    rng = np.random.default_rng(seed)
+    lengths = np.array(length_list, np.int32)
+    codes = np.array(
+        [rng.integers(0, 2 ** min(int(l), 31)) for l in lengths], np.uint32
+    )
+    assert (_roundtrip(codes, lengths) == codes).all()
+
+
+def test_bits_words_inverse(rng):
+    w = rng.integers(0, 2**32, (13, 7), dtype=np.uint32)
+    out = np.asarray(bs.bits_to_words(bs.words_to_bits(jnp.asarray(w))))
+    assert (out == w).all()
+
+
+def test_exclusive_cumsum():
+    x = jnp.asarray([3, 1, 4, 1, 5])
+    out = np.asarray(bs.exclusive_cumsum(x))
+    assert (out == np.array([0, 3, 4, 8, 9])).all()

@@ -1,0 +1,58 @@
+"""CMM context cache: hit/miss accounting, LRU eviction, thread safety."""
+
+import threading
+
+from repro.core.context import ContextCache, ReductionContext, context_key
+
+
+def _ctx(key):
+    return ReductionContext(key=key, plan=lambda x: x)
+
+
+def test_hit_miss():
+    c = ContextCache(capacity=4)
+    k = context_key("zfp", (64, 64), "float32", rate=16)
+    c.get_or_create(k, lambda: _ctx(k))
+    c.get_or_create(k, lambda: _ctx(k))
+    assert c.hit_count == 1 and c.miss_count == 1
+
+
+def test_lru_eviction():
+    c = ContextCache(capacity=2)
+    keys = [context_key("m", (i,), "f32") for i in range(3)]
+    for k in keys:
+        c.get_or_create(k, lambda k=k: _ctx(k))
+    assert len(c) == 2
+    assert keys[0] not in c and keys[2] in c
+    assert c.evict_count == 1
+
+
+def test_lru_recency():
+    c = ContextCache(capacity=2)
+    k0, k1, k2 = [context_key("m", (i,), "f32") for i in range(3)]
+    c.get_or_create(k0, lambda: _ctx(k0))
+    c.get_or_create(k1, lambda: _ctx(k1))
+    c.get_or_create(k0, lambda: _ctx(k0))  # refresh k0
+    c.get_or_create(k2, lambda: _ctx(k2))  # evicts k1
+    assert k0 in c and k2 in c and k1 not in c
+
+
+def test_thread_safety():
+    c = ContextCache(capacity=64)
+    k = context_key("z", (128,), "f32")
+    errs = []
+
+    def worker():
+        try:
+            for _ in range(200):
+                c.get_or_create(k, lambda: _ctx(k))
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert c.hit_count + c.miss_count == 8 * 200

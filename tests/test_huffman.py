@@ -1,0 +1,68 @@
+"""Huffman-X: codebook validity, lossless roundtrip, length limiting."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import huffman as hf
+
+
+def test_roundtrip_skewed(rng):
+    keys = np.minimum(np.abs(rng.normal(0, 30, 50000)).astype(np.int32), 1023)
+    enc = hf.compress(jnp.asarray(keys), 1024)
+    out = np.asarray(hf.decompress(enc))
+    assert (out == keys).all()
+    assert enc.nbytes() < keys.nbytes  # actually compresses skewed data
+
+
+def test_single_symbol():
+    keys = np.zeros(777, np.int32)
+    enc = hf.compress(jnp.asarray(keys), 8)
+    assert (np.asarray(hf.decompress(enc)) == keys).all()
+
+
+def test_two_symbols(rng):
+    keys = rng.integers(0, 2, 4096).astype(np.int32)
+    enc = hf.compress(jnp.asarray(keys), 2)
+    assert (np.asarray(hf.decompress(enc)) == keys).all()
+    assert enc.total_bits == 4096  # 1 bit/symbol exactly
+
+
+def test_kraft_and_prefix_free(rng):
+    freq = rng.integers(0, 1000, 257)
+    book = hf.build_codebook(freq)
+    used = book.lengths > 0
+    kraft = np.sum(np.exp2(-book.lengths[used].astype(np.float64)))
+    assert kraft <= 1.0 + 1e-12
+    # prefix-freeness: no code is a prefix of another
+    codes = [
+        (format(int(book.codes[s]), f"0{book.lengths[s]}b"))
+        for s in np.nonzero(used)[0]
+    ]
+    codes.sort()
+    for a, b in zip(codes, codes[1:]):
+        assert not b.startswith(a), (a, b)
+
+
+def test_length_limiting_fibonacci():
+    freq = np.array([int(1.6**i) + 1 for i in range(64)], np.int64)
+    book = hf.build_codebook(freq, max_len=12)
+    assert book.max_len <= 12
+    used = book.lengths > 0
+    assert np.sum(np.exp2(-book.lengths[used].astype(np.float64))) <= 1.0 + 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 64), st.integers(100, 3000), st.integers(0, 2**31))
+def test_roundtrip_property(nkeys, n, seed):
+    rng = np.random.default_rng(seed)
+    keys = (rng.zipf(1.5, n) % nkeys).astype(np.int32)
+    enc = hf.compress(jnp.asarray(keys), nkeys)
+    assert (np.asarray(hf.decompress(enc)) == keys).all()
+
+
+def test_chunked_decode_boundaries(rng):
+    keys = rng.integers(0, 64, 10000).astype(np.int32)
+    enc = hf.compress(jnp.asarray(keys), 64, chunk_size=256)
+    assert enc.chunk_offsets.shape[0] == int(np.ceil(10000 / 256))
+    assert (np.asarray(hf.decompress(enc)) == keys).all()
