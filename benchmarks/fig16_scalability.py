@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .common import Row, nyx_like
-from repro.core import api, zfp
+from repro.core import api
 
 
 def model_scalability(t_kernel: float, t_alloc: float, gpus: int) -> float:
@@ -35,18 +35,20 @@ def main() -> None:
         Row(f"fig16.{name}.avg_scalability", 0.0,
             f"avg={np.mean(ratios):.1%} at6={ratios[-1]:.1%}").emit()
 
-    # measured: warm-plan reuse vs forced re-compile (fresh shape per call)
+    # measured: warm-plan reuse (one cached ReductionPlan, CMM hits) vs
+    # forced plan rebuild (fresh shape per call → CMM miss + re-trace)
     data = nyx_like(48).reshape(-1)
     x = jnp.asarray(data[:65536])
-    zfp.compress_jit(x, 16, 1, (65536,))  # warm
+    spec = api.make_spec(data[:65536], "zfp", rate=16)
+    api.encode(spec, x)  # warm: builds + caches the plan
     t0 = time.perf_counter()
     for _ in range(5):
-        zfp.compress_jit(x, 16, 1, (65536,))
+        api.encode(spec, x)
     warm = (time.perf_counter() - t0) / 5
     t0 = time.perf_counter()
     cold_sizes = [65536 - 8 * i for i in range(1, 4)]
     for n in cold_sizes:
-        zfp.compress_jit(jnp.asarray(data[:n]), 16, 1, (n,))
+        api.encode(api.make_spec(data[:n], "zfp", rate=16), jnp.asarray(data[:n]))
     cold = (time.perf_counter() - t0) / len(cold_sizes)
     Row("fig16.measured_context_reuse", warm * 1e6,
         f"cold_over_warm={cold/warm:.1f}x (plan-cache hit vs rebuild)").emit()

@@ -1,5 +1,9 @@
 """Quickstart: compress/decompress a scientific field with all three pipelines.
 
+Demonstrates the plan-based API: a ``ReductionSpec`` is built per setting,
+its ``ReductionPlan`` (jitted executables + workspace) is CMM-cached, and
+re-encoding with the same spec is a pure cache hit.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -28,15 +32,21 @@ def main() -> None:
         ("zfp", {"rate": 16}, "fixed-rate 16 bits/value"),
         ("huffman-bytes", {}, "lossless byte-entropy (LZ-class)"),
     ):
-        comp = api.compress(jnp.asarray(data), method, **kw)
-        blob = comp.to_bytes()  # portable stream (what the checkpointer writes)
+        spec = api.make_spec(data, method, **kw)     # hashable CMM key
+        comp = api.encode(spec, jnp.asarray(data))   # plan built once, cached
+        blob = comp.to_bytes()  # portable v2 stream (what the checkpointer writes)
         out = np.asarray(api.decompress(api.Compressed.from_bytes(blob)))
         err = np.abs(out - data).max()
         rel = err / (data.max() - data.min())
         print(f"{method:14s} {note:32s} ratio={comp.ratio():6.2f}x  "
               f"stream={len(blob)/1e6:6.2f}MB  max_rel_err={rel:.2e}")
 
-    print("\nCMM context cache:", GLOBAL_CMM.stats())
+    # second encode with an identical spec: a pure plan-cache hit
+    hits_before = GLOBAL_CMM.hit_count
+    spec = api.make_spec(data, "zfp", rate=16)
+    api.encode(spec, jnp.asarray(data))
+    print(f"\nre-encode with cached plan: +{GLOBAL_CMM.hit_count - hits_before} CMM hit(s)")
+    print("CMM context cache:", GLOBAL_CMM.stats())
 
 
 if __name__ == "__main__":

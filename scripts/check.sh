@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (ROADMAP.md) — run this before every PR.
+# CI and humans must invoke the same command; add flags here, not in CI.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

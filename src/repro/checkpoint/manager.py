@@ -22,7 +22,6 @@ Layout:  <dir>/step_<N>/manifest.json + <dir>/step_<N>/<leaf-path>.hpdr
 from __future__ import annotations
 
 import json
-import math
 import threading
 import time
 from dataclasses import dataclass
@@ -69,41 +68,11 @@ def _method_for(arr: np.ndarray, policy: CheckpointPolicy) -> tuple[str, dict]:
 
 def _compress_leaf(arr: np.ndarray, policy: CheckpointPolicy) -> bytes:
     method, kw = _method_for(arr, policy)
-    x = arr
-    if method in ("zfp", "mgard"):
-        if x.dtype == np.dtype("bfloat16"):
-            x = x.astype(np.float32)
-        if method == "zfp":
-            # 3-D blocking amortises the per-block emax header over 4³=64
-            # values instead of 4 (flat 1-D blocks) — ~1.5× better streams
-            flat = x.reshape(-1)
-            pad = (-flat.size) % 1024
-            if pad:
-                flat = np.pad(flat, (0, pad), mode="edge")
-            x = flat.reshape(-1, 32, 32)
-        elif x.ndim > 4 or x.ndim == 0:
-            x = x.reshape(-1)
-        comp = api.compress(jnp.asarray(x), method, **kw)
-        comp.meta["orig_dtype"] = str(arr.dtype)
-        comp.meta["orig_shape"] = list(arr.shape)
-    else:
-        comp = api.compress(jnp.asarray(np.ascontiguousarray(arr).view(np.uint8)),
-                            "huffman-bytes")
-        comp.meta["orig_dtype"] = str(arr.dtype)
-        comp.meta["orig_shape"] = list(arr.shape)
-    return comp.to_bytes()
+    return api.compress_leaf(arr, method, **kw).to_bytes()
 
 
 def _decompress_leaf(raw: bytes) -> np.ndarray:
-    comp = api.Compressed.from_bytes(raw)
-    out = np.asarray(api.decompress(comp))
-    dtype = np.dtype(comp.meta["orig_dtype"])
-    shape = tuple(comp.meta["orig_shape"])
-    n = math.prod(shape) if shape else 1
-    if comp.method == "huffman-bytes":
-        out = out.view(dtype) if out.dtype == np.uint8 else out.astype(dtype)
-        return out.reshape(shape) if n == out.size else out
-    return out.reshape(-1)[:n].astype(dtype).reshape(shape)
+    return api.decompress_leaf(api.Compressed.from_bytes(raw))
 
 
 class CheckpointManager:

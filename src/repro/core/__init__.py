@@ -3,7 +3,8 @@
 Layers (paper Fig. 2, bottom-up): device adapters (`adapters`), machine
 abstraction (`machine`: GEM/DEM, `context`: CMM, `pipeline`: HDEM), parallel
 abstractions (`abstractions`), reduction pipelines (`mgard`, `zfp`,
-`huffman`), and the high-level API (`api`).
+`huffman`) behind the codec registry (`codecs`), and the high-level API
+(`api`: spec → plan → execute, with the `container` byte format).
 """
 
 from . import (  # noqa: F401
@@ -11,6 +12,8 @@ from . import (  # noqa: F401
     adapters,
     api,
     bitstream,
+    codecs,
+    container,
     context,
     huffman,
     machine,
@@ -18,4 +21,13 @@ from . import (  # noqa: F401
     quantize,
     zfp,
 )
-from .api import Compressed, compress, decompress  # noqa: F401
+from .api import (  # noqa: F401
+    Compressed,
+    CompressorStream,
+    ReductionPlan,
+    ReductionSpec,
+    compress,
+    compress_pytree,
+    decompress,
+    decompress_pytree,
+)

@@ -1,9 +1,36 @@
-"""Public HPDR compression API (paper Fig. 2 'High-level APIs' layer).
+"""Public HPDR compression API — codec registry + plan architecture.
 
-``compress``/``decompress`` front the three pipelines (MGARD-X, ZFP-X,
-Huffman-X) behind one interface, route plan reuse through the CMM context
-cache, and provide a portable byte serialization (header + sections) used by
-the checkpoint manager and the I/O benchmarks.
+The paper's core claim (§III-B) is that per-call context management — plans,
+workspace allocations, compiled executables — dominates reduction cost at
+scale.  This layer therefore separates the three phases every call used to
+re-run:
+
+  1. **Specify** — :class:`ReductionSpec` describes a reduction: method,
+     shape, dtype, and the method's parameters.  It is hashable; its
+     ``key()`` is the CMM context key.
+  2. **Plan** — :func:`get_plan` resolves the spec through the codec registry
+     (:mod:`repro.core.codecs`) and stores the resulting
+     :class:`ReductionPlan` — jitted executables with static arguments bound,
+     plus persistent workspace buffers (level maps, permutations) — in the
+     global CMM.  The second call with an identical spec is a cache *hit*
+     with a non-``None`` plan: nothing is rebuilt.
+  3. **Execute** — :func:`encode`/:func:`decode` run the planned executables
+     on data and produce/consume :class:`Compressed` containers (the v2 byte
+     format with per-section offsets and a payload checksum; v1 streams are
+     still read — see :mod:`repro.core.container`).
+
+``compress``/``decompress`` remain as thin back-compat wrappers that build a
+spec from keyword arguments and dispatch through the registry — there is no
+method if/elif chain anywhere.  Higher-level entry points:
+
+  * :func:`compress_pytree` / :func:`decompress_pytree` — batch compression
+    of parameter/KV pytrees with per-leaf method selection;
+  * :func:`compress_leaf` / :func:`decompress_leaf` — single-tensor policy
+    helpers (dtype casting, ZFP 4³ re-blocking, lossless byte view) shared by
+    the checkpoint manager and the serving engine;
+  * :class:`CompressorStream` — chunked streaming compression built on the
+    HDEM :class:`~repro.core.pipeline.ChunkedPipeline`, with its own framed
+    byte format for multi-chunk streams.
 
 Methods
 -------
@@ -19,92 +46,76 @@ from __future__ import annotations
 import io
 import json
 import math
-from dataclasses import dataclass
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import huffman, mgard, zfp
-from .context import GLOBAL_CMM, ReductionContext, context_key
-
-_MAGIC = b"HPDR"
-_VERSION = 1
+from . import pipeline as pl
+from .codecs import available_methods, get_codec
+from .codecs.base import Codec, ReductionPlan, ReductionSpec  # noqa: F401
+from .container import Compressed, _jsonable  # noqa: F401
+from .context import GLOBAL_CMM, ReductionContext
 
 METHODS = ("mgard", "zfp", "huffman", "huffman-bytes")
 
-
-@dataclass
-class Compressed:
-    """Method-tagged compressed object with byte (de)serialization."""
-
-    method: str
-    meta: dict[str, Any]
-    arrays: dict[str, np.ndarray]
-
-    def nbytes(self) -> int:
-        return sum(a.nbytes for a in self.arrays.values())
-
-    def ratio(self) -> float:
-        orig = math.prod(self.meta["shape"]) * np.dtype(self.meta["dtype"]).itemsize
-        return orig / max(self.nbytes(), 1)
-
-    # -- portable byte format (used by checkpoint/I-O layers) ---------------
-
-    def to_bytes(self) -> bytes:
-        buf = io.BytesIO()
-        names = sorted(self.arrays)
-        header = {
-            "method": self.method,
-            "meta": _jsonable(self.meta),
-            "arrays": {
-                n: {"dtype": str(self.arrays[n].dtype), "shape": list(self.arrays[n].shape)}
-                for n in names
-            },
-        }
-        hbytes = json.dumps(header).encode()
-        buf.write(_MAGIC)
-        buf.write(np.uint32(_VERSION).tobytes())
-        buf.write(np.uint64(len(hbytes)).tobytes())
-        buf.write(hbytes)
-        for n in names:
-            buf.write(np.ascontiguousarray(self.arrays[n]).tobytes())
-        return buf.getvalue()
-
-    @classmethod
-    def from_bytes(cls, raw: bytes) -> "Compressed":
-        if raw[:4] != _MAGIC:
-            raise ValueError("not an HPDR stream")
-        hlen = int(np.frombuffer(raw[8:16], np.uint64)[0])
-        header = json.loads(raw[16 : 16 + hlen].decode())
-        off = 16 + hlen
-        arrays = {}
-        for n in sorted(header["arrays"]):
-            spec = header["arrays"][n]
-            dt = np.dtype(spec["dtype"])
-            count = math.prod(spec["shape"]) if spec["shape"] else 1
-            nb = count * dt.itemsize
-            arrays[n] = np.frombuffer(raw[off : off + nb], dt).reshape(spec["shape"])
-            off += nb
-        return cls(method=header["method"], meta=header["meta"], arrays=arrays)
-
-
-def _jsonable(d: dict) -> dict:
-    out = {}
-    for k, v in d.items():
-        if isinstance(v, (np.integer,)):
-            v = int(v)
-        elif isinstance(v, (np.floating,)):
-            v = float(v)
-        elif isinstance(v, tuple):
-            v = list(v)
-        out[k] = v
-    return out
+_STREAM_MAGIC = b"HPDS"
+_STREAM_VERSION = 1
 
 
 # ---------------------------------------------------------------------------
-# compress / decompress
+# spec / plan resolution (CMM-backed)
+# ---------------------------------------------------------------------------
+
+
+def make_spec(data: Any, method: str, **params: Any) -> ReductionSpec:
+    """Build the canonical spec for compressing ``data`` with ``method``.
+
+    Parameters irrelevant to the codec are dropped and omitted ones filled
+    with the codec's defaults, so equivalent calls produce identical specs
+    (and hit the same CMM entry).
+    """
+    codec = get_codec(method)
+    # NB: read dtype without materialising data — np.asarray on a device
+    # array would force a full D2H copy just to inspect it.
+    dtype = getattr(data, "dtype", None)
+    if dtype is None:
+        dtype = np.asarray(data).dtype
+    return codec.make_spec(np.shape(data), dtype, **params)
+
+
+def _build_context(key, codec: Codec, spec: ReductionSpec) -> ReductionContext:
+    plan = codec.plan(spec)
+    # Mirror the plan's persistent buffers into the context so CMM byte
+    # accounting (ContextCache.nbytes/stats) sees them.
+    return ReductionContext(key=key, plan=plan, buffers=plan.workspace)
+
+
+def get_plan(spec: ReductionSpec) -> ReductionPlan:
+    """CMM-cached plan for ``spec``; built by the codec on the first miss."""
+    codec = get_codec(spec.method)
+    key = spec.key()
+    ctx = GLOBAL_CMM.get_or_create(key, lambda: _build_context(key, codec, spec))
+    if ctx.plan is None:  # entry predating the plan architecture
+        ctx.plan = codec.plan(spec)
+        ctx.buffers = ctx.plan.workspace
+    return ctx.plan
+
+
+def encode(spec: ReductionSpec, data: jax.Array | np.ndarray) -> Compressed:
+    """Compress ``data`` according to ``spec`` (plan reused via the CMM)."""
+    return get_codec(spec.method).encode(get_plan(spec), data)
+
+
+def decode(c: Compressed) -> jax.Array:
+    """Decompress a container (the decode-side plan is CMM-cached too)."""
+    codec = get_codec(c.method)
+    return codec.decode(get_plan(codec.decode_spec(c)), c)
+
+
+# ---------------------------------------------------------------------------
+# compress / decompress — thin wrappers over the registry
 # ---------------------------------------------------------------------------
 
 
@@ -121,117 +132,242 @@ def compress(
     """Compress ``data`` with the selected pipeline.
 
     ``error_bound`` is relative to the value range when ``relative=True``
-    (the paper's evaluation convention).
+    (the paper's evaluation convention).  This is a convenience wrapper: it
+    builds a :class:`ReductionSpec` and dispatches through the codec
+    registry, so repeated same-shaped calls reuse one cached plan.
     """
     del adapter  # plumbed through kernels' ops.py; the jnp path is portable
     data = jnp.asarray(data)
-    key = context_key(method, data.shape, data.dtype,
-                      eb=error_bound, rel=relative, rate=rate, dict=dict_size)
-    GLOBAL_CMM.get_or_create(key, lambda: ReductionContext(key=key, plan=None))
-
-    if method == "mgard":
-        vrange = float(jnp.max(data) - jnp.min(data)) if relative else 1.0
-        eb = error_bound * (vrange if relative else 1.0)
-        obj = mgard.compress(data, eb if eb > 0 else error_bound, dict_size=dict_size)
-        return Compressed(
-            method=method,
-            meta={
-                "shape": tuple(obj.shape), "padded": tuple(obj.padded),
-                "dtype": obj.dtype, "error_bound": obj.error_bound,
-                "dict_size": obj.dict_size,
-                "chunk_size": obj.entropy.chunk_size,
-                "total_bits": obj.entropy.total_bits,
-                "n_symbols": obj.entropy.n_symbols,
-                "num_keys": obj.entropy.num_keys,
-            },
-            arrays={
-                "words": np.asarray(obj.entropy.words),
-                "chunk_offsets": np.asarray(obj.entropy.chunk_offsets),
-                "length_table": obj.entropy.length_table,
-                "outlier_idx": obj.outlier_idx,
-                "outlier_val": obj.outlier_val,
-                "bins": obj.bins,
-            },
-        )
-    if method == "zfp":
-        obj = zfp.compress(data, rate=rate)
-        return Compressed(
-            method=method,
-            meta={"shape": tuple(obj.shape), "dtype": obj.dtype, "rate": obj.rate},
-            arrays={"payload": np.asarray(obj.payload), "emax": np.asarray(obj.emax)},
-        )
-    if method == "huffman":
-        if not jnp.issubdtype(data.dtype, jnp.integer):
-            raise ValueError("huffman method expects integer keys; use huffman-bytes")
-        num_keys = int(jnp.max(data)) + 1
-        enc = huffman.compress(data, num_keys)
-        return _huffman_compressed(enc, data.shape, str(data.dtype), "huffman")
-    if method == "huffman-bytes":
-        byte_view = jnp.asarray(np.asarray(data).view(np.uint8))
-        enc = huffman.compress(byte_view.astype(jnp.int32), 256)
-        return _huffman_compressed(
-            enc, data.shape, str(data.dtype), "huffman-bytes"
-        )
-    raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
-
-
-def _huffman_compressed(enc: huffman.Encoded, shape, dtype, method) -> Compressed:
-    return Compressed(
-        method=method,
-        meta={
-            "shape": tuple(shape), "dtype": dtype,
-            "chunk_size": enc.chunk_size, "total_bits": enc.total_bits,
-            "n_symbols": enc.n_symbols, "num_keys": enc.num_keys,
-        },
-        arrays={
-            "words": np.asarray(enc.words),
-            "chunk_offsets": np.asarray(enc.chunk_offsets),
-            "length_table": enc.length_table,
-        },
+    spec = make_spec(
+        data, method,
+        error_bound=error_bound, relative=relative, rate=rate,
+        dict_size=dict_size,
     )
-
-
-def _huffman_encoded(c: Compressed) -> huffman.Encoded:
-    return huffman.Encoded(
-        words=jnp.asarray(c.arrays["words"]),
-        total_bits=int(c.meta["total_bits"]),
-        n_symbols=int(c.meta["n_symbols"]),
-        chunk_size=int(c.meta["chunk_size"]),
-        chunk_offsets=jnp.asarray(c.arrays["chunk_offsets"]),
-        length_table=np.asarray(c.arrays["length_table"]),
-        num_keys=int(c.meta["num_keys"]),
-    )
+    return encode(spec, data)
 
 
 def decompress(c: Compressed) -> jax.Array:
-    if c.method == "mgard":
-        obj = mgard.MGARDCompressed(
-            entropy=_huffman_encoded(c),
-            outlier_idx=np.asarray(c.arrays["outlier_idx"]),
-            outlier_val=np.asarray(c.arrays["outlier_val"]),
-            bins=np.asarray(c.arrays["bins"]),
-            shape=tuple(c.meta["shape"]),
-            padded=tuple(c.meta["padded"]),
-            error_bound=float(c.meta["error_bound"]),
-            dict_size=int(c.meta["dict_size"]),
-            dtype=c.meta["dtype"],
+    return decode(c)
+
+
+# ---------------------------------------------------------------------------
+# leaf policy helpers (shared by checkpoint + serving layers)
+# ---------------------------------------------------------------------------
+
+
+def as_blocked_3d(flat: np.ndarray) -> np.ndarray:
+    """Flat → (n, 32, 32) (padded to 1024-multiples): ZFP blocks become 4³ so
+    the per-block emax header is amortised over 64 values instead of 4."""
+    x = np.asarray(flat).reshape(-1)
+    pad = (-x.size) % 1024
+    if pad:
+        x = np.pad(x, (0, pad), mode="edge")
+    return x.reshape(-1, 32, 32)
+
+
+def compress_leaf(arr: np.ndarray, method: str, **params: Any) -> Compressed:
+    """Compress one tensor with the shared shape/dtype policy.
+
+    bfloat16 is cast to float32 for the lossy codecs, ZFP inputs are
+    re-blocked to 4³-friendly (n, 32, 32), >4-D or 0-D MGARD inputs are
+    flattened, and anything sent to ``huffman-bytes`` is stored bit-exact.
+    The original dtype/shape ride along in ``meta`` for
+    :func:`decompress_leaf`.
+    """
+    arr = np.asarray(arr)
+    x = arr
+    if method in ("zfp", "mgard"):
+        if x.dtype != np.float32 and x.dtype.kind in ("f", "V"):
+            x = x.astype(np.float32)
+        if method == "zfp":
+            x = as_blocked_3d(x)
+        elif x.ndim > 4 or x.ndim == 0:
+            x = x.reshape(-1)
+        c = compress(jnp.asarray(x), method, **params)
+    else:
+        c = compress(
+            jnp.asarray(np.ascontiguousarray(arr).view(np.uint8)), "huffman-bytes"
         )
-        return mgard.decompress(obj)
-    if c.method == "zfp":
-        obj = zfp.ZFPCompressed(
-            payload=jnp.asarray(c.arrays["payload"]),
-            emax=jnp.asarray(c.arrays["emax"]),
-            shape=tuple(c.meta["shape"]),
-            rate=int(c.meta["rate"]),
-            dtype=c.meta["dtype"],
-        )
-        return zfp.decompress(obj)
-    if c.method == "huffman":
-        keys = huffman.decompress(_huffman_encoded(c))
-        return keys.reshape(tuple(c.meta["shape"])).astype(jnp.dtype(c.meta["dtype"]))
+    c.meta["orig_dtype"] = str(arr.dtype)
+    c.meta["orig_shape"] = list(arr.shape)
+    return c
+
+
+def decompress_leaf(c: Compressed) -> np.ndarray:
+    """Inverse of :func:`compress_leaf`: restores original dtype and shape."""
+    out = np.asarray(decode(c))
+    dtype = np.dtype(c.meta["orig_dtype"])
+    shape = tuple(c.meta["orig_shape"])
+    n = math.prod(shape) if shape else 1
     if c.method == "huffman-bytes":
-        keys = np.asarray(huffman.decompress(_huffman_encoded(c))).astype(np.uint8)
-        return jnp.asarray(
-            keys.view(np.dtype(c.meta["dtype"])).reshape(tuple(c.meta["shape"]))
+        out = out.view(dtype) if out.dtype == np.uint8 else out.astype(dtype)
+        return out.reshape(shape) if n == out.size else out
+    return out.reshape(-1)[:n].astype(dtype).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# pytree / batch entry points
+# ---------------------------------------------------------------------------
+
+
+def _path_key(path, sep: str) -> str:
+    return sep.join(str(getattr(e, "key", getattr(e, "idx", ""))) for e in path)
+
+
+def default_select(key: str, arr: np.ndarray) -> tuple[str, dict] | None:
+    """Default per-leaf policy: ZFP for sizable float tensors, raw otherwise."""
+    del key
+    if arr.dtype.kind == "f" and arr.size >= 4096:
+        return "zfp", {"rate": 16}
+    return None
+
+
+def compress_pytree(
+    tree: Any,
+    select: Callable[[str, np.ndarray], tuple[str, dict] | None] | None = None,
+    *,
+    sep: str = "/",
+) -> tuple[dict[str, Any], dict]:
+    """Compress every selected leaf of a pytree.
+
+    ``select(key, arr)`` returns ``(method, params)`` to compress a leaf or
+    ``None`` to pass it through raw.  Returns ``(flat, stats)`` where
+    ``flat`` maps path keys to :class:`Compressed` or raw arrays — identical
+    shapes/dtypes restore via :func:`decompress_pytree`.
+    """
+    select = select or default_select
+    flat: dict[str, Any] = {}
+    stats = {"raw": 0, "compressed": 0, "leaves": 0, "compressed_leaves": 0}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _path_key(path, sep)
+        arr = np.asarray(leaf)
+        stats["raw"] += arr.nbytes
+        stats["leaves"] += 1
+        choice = select(key, arr)
+        if choice is None:
+            flat[key] = arr
+            stats["compressed"] += arr.nbytes
+            continue
+        method, params = choice
+        c = compress_leaf(arr, method, **params)
+        flat[key] = c
+        stats["compressed"] += c.nbytes()
+        stats["compressed_leaves"] += 1
+    stats["ratio"] = stats["raw"] / max(stats["compressed"], 1)
+    return flat, stats
+
+
+def decompress_pytree(comp: dict[str, Any], like: Any, *, sep: str = "/") -> Any:
+    """Rebuild the pytree ``like`` from :func:`compress_pytree` output."""
+    flat = {
+        key: decompress_leaf(val) if isinstance(val, Compressed) else val
+        for key, val in comp.items()
+    }
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = [jnp.asarray(flat[_path_key(path, sep)]) for path, _leaf in leaves_with_path]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# chunked streaming (HDEM pipeline)
+# ---------------------------------------------------------------------------
+
+
+class CompressorStream:
+    """Chunked streaming compression on the HDEM double-buffered pipeline.
+
+    Chunks share a spec whenever their shapes agree, so every chunk after
+    the first hits the CMM plan cache — the chunk-pipelined analogue of the
+    paper's per-call context reuse.  ``to_bytes``/``from_bytes`` frame the
+    per-chunk containers with an offset index so chunks can be located (and
+    eventually fetched) independently.
+    """
+
+    def __init__(
+        self,
+        method: str = "zfp",
+        mode: str = "adaptive",
+        *,
+        c_init_elems: int = 1 << 20,
+        c_fixed_elems: int = 8 << 20,
+        c_limit_elems: int = 1 << 28,
+        phi=None,
+        theta=None,
+        **params: Any,
+    ):
+        self.method = method
+        self.params = params
+        self.pipeline = pl.ChunkedPipeline(
+            self._encode_chunk,
+            mode=mode,
+            c_init_elems=c_init_elems,
+            c_fixed_elems=c_fixed_elems,
+            c_limit_elems=c_limit_elems,
+            phi=phi,
+            theta=theta,
         )
-    raise ValueError(f"unknown method {c.method!r}")
+
+    def _encode_chunk(self, chunk: jax.Array) -> Compressed:
+        return encode(make_spec(chunk, self.method, **self.params), chunk)
+
+    def compress(self, data: np.ndarray) -> pl.ChunkedResult:
+        return self.pipeline.run(np.asarray(data))
+
+    @staticmethod
+    def decompress(result: pl.ChunkedResult) -> np.ndarray:
+        return pl.decompress_chunked(result, decode)
+
+    # -- framed multi-chunk byte format -------------------------------------
+
+    @staticmethod
+    def to_bytes(result: pl.ChunkedResult) -> bytes:
+        blobs = [c.to_bytes() for c in result.chunks]
+        offsets = []
+        off = 0
+        for b in blobs:
+            offsets.append(off)
+            off += len(b)
+        header = {
+            "axis": result.axis,
+            "shape": list(result.shape),
+            "boundaries": list(result.boundaries),
+            "chunks": [
+                {"offset": o, "nbytes": len(b)} for o, b in zip(offsets, blobs)
+            ],
+        }
+        hbytes = json.dumps(header).encode()
+        buf = io.BytesIO()
+        buf.write(_STREAM_MAGIC)
+        buf.write(np.uint32(_STREAM_VERSION).tobytes())
+        buf.write(np.uint64(len(hbytes)).tobytes())
+        buf.write(hbytes)
+        for b in blobs:
+            buf.write(b)
+        return buf.getvalue()
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> pl.ChunkedResult:
+        raw = bytes(raw)
+        if len(raw) < 16 or raw[:4] != _STREAM_MAGIC:
+            raise ValueError("not an HPDR chunked stream")
+        version = int(np.frombuffer(raw[4:8], np.uint32)[0])
+        if version != _STREAM_VERSION:
+            raise ValueError(f"unsupported HPDR stream version {version}")
+        hlen = int(np.frombuffer(raw[8:16], np.uint64)[0])
+        if len(raw) < 16 + hlen:
+            raise ValueError("truncated HPDR chunked stream")
+        header = json.loads(raw[16 : 16 + hlen].decode())
+        base = 16 + hlen
+        chunks = []
+        for entry in header["chunks"]:
+            lo = base + entry["offset"]
+            hi = lo + entry["nbytes"]
+            if hi > len(raw):
+                raise ValueError("truncated HPDR chunked stream")
+            chunks.append(Compressed.from_bytes(raw[lo:hi]))
+        return pl.ChunkedResult(
+            chunks=chunks,
+            boundaries=list(header["boundaries"]),
+            axis=int(header["axis"]),
+            shape=tuple(header["shape"]),
+        )

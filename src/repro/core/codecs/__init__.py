@@ -1,0 +1,56 @@
+"""HPDR codec registry — composable compression stages behind one API.
+
+Every compression method is a :class:`~repro.core.codecs.base.Codec`
+registered under its public name with :func:`register_codec`.  The API layer
+(:mod:`repro.core.api`) dispatches ``compress``/``decompress`` through this
+registry — there is no method if/elif chain anywhere — and stores each
+codec's :class:`~repro.core.codecs.base.ReductionPlan` in the CMM so repeated
+calls with the same :class:`~repro.core.codecs.base.ReductionSpec` reuse one
+plan (jitted executables + workspace buffers).
+
+Registering a new codec is one decorated class::
+
+    from repro.core.codecs import register_codec
+    from repro.core.codecs.base import Codec
+
+    @register_codec("mymethod")
+    class MyCodec(Codec):
+        spec_defaults = {"level": 3}
+        def plan(self, spec): ...
+        def encode(self, plan, data): ...
+        def decode(self, plan, c): ...
+        def decode_spec(self, c): ...
+"""
+
+from __future__ import annotations
+
+from .base import Codec, ReductionPlan, ReductionSpec  # noqa: F401
+
+_REGISTRY: dict[str, Codec] = {}
+
+
+def register_codec(name: str):
+    """Class decorator: instantiate ``cls(name)`` and register it."""
+
+    def deco(cls):
+        _REGISTRY[name] = cls(name)
+        return cls
+
+    return deco
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; expected one of {available_methods()}"
+        ) from None
+
+
+def available_methods() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# Import order defines nothing — each module self-registers on import.
+from . import huffman_codec, mgard_codec, zfp_codec  # noqa: E402,F401

@@ -1,0 +1,125 @@
+"""Codec protocol + plan objects for the HPDR codec registry.
+
+The paper's CMM (§III-B) caches *contexts*: the plan (jitted executable) and
+workspace allocations a reduction needs beyond its input/output.  This module
+defines what a cached context holds in this framework:
+
+  * :class:`ReductionSpec` — the hashable description of a reduction
+    (method, shape, dtype, method parameters).  Its :meth:`ReductionSpec.key`
+    is the CMM hash key ("similar data characteristics").
+  * :class:`ReductionPlan` — what planning produces: jitted executables bound
+    to the spec's static arguments plus persistent workspace buffers
+    (level maps, permutations, codebooks) that repeated calls reuse.
+  * :class:`Codec` — the three-method protocol every registered compressor
+    implements: ``plan(spec)``, ``encode(plan, data)``, ``decode(plan, c)``.
+
+Codecs are stateless; all per-(shape, dtype, params) state lives in the plan,
+which the API layer stores in the global CMM so the second call with an
+identical spec is a cache hit.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+
+from ..container import Compressed
+from ..context import context_key
+
+
+@dataclass(frozen=True)
+class ReductionSpec:
+    """Hashable description of one reduction: method + data characteristics."""
+
+    method: str
+    shape: tuple[int, ...]
+    dtype: str
+    params: tuple[tuple[str, Any], ...] = ()
+
+    @classmethod
+    def create(
+        cls, method: str, shape: tuple[int, ...], dtype: Any, **params: Any
+    ) -> "ReductionSpec":
+        return cls(
+            method=method,
+            shape=tuple(int(n) for n in shape),
+            dtype=str(dtype),
+            params=tuple(sorted(params.items())),
+        )
+
+    def param(self, name: str, default: Any = None) -> Any:
+        for k, v in self.params:
+            if k == name:
+                return v
+        return default
+
+    def key(self) -> tuple:
+        """Canonical CMM hash key for this spec."""
+        return context_key(self.method, self.shape, self.dtype, **dict(self.params))
+
+
+@dataclass
+class ReductionPlan:
+    """A built plan: jitted executables + persistent workspace buffers.
+
+    ``executables`` maps stage name → jitted callable with the spec's static
+    arguments already bound (tracing/compilation happens once per plan).
+    ``workspace`` holds device/host arrays that are data-independent for the
+    spec (level maps, bin layouts, block permutations) — the paper's
+    persistent context allocations.
+    """
+
+    spec: ReductionSpec
+    executables: dict[str, Callable] = field(default_factory=dict)
+    workspace: dict[str, Any] = field(default_factory=dict)
+    meta: dict[str, Any] = field(default_factory=dict)
+
+    def nbytes(self) -> int:
+        return sum(int(getattr(b, "nbytes", 0)) for b in self.workspace.values())
+
+
+class Codec:
+    """Base class for registered codecs (see :mod:`repro.core.codecs`).
+
+    Subclasses set :attr:`spec_defaults` — the parameter names that belong
+    in this codec's :class:`ReductionSpec` (and therefore in its CMM key),
+    with their default values — and implement :meth:`plan` / :meth:`encode`
+    / :meth:`decode` / :meth:`decode_spec`.
+    """
+
+    spec_defaults: dict[str, Any] = {}
+
+    def __init__(self, name: str):
+        self.name = name
+
+    @property
+    def spec_params(self) -> tuple[str, ...]:
+        return tuple(self.spec_defaults)
+
+    def make_spec(self, shape: tuple[int, ...], dtype: Any, **kwargs: Any) -> ReductionSpec:
+        """Build a canonical spec from loose kwargs.
+
+        Irrelevant kwargs are dropped and missing ones filled with the
+        codec's defaults, so a defaulted call and an explicit-default call
+        map to the same CMM key.
+        """
+        params = {k: kwargs.get(k, d) for k, d in self.spec_defaults.items()}
+        return ReductionSpec.create(self.name, shape, dtype, **params)
+
+    # -- protocol ------------------------------------------------------------
+
+    def plan(self, spec: ReductionSpec) -> ReductionPlan:
+        """Build the persistent plan for ``spec`` (called once per CMM miss)."""
+        raise NotImplementedError
+
+    def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
+        raise NotImplementedError
+
+    def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
+        raise NotImplementedError
+
+    def decode_spec(self, c: Compressed) -> ReductionSpec:
+        """Spec keying the decode-side plan, recovered from container meta."""
+        raise NotImplementedError

@@ -1,0 +1,122 @@
+"""Huffman-X codecs: integer-key entropy coding + the byte-wise variant.
+
+Two registrations of the same machinery (paper §IV-B):
+
+  * ``huffman``        lossless entropy coding of integer key arrays — the
+                       dictionary size is data-dependent (max key + 1), so it
+                       lives in the container meta, not the spec;
+  * ``huffman-bytes``  lossless byte-wise coding of arbitrary arrays (256-key
+                       alphabet) — the LZ-class baseline analogue.
+
+The plan pins the jitted histogram executable; the codebook itself is
+data-dependent (per-call), exactly like the GPU implementations rebuild the
+tree per buffer while reusing the kernel plan.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import huffman
+from ..container import Compressed
+from . import register_codec
+from .base import Codec, ReductionPlan, ReductionSpec
+
+
+def encoded_to_sections(enc: huffman.Encoded, shape, dtype, method) -> Compressed:
+    """Pack a :class:`huffman.Encoded` into a method-tagged container."""
+    return Compressed(
+        method=method,
+        meta={
+            "shape": tuple(shape), "dtype": str(dtype),
+            "chunk_size": enc.chunk_size, "total_bits": enc.total_bits,
+            "n_symbols": enc.n_symbols, "num_keys": enc.num_keys,
+        },
+        arrays={
+            "words": np.asarray(enc.words),
+            "chunk_offsets": np.asarray(enc.chunk_offsets),
+            "length_table": enc.length_table,
+        },
+    )
+
+
+def sections_to_encoded(c: Compressed) -> huffman.Encoded:
+    return huffman.Encoded(
+        words=jnp.asarray(c.arrays["words"]),
+        total_bits=int(c.meta["total_bits"]),
+        n_symbols=int(c.meta["n_symbols"]),
+        chunk_size=int(c.meta["chunk_size"]),
+        chunk_offsets=jnp.asarray(c.arrays["chunk_offsets"]),
+        length_table=np.asarray(c.arrays["length_table"]),
+        num_keys=int(c.meta["num_keys"]),
+    )
+
+
+@register_codec("huffman")
+class HuffmanCodec(Codec):
+    """Entropy coding of integer keys (alphabet sized per call)."""
+
+    spec_defaults = {}
+
+    def plan(self, spec: ReductionSpec) -> ReductionPlan:
+        return ReductionPlan(
+            spec=spec,
+            # jitted DEM-global histogram; codebook build is per-call metadata
+            executables={"histogram": huffman.histogram,
+                         "decode": huffman.decode},
+        )
+
+    def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
+        data = jnp.asarray(data)
+        if not jnp.issubdtype(data.dtype, jnp.integer):
+            raise ValueError("huffman method expects integer keys; use huffman-bytes")
+        num_keys = int(jnp.max(data)) + 1
+        freq = np.asarray(plan.executables["histogram"](data, num_keys))
+        book = huffman.build_codebook(freq)
+        enc = huffman.encode(data, book)
+        return encoded_to_sections(enc, data.shape, data.dtype, self.name)
+
+    def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
+        keys = plan.executables["decode"](sections_to_encoded(c))
+        return keys.reshape(tuple(c.meta["shape"])).astype(jnp.dtype(c.meta["dtype"]))
+
+    def decode_spec(self, c: Compressed) -> ReductionSpec:
+        return ReductionSpec.create(self.name, c.meta["shape"], c.meta["dtype"])
+
+
+@register_codec("huffman-bytes")
+class HuffmanBytesCodec(Codec):
+    """Byte-wise lossless coding of arbitrary arrays (fixed 256-key alphabet)."""
+
+    spec_defaults = {}
+
+    def plan(self, spec: ReductionSpec) -> ReductionPlan:
+        return ReductionPlan(
+            spec=spec,
+            executables={"histogram": partial(huffman.histogram, num_bins=256),
+                         "decode": huffman.decode},
+        )
+
+    def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
+        orig_dtype = np.asarray(data).dtype
+        byte_keys = jnp.asarray(
+            np.ascontiguousarray(np.asarray(data)).view(np.uint8)
+        ).astype(jnp.int32)
+        freq = np.asarray(plan.executables["histogram"](byte_keys))
+        book = huffman.build_codebook(freq)
+        enc = huffman.encode(byte_keys, book)
+        return encoded_to_sections(enc, np.shape(data), orig_dtype, self.name)
+
+    def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
+        keys = np.asarray(plan.executables["decode"](sections_to_encoded(c)))
+        byte_view = keys.astype(np.uint8)
+        return jnp.asarray(
+            byte_view.view(np.dtype(c.meta["dtype"])).reshape(tuple(c.meta["shape"]))
+        )
+
+    def decode_spec(self, c: Compressed) -> ReductionSpec:
+        return ReductionSpec.create(self.name, c.meta["shape"], c.meta["dtype"])

@@ -1,0 +1,115 @@
+"""MGARD-X codec: error-bounded lossy compression behind the registry.
+
+The plan carries everything that depends only on (shape, dtype, dict_size):
+the padded dyadic grid, the level map as a persistent device buffer, the
+level count, and the jitted decompose/quantize/dequantize/recompose
+executables with their static arguments bound.  Per-call work is reduced to
+the data-dependent parts — value range (relative bounds), bin schedule,
+entropy coding — which is exactly the split the paper's CMM caches.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import huffman, mgard
+from ..container import Compressed
+from ..quantize import dequantize_by_subset, unsigned_to_signed
+from . import register_codec
+from .base import Codec, ReductionPlan, ReductionSpec
+from .huffman_codec import encoded_to_sections, sections_to_encoded
+
+_dequantize_jit = jax.jit(dequantize_by_subset)
+_unsigned_to_signed_jit = jax.jit(unsigned_to_signed)
+
+
+@register_codec("mgard")
+class MGARDCodec(Codec):
+    """Multigrid error-bounded compression (paper §IV-A, Algorithm 1)."""
+
+    spec_defaults = {"error_bound": 1e-2, "relative": True, "dict_size": 4096}
+
+    def plan(self, spec: ReductionSpec) -> ReductionPlan:
+        shape = spec.shape
+        dict_size = int(spec.param("dict_size", 4096))
+        padded = tuple(mgard.padded_dim(n) for n in shape)
+        L = mgard.total_levels(padded)
+        return ReductionPlan(
+            spec=spec,
+            executables={
+                "decompose": partial(mgard.decompose, shape=shape),
+                "recompose": partial(mgard.recompose, shape=shape),
+                "quantize": partial(
+                    mgard._quantize_stage, shape=padded, dict_size=dict_size
+                ),
+                "dequantize": _dequantize_jit,
+            },
+            workspace={"lmap": jnp.asarray(mgard.level_map(padded))},
+            meta={"padded": padded, "L": L, "dict_size": dict_size},
+        )
+
+    def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
+        spec = plan.spec
+        data = jnp.asarray(data)
+        eb0 = float(spec.param("error_bound", 1e-2))
+        relative = bool(spec.param("relative", True))
+        dict_size = plan.meta["dict_size"]
+        if relative:
+            vrange = float(jnp.max(data) - jnp.min(data))
+            eb = eb0 * vrange
+        else:
+            eb = eb0
+        eb = eb if eb > 0 else eb0
+
+        coeffs = plan.executables["decompose"](data)
+        L = plan.meta["L"]
+        bins = mgard.level_bins(eb, L)
+        q, keys, inlier = plan.executables["quantize"](
+            coeffs, plan.workspace["lmap"], jnp.asarray(bins, jnp.float32)
+        )
+        # Outliers: stored losslessly (sparse), like MGARD's escape path.
+        inlier_np = np.asarray(inlier).reshape(-1)
+        out_idx = np.nonzero(~inlier_np)[0]
+        out_val = np.asarray(q).reshape(-1)[out_idx]
+        enc = huffman.compress(keys, dict_size)
+
+        c = encoded_to_sections(enc, data.shape, data.dtype, self.name)
+        c.meta.update(
+            padded=plan.meta["padded"],
+            error_bound=float(eb),
+            dict_size=dict_size,
+        )
+        c.arrays.update(
+            outlier_idx=out_idx.astype(np.int64),
+            outlier_val=out_val.astype(np.int32),
+            bins=bins,
+        )
+        return c
+
+    def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
+        keys = huffman.decompress(sections_to_encoded(c))
+        q = _unsigned_to_signed_jit(keys.astype(jnp.uint32))
+        qf = np.asarray(q).reshape(-1)
+        out_idx = np.asarray(c.arrays["outlier_idx"])
+        if out_idx.size:
+            qf = qf.copy()
+            qf[out_idx] = np.asarray(c.arrays["outlier_val"])
+        q = jnp.asarray(qf.reshape(plan.meta["padded"]))
+        coeffs = plan.executables["dequantize"](
+            q, plan.workspace["lmap"],
+            jnp.asarray(np.asarray(c.arrays["bins"]), jnp.float32),
+        )
+        out = plan.executables["recompose"](coeffs)
+        return out.astype(jnp.dtype(c.meta["dtype"]))
+
+    def decode_spec(self, c: Compressed) -> ReductionSpec:
+        # Decode plans depend only on geometry + dict size: streams written
+        # with any error bound share one reconstruction plan.
+        return ReductionSpec.create(
+            self.name, c.meta["shape"], c.meta["dtype"],
+            dict_size=int(c.meta["dict_size"]),
+        )

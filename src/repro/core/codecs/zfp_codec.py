@@ -1,0 +1,71 @@
+"""ZFP-X codec: fixed-rate lossy compression behind the registry.
+
+The whole transform chain is shape/rate-static, so the plan is simply the
+two jitted executables with (rate, dims, shape) bound — a second call with
+the same spec reuses the compiled program and its workspace without
+re-tracing.  Validation (ndim ≤ 4, rate ∈ [1, 32]) happens at plan time:
+an invalid spec never enters the CMM.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import zfp
+from ..container import Compressed
+from . import register_codec
+from .base import Codec, ReductionPlan, ReductionSpec
+
+
+@register_codec("zfp")
+class ZFPCodec(Codec):
+    """Fixed-rate block compression (paper §IV-C, Algorithm 3)."""
+
+    spec_defaults = {"rate": 16}
+
+    def plan(self, spec: ReductionSpec) -> ReductionPlan:
+        rate = int(spec.param("rate", 16))
+        dims = len(spec.shape)
+        if dims > 4 or dims == 0:
+            raise ValueError("zfp supports 1-4 dimensional data")
+        if not 1 <= rate <= 32:
+            raise ValueError("rate must be in [1, 32] bits/value")
+        return ReductionPlan(
+            spec=spec,
+            executables={
+                "encode": partial(
+                    zfp.compress_jit, rate=rate, dims=dims, shape=spec.shape
+                ),
+                "decode": partial(
+                    zfp.decompress_jit, rate=rate, dims=dims, shape=spec.shape
+                ),
+            },
+            meta={"rate": rate, "dims": dims},
+        )
+
+    def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
+        payload, emax = plan.executables["encode"](jnp.asarray(data))
+        return Compressed(
+            method=self.name,
+            meta={
+                "shape": plan.spec.shape,
+                "dtype": plan.spec.dtype,
+                "rate": plan.meta["rate"],
+            },
+            arrays={"payload": np.asarray(payload), "emax": np.asarray(emax)},
+        )
+
+    def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
+        out = plan.executables["decode"](
+            jnp.asarray(c.arrays["payload"]), jnp.asarray(c.arrays["emax"])
+        )
+        return out.astype(jnp.dtype(c.meta["dtype"]))
+
+    def decode_spec(self, c: Compressed) -> ReductionSpec:
+        return ReductionSpec.create(
+            self.name, c.meta["shape"], c.meta["dtype"], rate=int(c.meta["rate"])
+        )

@@ -1,0 +1,194 @@
+"""Portable HPDR byte container (v1 + v2) for compressed objects.
+
+A :class:`Compressed` is the method-tagged result of any registered codec:
+JSON-able ``meta`` plus named numpy ``arrays`` (the sections).  The byte
+layout is what the checkpoint manager, the serving engine's parked KV pages,
+and the I/O benchmarks read and write.
+
+v2 layout (written by default)::
+
+    offset 0   magic  b"HPDR"
+           4   uint32 version (= 2)
+           8   uint64 header length H
+          16   header JSON:
+                 method, meta,
+                 sections: {name: {dtype, shape, offset, nbytes}},
+                 payload_bytes, crc32        # crc32 of the whole payload
+        16+H   payload — sections back-to-back at their recorded offsets
+
+Per-section offsets make single-section reads (e.g. a progressive prefix or
+one array of a large stream) possible without parsing the other sections,
+and the checksum turns torn writes into loud :class:`ValueError`s instead of
+silently corrupt tensors.
+
+v1 (the seed format: sorted sections, implicit offsets, no checksum) is
+still read transparently; ``to_bytes(version=1)`` can still write it for
+compatibility tests.  Unknown versions and truncated streams raise
+``ValueError`` — the version field is never ignored.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import math
+import zlib
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+MAGIC = b"HPDR"
+CONTAINER_VERSION = 2
+_HEADER_FIXED = 16  # magic + version + header-length words
+
+
+def _jsonable(d: dict) -> dict:
+    out = {}
+    for k, v in d.items():
+        if isinstance(v, (np.integer,)):
+            v = int(v)
+        elif isinstance(v, (np.floating,)):
+            v = float(v)
+        elif isinstance(v, tuple):
+            v = list(v)
+        out[k] = v
+    return out
+
+
+@dataclass
+class Compressed:
+    """Method-tagged compressed object with byte (de)serialization."""
+
+    method: str
+    meta: dict[str, Any]
+    arrays: dict[str, np.ndarray]
+
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in self.arrays.values())
+
+    def ratio(self) -> float:
+        orig = math.prod(self.meta["shape"]) * np.dtype(self.meta["dtype"]).itemsize
+        return orig / max(self.nbytes(), 1)
+
+    # -- portable byte format (used by checkpoint/I-O layers) ---------------
+
+    def to_bytes(self, version: int = CONTAINER_VERSION) -> bytes:
+        if version == 1:
+            return self._to_bytes_v1()
+        if version != 2:
+            raise ValueError(f"cannot write container version {version}")
+        names = sorted(self.arrays)
+        sections: dict[str, dict] = {}
+        payload = io.BytesIO()
+        for n in names:
+            raw = np.ascontiguousarray(self.arrays[n]).tobytes()
+            sections[n] = {
+                "dtype": str(self.arrays[n].dtype),
+                "shape": list(self.arrays[n].shape),
+                "offset": payload.tell(),
+                "nbytes": len(raw),
+            }
+            payload.write(raw)
+        pbytes = payload.getvalue()
+        header = {
+            "method": self.method,
+            "meta": _jsonable(self.meta),
+            "sections": sections,
+            "payload_bytes": len(pbytes),
+            "crc32": zlib.crc32(pbytes) & 0xFFFFFFFF,
+        }
+        hbytes = json.dumps(header).encode()
+        buf = io.BytesIO()
+        buf.write(MAGIC)
+        buf.write(np.uint32(2).tobytes())
+        buf.write(np.uint64(len(hbytes)).tobytes())
+        buf.write(hbytes)
+        buf.write(pbytes)
+        return buf.getvalue()
+
+    def _to_bytes_v1(self) -> bytes:
+        buf = io.BytesIO()
+        names = sorted(self.arrays)
+        header = {
+            "method": self.method,
+            "meta": _jsonable(self.meta),
+            "arrays": {
+                n: {"dtype": str(self.arrays[n].dtype), "shape": list(self.arrays[n].shape)}
+                for n in names
+            },
+        }
+        hbytes = json.dumps(header).encode()
+        buf.write(MAGIC)
+        buf.write(np.uint32(1).tobytes())
+        buf.write(np.uint64(len(hbytes)).tobytes())
+        buf.write(hbytes)
+        for n in names:
+            buf.write(np.ascontiguousarray(self.arrays[n]).tobytes())
+        return buf.getvalue()
+
+    @classmethod
+    def from_bytes(cls, raw: bytes) -> "Compressed":
+        raw = bytes(raw)
+        if len(raw) < _HEADER_FIXED:
+            raise ValueError(
+                f"truncated HPDR stream: {len(raw)} bytes < {_HEADER_FIXED}-byte header"
+            )
+        if raw[:4] != MAGIC:
+            raise ValueError("not an HPDR stream")
+        version = int(np.frombuffer(raw[4:8], np.uint32)[0])
+        if version not in (1, 2):
+            raise ValueError(
+                f"unsupported HPDR container version {version} (supported: 1, 2)"
+            )
+        hlen = int(np.frombuffer(raw[8:16], np.uint64)[0])
+        if len(raw) < _HEADER_FIXED + hlen:
+            raise ValueError("truncated HPDR stream: incomplete header")
+        try:
+            header = json.loads(raw[_HEADER_FIXED : _HEADER_FIXED + hlen].decode())
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise ValueError(f"corrupt HPDR header: {e}") from e
+        if version == 1:
+            return cls._from_bytes_v1(raw, header, _HEADER_FIXED + hlen)
+        return cls._from_bytes_v2(raw, header, _HEADER_FIXED + hlen)
+
+    @classmethod
+    def _from_bytes_v1(cls, raw: bytes, header: dict, off: int) -> "Compressed":
+        arrays = {}
+        for n in sorted(header["arrays"]):
+            spec = header["arrays"][n]
+            dt = np.dtype(spec["dtype"])
+            count = math.prod(spec["shape"]) if spec["shape"] else 1
+            nb = count * dt.itemsize
+            if off + nb > len(raw):
+                raise ValueError(
+                    f"truncated HPDR stream: section {n!r} needs {nb} bytes "
+                    f"at offset {off}, stream has {len(raw)}"
+                )
+            arrays[n] = np.frombuffer(raw[off : off + nb], dt).reshape(spec["shape"])
+            off += nb
+        return cls(method=header["method"], meta=header["meta"], arrays=arrays)
+
+    @classmethod
+    def _from_bytes_v2(cls, raw: bytes, header: dict, base: int) -> "Compressed":
+        pbytes = header["payload_bytes"]
+        if base + pbytes > len(raw):
+            raise ValueError(
+                f"truncated HPDR stream: payload needs {pbytes} bytes, "
+                f"stream has {len(raw) - base} after header"
+            )
+        payload = raw[base : base + pbytes]
+        crc = zlib.crc32(payload) & 0xFFFFFFFF
+        if crc != header["crc32"]:
+            raise ValueError(
+                f"corrupt HPDR payload: crc32 {crc:#010x} != recorded "
+                f"{header['crc32']:#010x}"
+            )
+        arrays = {}
+        for n, spec in header["sections"].items():
+            dt = np.dtype(spec["dtype"])
+            lo, hi = spec["offset"], spec["offset"] + spec["nbytes"]
+            if hi > pbytes:
+                raise ValueError(f"corrupt HPDR stream: section {n!r} out of bounds")
+            arrays[n] = np.frombuffer(payload[lo:hi], dt).reshape(spec["shape"])
+        return cls(method=header["method"], meta=header["meta"], arrays=arrays)

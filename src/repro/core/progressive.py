@@ -27,8 +27,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import huffman, mgard
+from . import api, huffman, mgard
+from .codecs.base import ReductionSpec
 from .quantize import signed_to_unsigned, unsigned_to_signed
+
+
+def _mgard_plan(shape: tuple[int, ...], dtype, error_bound: float, dict_size: int):
+    """CMM-cached MGARD plan — shared with the compression API's contexts,
+    so refactoring and plain compression of the same field reuse one set of
+    jitted executables and one persistent level map."""
+    spec = ReductionSpec.create(
+        "mgard", shape, dtype,
+        error_bound=float(error_bound), relative=False, dict_size=int(dict_size),
+    )
+    return api.get_plan(spec)
 
 
 @dataclass
@@ -55,14 +67,16 @@ def refactor(
 ) -> ProgressiveStream:
     """MGARD decomposition refactored into per-level entropy segments."""
     shape = tuple(data.shape)
-    coeffs = mgard.decompose(data, shape)
-    padded = tuple(coeffs.shape)
-    lmap = mgard.level_map(padded)
-    L = mgard.total_levels(padded)
+    plan = _mgard_plan(shape, data.dtype, error_bound, dict_size)
+    coeffs = plan.executables["decompose"](data)
+    padded = plan.meta["padded"]
+    L = plan.meta["L"]
+    lmap = np.asarray(plan.workspace["lmap"])
     bins = mgard.level_bins(error_bound, L)
     q = np.asarray(
-        mgard._quantize_stage(coeffs, jnp.asarray(lmap), jnp.asarray(bins, jnp.float32),
-                              padded, dict_size)[0]
+        plan.executables["quantize"](
+            coeffs, plan.workspace["lmap"], jnp.asarray(bins, jnp.float32)
+        )[0]
     )
     u = np.asarray(signed_to_unsigned(jnp.asarray(q))).reshape(-1)
     escape = dict_size - 1
@@ -99,7 +113,8 @@ def retrieve(stream: ProgressiveStream, n_segments: int | None = None) -> jax.Ar
     if n_segments is None:
         n_segments = len(stream.segments)
     n_segments = max(1, min(n_segments, len(stream.segments)))
-    lmap = mgard.level_map(stream.padded)
+    plan = _mgard_plan(stream.shape, "float32", stream.error_bound, stream.dict_size)
+    lmap = np.asarray(plan.workspace["lmap"])
     flat_lmap = lmap.reshape(-1)
     q = np.zeros(int(np.prod(stream.padded)), np.int32)
     loaded_levels = set()
@@ -113,13 +128,11 @@ def retrieve(stream: ProgressiveStream, n_segments: int | None = None) -> jax.Ar
     if stream.outlier_idx.size:
         mask = np.isin(flat_lmap[stream.outlier_idx], list(loaded_levels))
         q[stream.outlier_idx[mask]] = stream.outlier_val[mask]
-    from .quantize import dequantize_by_subset
-
-    coeffs = dequantize_by_subset(
-        jnp.asarray(q.reshape(stream.padded)), jnp.asarray(lmap),
+    coeffs = plan.executables["dequantize"](
+        jnp.asarray(q.reshape(stream.padded)), plan.workspace["lmap"],
         jnp.asarray(stream.bins, jnp.float32),
     )
-    return mgard.recompose(coeffs, stream.shape)
+    return plan.executables["recompose"](coeffs)
 
 
 def error_curve(stream: ProgressiveStream, data: np.ndarray) -> list[dict]:

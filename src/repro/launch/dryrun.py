@@ -113,7 +113,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
         counts = roofline.count_params(params_shape)
         record["param_counts"] = counts
 
-        with jax.set_mesh(mesh):  # ambient mesh: activation constraints resolve
+        from repro.launch.mesh import use_mesh
+
+        with use_mesh(mesh):  # ambient mesh: activation constraints resolve
             if shape.kind == "train":
                 # opt variant for FSDP giants: bf16 moments (memory-roofline lever)
                 moment_dtype = "bfloat16" if (variant == "opt" and cfg.fsdp) else "float32"
@@ -144,7 +146,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
 
         mem = compiled.memory_analysis()
         print(mem)   # proves it fits (per-device bytes)
-        cost = compiled.cost_analysis()
+        cost = hlo_analysis.cost_analysis_dict(compiled)
         print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
         record["memory"] = _mem_dict(mem)
         record["cost"] = {

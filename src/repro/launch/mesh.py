@@ -10,14 +10,41 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _axis_type_kwargs(n: int) -> dict:
+    """``axis_types`` keyword for ``jax.make_mesh``, when this JAX has it.
+
+    ``jax.sharding.AxisType`` (and the matching ``axis_types=`` parameter)
+    only exist on newer JAX; on 0.4.x every mesh axis is implicitly Auto, so
+    omitting the keyword is behaviour-identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Version-portable ``jax.make_mesh`` with Auto axis types."""
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
+
+
+def use_mesh(mesh):
+    """Context manager that activates ``mesh`` as ambient default.
+
+    Newer JAX spells this ``jax.set_mesh``; on 0.4.x the ``Mesh`` object is
+    its own context manager with the same effect for jit/pjit name
+    resolution.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(n_data: int = 2, n_model: int = 2):
@@ -25,4 +52,4 @@ def make_test_mesh(n_data: int = 2, n_model: int = 2):
     n = len(jax.devices())
     n_data = min(n_data, n)
     n_model = min(n_model, max(1, n // n_data))
-    return jax.make_mesh((n_data, n_model), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((n_data, n_model), ("data", "model"))

@@ -23,6 +23,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..core.context import GLOBAL_CMM, ReductionContext, context_key
+
 BLOCK = 256
 
 
@@ -56,6 +58,30 @@ def dequantize_blocks(
     return flat[:n].reshape(shape).astype(dtype)
 
 
+def _ef_core(grad: jax.Array, residual: jax.Array, bits: int):
+    corrected = grad.astype(jnp.float32) + residual
+    q, s = quantize_blocks(corrected, bits)
+    approx = dequantize_blocks(q, s, grad.shape)
+    return (q, s), corrected - approx
+
+
+def _ef_plan(shape: tuple[int, ...], dtype, bits: int):
+    """CMM-cached jitted EF executable, one per (shape, dtype, bits).
+
+    The optimizer's per-step gradient compression is exactly the repeated
+    same-characteristics reduction the paper's CMM targets: the plan (jitted
+    quantize/dequantize round-trip) is built once and reused every step.
+    """
+    key = context_key("grad-ef", shape, dtype, bits=bits)
+
+    def build():
+        return ReductionContext(
+            key=key, plan=jax.jit(partial(_ef_core, bits=bits))
+        )
+
+    return GLOBAL_CMM.get_or_create(key, build).plan
+
+
 def compress_decompress(g: jax.Array, bits: int = 8) -> jax.Array:
     """Round-trip (for error-feedback residual computation)."""
     q, s = quantize_blocks(g, bits)
@@ -63,11 +89,16 @@ def compress_decompress(g: jax.Array, bits: int = 8) -> jax.Array:
 
 
 def ef_step(grad: jax.Array, residual: jax.Array, bits: int = 8):
-    """Error feedback: compress (grad + residual), return (compressed, new_residual)."""
-    corrected = grad.astype(jnp.float32) + residual
-    q, s = quantize_blocks(corrected, bits)
-    approx = dequantize_blocks(q, s, grad.shape)
-    return (q, s), corrected - approx
+    """Error feedback: compress (grad + residual), return (compressed, new_residual).
+
+    Outside a trace this dispatches through the CMM-cached jitted plan;
+    inside jit/shard_map it inlines (the enclosing program is the plan).
+    """
+    if isinstance(grad, jax.core.Tracer) or isinstance(residual, jax.core.Tracer):
+        return _ef_core(grad, residual, bits)
+    return _ef_plan(tuple(grad.shape), str(jnp.asarray(grad).dtype), bits)(
+        grad, residual
+    )
 
 
 def pod_compressed_mean(

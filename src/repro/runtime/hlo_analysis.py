@@ -219,3 +219,16 @@ def parse_collectives_scaled(hlo_text: str) -> HloCollectives:
             agg.result_bytes += st.result_bytes
             agg.link_bytes += st.link_bytes
     return out
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized across JAX versions.
+
+    JAX 0.4.x returns a one-element list of per-program dicts; newer JAX
+    returns the dict directly.  Either way the result here is a plain dict
+    (empty when XLA reports nothing).
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}

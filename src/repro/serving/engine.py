@@ -114,51 +114,23 @@ class ServingEngine:
 # ---------------------------------------------------------------------------
 
 
-def _as_3d(flat: np.ndarray) -> np.ndarray:
-    """Flat → (n, 32, 32) (pad to 1024-multiples): ZFP blocks become 4³ so the
-    per-block emax header is amortised over 64 values instead of 4."""
-    x = flat.reshape(-1)
-    pad = (-x.size) % 1024
-    if pad:
-        x = np.pad(x, (0, pad), mode="edge")
-    return x.reshape(-1, 32, 32)
-
-
 def compress_kv_cache(cache: Any, rate: int = 12) -> tuple[Any, dict]:
-    """ZFP-X fixed-rate compression of float cache leaves (park a session)."""
-    comp = {}
-    stats = {"raw": 0, "compressed": 0}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
-        key = "/".join(str(getattr(e, "key", getattr(e, "idx", ""))) for e in path)
-        arr = np.asarray(leaf)
-        stats["raw"] += arr.nbytes
+    """ZFP-X fixed-rate compression of float cache leaves (park a session).
+
+    Thin policy over :func:`api.compress_pytree`: sizable float pages go
+    through the ZFP codec (4³ re-blocked, plan cached in the CMM so parking
+    session N+1 reuses session N's jitted executables); everything else is
+    passed through raw.
+    """
+
+    def select(key: str, arr: np.ndarray):
+        del key
         if arr.dtype.kind == "f" and arr.size >= 4096:
-            x = _as_3d(arr.astype(np.float32))
-            c = api.compress(jnp.asarray(x), "zfp", rate=rate)
-            c.meta["orig_dtype"] = str(arr.dtype)
-            c.meta["orig_shape"] = list(arr.shape)
-            comp[key] = c
-            stats["compressed"] += c.nbytes()
-        else:
-            comp[key] = arr
-            stats["compressed"] += arr.nbytes
-    stats["ratio"] = stats["raw"] / max(stats["compressed"], 1)
-    return comp, stats
+            return "zfp", {"rate": rate}
+        return None
+
+    return api.compress_pytree(cache, select)
 
 
 def decompress_kv_cache(comp: Any, like: Any) -> Any:
-    flat = {}
-    for key, val in comp.items():
-        if isinstance(val, api.Compressed):
-            shape = tuple(val.meta["orig_shape"])
-            n = int(np.prod(shape))
-            arr = np.asarray(api.decompress(val)).reshape(-1)[:n]
-            flat[key] = arr.astype(np.dtype(val.meta["orig_dtype"])).reshape(shape)
-        else:
-            flat[key] = val
-    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
-    out = []
-    for path, leaf in leaves_with_path:
-        key = "/".join(str(getattr(e, "key", getattr(e, "idx", ""))) for e in path)
-        out.append(jnp.asarray(flat[key]))
-    return jax.tree_util.tree_unflatten(treedef, out)
+    return api.decompress_pytree(comp, like)

@@ -1,0 +1,156 @@
+"""Offline stand-in for ``hypothesis`` (wired by ``conftest.py``).
+
+When the real package is unavailable, this module registers itself in
+``sys.modules`` under the name ``hypothesis`` so the property-test modules
+still collect and run.  ``@given`` then executes each test on a small fixed
+set of deterministically drawn examples (always including the strategy's
+boundary values), which keeps the property tests meaningful as smoke tests
+without the shrinking/database machinery.
+
+Only the strategy surface this repo uses is implemented: ``integers``,
+``floats``, ``booleans``, ``sampled_from``, ``lists``.  Set
+``HPDR_SHIM_EXAMPLES`` to change the per-test example count (default 5).
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import sys
+import types
+
+_DEFAULT_EXAMPLES = int(os.environ.get("HPDR_SHIM_EXAMPLES", "5"))
+
+
+class _Strategy:
+    """Base strategy: ``boundary()`` examples first, then random draws."""
+
+    def boundary(self):
+        return []
+
+    def draw(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def boundary(self):
+        return [self.lo, self.hi] if self.lo != self.hi else [self.lo]
+
+    def draw(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value=0.0, max_value=1.0, **_kw):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def boundary(self):
+        return [self.lo, self.hi]
+
+    def draw(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(_Strategy):
+    def boundary(self):
+        return [False, True]
+
+    def draw(self, rng):
+        return rng.random() < 0.5
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def boundary(self):
+        return [self.elements[0], self.elements[-1]]
+
+    def draw(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements, min_size=0, max_size=10, **_kw):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = int(max_size) if max_size is not None else self.min_size + 10
+
+    def boundary(self):
+        # smallest list of boundary elements; a mid-size random one comes
+        # from draw()
+        elem = self.elements.boundary() or [self.elements.draw(random.Random(0))]
+        size = max(self.min_size, 1)
+        return [[elem[i % len(elem)] for i in range(size)]]
+
+    def draw(self, rng):
+        size = rng.randint(self.min_size, self.max_size)
+        return [self.elements.draw(rng) for _ in range(size)]
+
+
+def _examples(strategies, n):
+    """Deterministic example tuples: one all-lo, one all-hi, rest random."""
+    out = []
+    bounds = [s.boundary() for s in strategies]
+    if all(bounds):
+        out.append(tuple(b[0] for b in bounds))
+        hi = tuple(b[-1] for b in bounds)
+        if hi != out[0]:
+            out.append(hi)
+    rng = random.Random(0x5EED)
+    while len(out) < n:
+        out.append(tuple(s.draw(rng) for s in strategies))
+    return out[:n]
+
+
+def given(*strategies, **kw_strategies):
+    if kw_strategies:
+        raise NotImplementedError("shim supports positional strategies only")
+
+    def deco(f):
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_EXAMPLES)
+            n = min(n, _DEFAULT_EXAMPLES)
+            for args in _examples(strategies, n):
+                f(*args)
+
+        # NB: no functools.wraps — a __wrapped__ attribute would make pytest
+        # re-discover the original signature and demand fixtures for the
+        # drawn arguments.
+        wrapper.__name__ = f.__name__
+        wrapper.__qualname__ = getattr(f, "__qualname__", f.__name__)
+        wrapper.__module__ = f.__module__
+        wrapper.__doc__ = f.__doc__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=f)
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(f):
+        f._shim_max_examples = max_examples
+        return f
+
+    return deco
+
+
+def _install() -> None:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = _Integers
+    strategies.floats = _Floats
+    strategies.booleans = _Booleans
+    strategies.sampled_from = _SampledFrom
+    strategies.lists = _Lists
+    mod.strategies = strategies
+    mod.__is_hpdr_shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

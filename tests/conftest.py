@@ -4,6 +4,13 @@
 import numpy as np
 import pytest
 
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # offline image: run @given tests on fixed examples
+    import _hypothesis_compat
+
+    _hypothesis_compat._install()
+
 
 @pytest.fixture
 def rng():

@@ -68,8 +68,9 @@ def test_elastic_reshard_restore(tmp_path, rng):
         pytest.skip("no devices")
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("model",))
     mgr = CheckpointManager(tmp_path, CheckpointPolicy(exact=True))
     tree = {"w": rng.normal(size=(64, 64)).astype(np.float32)}
     mgr.save(1, tree)

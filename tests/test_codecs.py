@@ -1,0 +1,224 @@
+"""Codec registry, plan reuse, and v1/v2 container round-trips."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import api
+from repro.core.codecs import available_methods, get_codec
+from repro.core.codecs.base import ReductionPlan, ReductionSpec
+from repro.core.context import GLOBAL_CMM
+from conftest import smooth_field_3d
+
+ALL_METHODS = [
+    ("mgard", {"error_bound": 1e-2}),
+    ("zfp", {"rate": 12}),
+    ("huffman", {}),
+    ("huffman-bytes", {}),
+]
+
+
+def _data_for(method, rng):
+    if method == "huffman":
+        return np.minimum(np.abs(rng.normal(0, 10, 8192)).astype(np.int32), 255)
+    return smooth_field_3d(24)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_methods():
+    assert set(api.METHODS) <= set(available_methods())
+    for m in api.METHODS:
+        codec = get_codec(m)
+        assert codec.name == m
+
+
+def test_registry_unknown_method():
+    with pytest.raises(ValueError, match="unknown method"):
+        get_codec("lz77")
+    with pytest.raises(ValueError):
+        api.compress(jnp.zeros(4), "lz77")
+
+
+# ---------------------------------------------------------------------------
+# container round-trips (v1 + v2) for every registered method
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method,kw", ALL_METHODS)
+@pytest.mark.parametrize("version", [1, 2])
+def test_container_roundtrip_all_methods(method, kw, version, rng):
+    data = _data_for(method, rng)
+    c = api.compress(jnp.asarray(data), method, **kw)
+    c2 = api.Compressed.from_bytes(c.to_bytes(version=version))
+    assert c2.method == method
+    assert set(c2.arrays) == set(c.arrays)
+    out = np.asarray(api.decompress(c2))
+    ref = np.asarray(api.decompress(c))
+    np.testing.assert_array_equal(out, ref)
+    if method in ("huffman", "huffman-bytes"):
+        np.testing.assert_array_equal(out, data)
+    else:
+        vr = data.max() - data.min()
+        assert np.abs(out - data).max() <= 2e-2 * vr
+
+
+def test_container_rejects_unknown_version():
+    c = api.compress(jnp.zeros((8, 8), jnp.float32), "zfp", rate=8)
+    raw = bytearray(c.to_bytes())
+    raw[4:8] = np.uint32(7).tobytes()
+    with pytest.raises(ValueError, match="version 7"):
+        api.Compressed.from_bytes(bytes(raw))
+
+
+def test_container_rejects_truncation():
+    c = api.compress(jnp.zeros((8, 8), jnp.float32), "zfp", rate=8)
+    for version in (1, 2):
+        raw = c.to_bytes(version=version)
+        with pytest.raises(ValueError, match="truncated"):
+            api.Compressed.from_bytes(raw[:10])
+        with pytest.raises(ValueError, match="truncated"):
+            api.Compressed.from_bytes(raw[: len(raw) - 5])
+
+
+def test_container_rejects_bad_magic_and_corrupt_payload():
+    c = api.compress(jnp.ones((16,), jnp.float32), "zfp", rate=8)
+    raw = bytearray(c.to_bytes())
+    with pytest.raises(ValueError, match="not an HPDR stream"):
+        api.Compressed.from_bytes(b"XXXX" + bytes(raw[4:]))
+    raw[-1] ^= 0xFF  # flip a payload bit → checksum must catch it
+    with pytest.raises(ValueError, match="corrupt HPDR payload"):
+        api.Compressed.from_bytes(bytes(raw))
+
+
+# ---------------------------------------------------------------------------
+# plan reuse through the CMM
+# ---------------------------------------------------------------------------
+
+
+def test_plan_reuse_same_spec_is_cache_hit():
+    """Two compress() calls with one ReductionSpec share one cached plan."""
+    f = smooth_field_3d(16)
+    spec = api.make_spec(f, "zfp", rate=9)
+    GLOBAL_CMM.clear()
+    h0, m0 = GLOBAL_CMM.hit_count, GLOBAL_CMM.miss_count
+
+    api.encode(spec, jnp.asarray(f))
+    api.encode(spec, jnp.asarray(f))
+
+    assert GLOBAL_CMM.miss_count == m0 + 1  # plan built exactly once
+    assert GLOBAL_CMM.hit_count >= h0 + 1   # second call is a hit
+    ctx = GLOBAL_CMM.get_or_create(spec.key(), lambda: None)
+    plan = ctx.plan
+    assert isinstance(plan, ReductionPlan)
+    assert plan.spec == spec
+    assert callable(plan.executables["encode"])  # the jitted executable
+
+
+def test_compress_wrapper_builds_identical_specs():
+    """Equivalent keyword calls map to one spec → one CMM entry."""
+    f = smooth_field_3d(16)
+    GLOBAL_CMM.clear()
+    h0, m0 = GLOBAL_CMM.hit_count, GLOBAL_CMM.miss_count
+    api.compress(jnp.asarray(f), "zfp", rate=10)
+    api.compress(jnp.asarray(f), "zfp", rate=10, error_bound=0.5)  # irrelevant kw
+    assert GLOBAL_CMM.hit_count >= h0 + 1
+    assert GLOBAL_CMM.miss_count == m0 + 1
+
+
+def test_defaulted_and_explicit_specs_share_one_key():
+    """Omitted params are filled with codec defaults → one canonical key."""
+    f = smooth_field_3d(16)
+    assert api.make_spec(f, "zfp") == api.make_spec(f, "zfp", rate=16)
+    assert api.make_spec(f, "mgard") == api.make_spec(
+        f, "mgard", error_bound=1e-2, relative=True, dict_size=4096
+    )
+
+
+def test_cmm_accounts_workspace_bytes():
+    """Plan workspace buffers are visible to CMM byte accounting."""
+    f = smooth_field_3d(16)
+    GLOBAL_CMM.clear()
+    api.compress(jnp.asarray(f), "mgard", error_bound=1e-2)
+    assert GLOBAL_CMM.stats()["bytes"] > 0
+
+
+def test_mgard_plan_workspace_persists():
+    """The level map is a persistent workspace buffer, not rebuilt per call."""
+    f = smooth_field_3d(16)
+    spec = api.make_spec(f, "mgard", error_bound=1e-2, relative=True,
+                         dict_size=1024)
+    p1 = api.get_plan(spec)
+    api.encode(spec, jnp.asarray(f))
+    p2 = api.get_plan(spec)
+    assert p1 is p2
+    assert p1.workspace["lmap"] is p2.workspace["lmap"]
+    assert p1.nbytes() > 0
+
+
+def test_decode_spec_shares_plans_across_error_bounds():
+    """MGARD reconstruction plans depend only on geometry + dict size."""
+    f = smooth_field_3d(16)
+    c1 = api.compress(jnp.asarray(f), "mgard", error_bound=1e-2)
+    c2 = api.compress(jnp.asarray(f), "mgard", error_bound=1e-3)
+    codec = get_codec("mgard")
+    assert codec.decode_spec(c1) == codec.decode_spec(c2)
+
+
+# ---------------------------------------------------------------------------
+# pytree + streaming entry points
+# ---------------------------------------------------------------------------
+
+
+def test_compress_pytree_roundtrip(rng):
+    tree = {
+        "w": rng.normal(size=(64, 128)).astype(np.float32),
+        "small": rng.normal(size=(8,)).astype(np.float32),
+        "ids": np.arange(10, dtype=np.int32),
+        "nested": {"emb": rng.normal(size=(128, 64)).astype(np.float32)},
+    }
+    comp, stats = api.compress_pytree(tree)
+    assert stats["ratio"] > 1.0
+    assert stats["compressed_leaves"] == 2  # the two big float tensors
+    out = api.decompress_pytree(comp, tree)
+    import jax
+
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == b.shape and a.dtype == b.dtype
+        if b.dtype.kind != "f" or b.size < 4096:
+            np.testing.assert_array_equal(a, b)
+
+
+def test_compressor_stream_roundtrip_and_bytes():
+    data = smooth_field_3d(32)
+    stream = api.CompressorStream("zfp", mode="fixed", c_fixed_elems=8 * 32 * 32,
+                                  rate=16)
+    res = stream.compress(data)
+    assert len(res.chunks) > 1
+    out = stream.decompress(res)
+    assert out.shape == data.shape
+    assert np.abs(out - data).max() < 2e-3
+
+    blob = api.CompressorStream.to_bytes(res)
+    res2 = api.CompressorStream.from_bytes(blob)
+    np.testing.assert_array_equal(stream.decompress(res2), out)
+    with pytest.raises(ValueError):
+        api.CompressorStream.from_bytes(blob[: len(blob) // 2])
+
+
+def test_compressor_stream_chunks_hit_plan_cache():
+    data = smooth_field_3d(32)
+    stream = api.CompressorStream("zfp", mode="fixed", c_fixed_elems=8 * 32 * 32,
+                                  rate=7)
+    GLOBAL_CMM.clear()
+    h0, m0 = GLOBAL_CMM.hit_count, GLOBAL_CMM.miss_count
+    res = stream.compress(data)
+    # equal-shaped chunks share one spec → misses ≪ chunks
+    hits, misses = GLOBAL_CMM.hit_count - h0, GLOBAL_CMM.miss_count - m0
+    assert len(res.chunks) > 2
+    assert misses < len(res.chunks)
+    assert hits >= len(res.chunks) - misses

@@ -71,8 +71,9 @@ def test_pod_compressed_mean_shardmap():
         import pytest
 
         pytest.skip("needs >=2 devices")
-    mesh = jax.make_mesh((2,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2,), ("pod",))
     from jax.sharding import PartitionSpec as P
 
     g = jnp.arange(2 * 512, dtype=jnp.float32).reshape(2, 512) / 100.0
