@@ -7,24 +7,77 @@ Model: per-call device work t_k parallelises perfectly across G GPUs
 G = 1..6 reproduces the paper's 96% (CMM) vs 46–74% (baselines).
 
 Measured side: we time our API with a warm CMM (plan reuse) vs cold
-(fresh shapes each call, forcing re-trace/alloc) on CPU.
+(fresh shapes each call, forcing re-trace/alloc) on CPU, plus the
+execution-engine section: per-backend encode throughput and sharded
+pytree fan-out on the local ``data`` mesh, written to ``BENCH_engine.json``
+for the perf trajectory (``scripts/check.sh bench``).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
 from .common import Row, nyx_like
 from repro.core import api
+from repro.core.adapters import available_backends
+from repro.core.engine import ExecutionEngine
 
 
 def model_scalability(t_kernel: float, t_alloc: float, gpus: int) -> float:
     ideal = 1.0 / t_kernel * gpus
     real = gpus / (t_kernel + gpus * t_alloc)
     return real / ideal
+
+
+def engine_bench(out_path: str | Path = "BENCH_engine.json", n: int = 32) -> dict:
+    """Per-backend engine throughput on a 1×CPU (or local) ``data`` mesh.
+
+    Encodes a nyx-like field under every runnable backend through
+    ``ExecutionEngine`` plan-bound specs (warm CMM), plus the sharded
+    ``compress_pytree`` fan-out; emits Rows and writes the JSON artifact.
+    """
+    data = nyx_like(n)
+    report: dict = {"field_elems": int(data.size), "backends": {}}
+    with ExecutionEngine() as eng:
+        report["devices"] = len(eng.devices)
+        for backend in available_backends():
+            if backend == "pallas":  # compiled path needs TPU/GPU silicon
+                continue
+            spec = eng.make_spec(data, "zfp", rate=16, backend=backend)
+            eng.encode(spec, data)  # warm: plan build + compile
+            reps = 3 if backend == "xla" else 1
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                eng.encode(spec, data)
+            dt = (time.perf_counter() - t0) / reps
+            bps = data.nbytes / dt
+            report["backends"][backend] = {"encode_s": dt, "encode_bps": bps}
+            Row(f"fig16.engine.{backend}", dt * 1e6,
+                f"encode={bps/1e6:.1f}MB/s").emit()
+        tree = {f"w{i}": data.reshape(-1)[: 1 << 16].copy() for i in range(8)}
+        eng.compress_pytree(tree, select=lambda k, a: ("zfp", {"rate": 16}))
+        t0 = time.perf_counter()
+        _, stats = eng.compress_pytree(
+            tree, select=lambda k, a: ("zfp", {"rate": 16})
+        )
+        dt = time.perf_counter() - t0
+        report["pytree_fanout"] = {
+            "leaves": stats["leaves"], "buckets": stats["buckets"],
+            "sharded_leaves": stats["sharded_leaves"],
+            "devices": stats["devices"], "wall_s": dt,
+            "bps": stats["raw"] / dt,
+        }
+        Row("fig16.engine.pytree_fanout", dt * 1e6,
+            f"leaves={stats['leaves']} devices={stats['devices']} "
+            f"bps={stats['raw']/dt/1e6:.1f}MB/s").emit()
+    Path(out_path).write_text(json.dumps(report, indent=1))
+    return report
 
 
 def main() -> None:
@@ -52,7 +105,18 @@ def main() -> None:
     cold = (time.perf_counter() - t0) / len(cold_sizes)
     Row("fig16.measured_context_reuse", warm * 1e6,
         f"cold_over_warm={cold/warm:.1f}x (plan-cache hit vs rebuild)").emit()
+    engine_bench()
 
 
 if __name__ == "__main__":
-    main()
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="engine-only smoke run (1×CPU mesh)")
+    parser.add_argument("--out", default="BENCH_engine.json",
+                        help="engine JSON artifact path")
+    args = parser.parse_args()
+    if args.smoke:
+        print("name,us_per_call,derived")
+        engine_bench(args.out, n=24)
+    else:
+        main()

@@ -10,8 +10,11 @@ checkpoint stream, so every shard is pushed through the HPDR pipeline:
   * chunked through the HDEM double-buffered executor (overlaps compress
     with device→host fetch on real hardware);
   * CMM-cached compression contexts across checkpoint rounds;
-  * **async**: save runs on a background thread against a snapshot, so the
-    train loop's bubble is one device_get, not one filesystem round-trip;
+  * **engine-scheduled**: per-leaf compression fans out across the
+    execution engine's ``data``-axis devices (submit/result futures), and
+    ``save_async`` runs the whole save on the engine's ``io`` lane against a
+    snapshot — the train loop's bubble is one device_get, not one
+    filesystem round-trip;
   * **elastic restore**: arrays are resharded onto whatever mesh the restart
     runs with (`jax.device_put` with the new NamedSharding), so pod counts
     can change between runs.
@@ -22,7 +25,6 @@ Layout:  <dir>/step_<N>/manifest.json + <dir>/step_<N>/<leaf-path>.hpdr
 from __future__ import annotations
 
 import json
-import threading
 import time
 from dataclasses import dataclass
 from pathlib import Path
@@ -33,6 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import api
+from ..core import engine as engine_mod
+from ..runtime.executor import IO, Submission
 
 _SEP = "::"
 
@@ -76,12 +80,22 @@ def _decompress_leaf(raw: bytes) -> np.ndarray:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str | Path, policy: CheckpointPolicy | None = None):
+    def __init__(
+        self,
+        directory: str | Path,
+        policy: CheckpointPolicy | None = None,
+        engine: engine_mod.ExecutionEngine | None = None,
+    ):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.policy = policy or CheckpointPolicy()
-        self._async_thread: threading.Thread | None = None
+        self._engine = engine
+        self._pending: Submission | None = None
         self.last_report: dict | None = None
+
+    @property
+    def engine(self) -> engine_mod.ExecutionEngine:
+        return self._engine if self._engine is not None else engine_mod.default_engine()
 
     # ----------------------------------------------------------------- save
 
@@ -92,9 +106,25 @@ class CheckpointManager:
         step_dir.mkdir(parents=True, exist_ok=True)
         manifest = {"step": step, "extra": extra or {}, "leaves": {}}
         raw_total, comp_total = 0, 0
-        for key, arr in flat.items():
-            blob = _compress_leaf(arr, self.policy)
-            fname = key.replace(_SEP, "__") or "_root"
+        # Fan per-leaf compression out across the engine's data-axis devices
+        # (compute lane); bytes are written back in manifest order.
+        subs = [
+            (key, arr, self.engine.submit(_compress_leaf, arr, self.policy))
+            for key, arr in flat.items()
+        ]
+        used: set[str] = set()
+        for key, arr, sub in subs:
+            blob = sub.result()
+            # sanitize path separators (leaf names are not directories) and
+            # dedupe: distinct keys must never share a shard file — restore
+            # reads the key->file mapping from the manifest, so any
+            # injective name works
+            base = key.replace(_SEP, "__").replace("/", "_") or "_root"
+            fname, i = base, 2
+            while fname in used:
+                fname = f"{base}~{i}"
+                i += 1
+            used.add(fname)
             (step_dir / f"{fname}.hpdr").write_bytes(blob)
             manifest["leaves"][key] = {"file": f"{fname}.hpdr",
                                        "bytes": len(blob), "raw": arr.nbytes}
@@ -110,18 +140,25 @@ class CheckpointManager:
         self.last_report = manifest
         return manifest
 
-    def save_async(self, step: int, tree: Any, extra: dict | None = None) -> None:
-        """Snapshot to host, then compress+write off-thread (training continues)."""
+    def save_async(self, step: int, tree: Any, extra: dict | None = None) -> Submission:
+        """Snapshot to host, then compress+write on the engine's io lane.
+
+        The returned :class:`Submission` resolves to the manifest; training
+        continues immediately after the snapshot.  A previous in-flight save
+        is waited on first (saves serialize, matching the io lane's width).
+        """
         snapshot = jax.tree.map(np.asarray, tree)  # the only sync point
         self.wait()
-        self._async_thread = threading.Thread(
-            target=self.save, args=(step, snapshot, extra), daemon=True
+        self._pending = self.engine.submit(
+            self.save, step, snapshot, extra, lane=IO
         )
-        self._async_thread.start()
+        return self._pending
 
-    def wait(self) -> None:
-        if self._async_thread is not None and self._async_thread.is_alive():
-            self._async_thread.join()
+    def wait(self) -> dict | None:
+        if self._pending is not None:
+            pending, self._pending = self._pending, None
+            return pending.result()
+        return None
 
     # -------------------------------------------------------------- restore
 

@@ -61,6 +61,60 @@ def default_adapter() -> str:
     return XLA
 
 
+@functools.cache
+def available_backends() -> tuple[str, ...]:
+    """Adapters that can actually execute on the current platform.
+
+    ``pallas`` (compiled, ``interpret=False``) needs a Mosaic/Triton lowering
+    and is only runnable on TPU/GPU; ``xla`` and ``pallas_interpret`` run
+    everywhere.  This is the capability probe plan building uses to bind a
+    spec's ``backend`` before any kernel is traced.
+    """
+    platform = jax.devices()[0].platform
+    if platform in ("tpu", "gpu", "cuda", "rocm"):
+        return (XLA, PALLAS, PALLAS_INTERPRET)
+    return (XLA, PALLAS_INTERPRET)
+
+
+def resolve_backend(backend: str | None) -> str:
+    """Resolve a spec-level backend request to a concrete, runnable adapter.
+
+    ``auto``/``None`` picks the platform default; an explicit request is
+    validated against :func:`available_backends` so an unsupported backend
+    fails loudly at plan time instead of deep inside a kernel trace.
+    """
+    if backend is None or backend == AUTO:
+        return default_adapter()
+    if backend not in ADAPTERS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {(AUTO,) + ADAPTERS}"
+        )
+    if backend not in available_backends():
+        raise ValueError(
+            f"backend {backend!r} is not runnable on this platform "
+            f"(available: {available_backends()})"
+        )
+    return backend
+
+
+@functools.cache
+def supports_donation() -> bool:
+    """True where XLA implements input-output buffer aliasing (TPU/GPU)."""
+    return jax.devices()[0].platform in ("tpu", "gpu", "cuda", "rocm")
+
+
+def donating_jit(fn: Callable, *, donate_argnums: tuple[int, ...] = (), **jit_kwargs):
+    """``jax.jit`` that donates ``donate_argnums`` only where donation exists.
+
+    Plans route persistent workspace buffers through this so reuse is true
+    in-place recycling on TPU/GPU while CPU (donation unimplemented) avoids
+    a per-call "donated buffers were not usable" warning.
+    """
+    if supports_donation() and donate_argnums:
+        return jax.jit(fn, donate_argnums=donate_argnums, **jit_kwargs)
+    return jax.jit(fn, **jit_kwargs)
+
+
 def resolve(adapter: str | None) -> str:
     if adapter is None or adapter == AUTO:
         return default_adapter()

@@ -43,15 +43,17 @@ Methods
 
 from __future__ import annotations
 
+import dataclasses
 import io
 import json
 import math
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import adapters
 from . import pipeline as pl
 from .codecs import available_methods, get_codec
 from .codecs.base import Codec, ReductionPlan, ReductionSpec  # noqa: F401
@@ -74,7 +76,8 @@ def make_spec(data: Any, method: str, **params: Any) -> ReductionSpec:
 
     Parameters irrelevant to the codec are dropped and omitted ones filled
     with the codec's defaults, so equivalent calls produce identical specs
-    (and hit the same CMM entry).
+    (and hit the same CMM entry).  ``backend=`` selects the device adapter
+    the plan binds (``auto`` resolves to the platform default).
     """
     codec = get_codec(method)
     # NB: read dtype without materialising data — np.asarray on a device
@@ -108,10 +111,17 @@ def encode(spec: ReductionSpec, data: jax.Array | np.ndarray) -> Compressed:
     return get_codec(spec.method).encode(get_plan(spec), data)
 
 
-def decode(c: Compressed) -> jax.Array:
-    """Decompress a container (the decode-side plan is CMM-cached too)."""
+def decode(c: Compressed, backend: str | None = None) -> jax.Array:
+    """Decompress a container (the decode-side plan is CMM-cached too).
+
+    Any backend decodes any stream (portability contract); ``backend``
+    overrides the decode-side adapter, defaulting to the platform's best.
+    """
     codec = get_codec(c.method)
-    return codec.decode(get_plan(codec.decode_spec(c)), c)
+    spec = codec.decode_spec(c)
+    if backend is not None:
+        spec = dataclasses.replace(spec, backend=adapters.resolve_backend(backend))
+    return codec.decode(get_plan(spec), c)
 
 
 # ---------------------------------------------------------------------------
@@ -127,6 +137,7 @@ def compress(
     relative: bool = True,
     rate: int = 16,
     dict_size: int = 4096,
+    backend: str | None = None,
     adapter: str | None = None,
 ) -> Compressed:
     """Compress ``data`` with the selected pipeline.
@@ -135,13 +146,14 @@ def compress(
     (the paper's evaluation convention).  This is a convenience wrapper: it
     builds a :class:`ReductionSpec` and dispatches through the codec
     registry, so repeated same-shaped calls reuse one cached plan.
+    ``backend`` (alias: the legacy ``adapter`` keyword) binds the plan's
+    device adapter; default ``auto``.
     """
-    del adapter  # plumbed through kernels' ops.py; the jnp path is portable
     data = jnp.asarray(data)
     spec = make_spec(
         data, method,
         error_bound=error_bound, relative=relative, rate=rate,
-        dict_size=dict_size,
+        dict_size=dict_size, backend=backend or adapter or adapters.AUTO,
     )
     return encode(spec, data)
 
@@ -165,32 +177,48 @@ def as_blocked_3d(flat: np.ndarray) -> np.ndarray:
     return x.reshape(-1, 32, 32)
 
 
-def compress_leaf(arr: np.ndarray, method: str, **params: Any) -> Compressed:
-    """Compress one tensor with the shared shape/dtype policy.
+def leaf_policy(
+    arr: np.ndarray, method: str, params: dict | None = None
+) -> tuple[np.ndarray, str, dict]:
+    """Shared shape/dtype policy: ``(array, method, params)`` to compress.
 
     bfloat16 is cast to float32 for the lossy codecs, ZFP inputs are
     re-blocked to 4³-friendly (n, 32, 32), >4-D or 0-D MGARD inputs are
-    flattened, and anything sent to ``huffman-bytes`` is stored bit-exact.
-    The original dtype/shape ride along in ``meta`` for
-    :func:`decompress_leaf`.
+    flattened, and anything not lossy-eligible becomes a ``huffman-bytes``
+    byte view.  Split out of :func:`compress_leaf` so the execution engine
+    can bucket leaves by their *post-policy* spec before fanning out.
     """
     arr = np.asarray(arr)
-    x = arr
+    params = dict(params or {})
     if method in ("zfp", "mgard"):
+        x = arr
         if x.dtype != np.float32 and x.dtype.kind in ("f", "V"):
             x = x.astype(np.float32)
         if method == "zfp":
             x = as_blocked_3d(x)
         elif x.ndim > 4 or x.ndim == 0:
             x = x.reshape(-1)
-        c = compress(jnp.asarray(x), method, **params)
-    else:
-        c = compress(
-            jnp.asarray(np.ascontiguousarray(arr).view(np.uint8)), "huffman-bytes"
-        )
+        return x, method, params
+    return np.ascontiguousarray(arr).view(np.uint8), "huffman-bytes", {}
+
+
+def finish_leaf_meta(c: Compressed, arr: np.ndarray) -> Compressed:
+    """Record the pre-policy dtype/shape for :func:`decompress_leaf`."""
     c.meta["orig_dtype"] = str(arr.dtype)
     c.meta["orig_shape"] = list(arr.shape)
     return c
+
+
+def compress_leaf(arr: np.ndarray, method: str, **params: Any) -> Compressed:
+    """Compress one tensor with the shared shape/dtype policy.
+
+    The original dtype/shape ride along in ``meta`` for
+    :func:`decompress_leaf`; see :func:`leaf_policy` for the policy itself.
+    """
+    arr = np.asarray(arr)
+    x, pol_method, pol_params = leaf_policy(arr, method, params)
+    c = compress(jnp.asarray(x), pol_method, **pol_params)
+    return finish_leaf_meta(c, arr)
 
 
 def decompress_leaf(c: Compressed) -> np.ndarray:
@@ -227,45 +255,35 @@ def compress_pytree(
     select: Callable[[str, np.ndarray], tuple[str, dict] | None] | None = None,
     *,
     sep: str = "/",
+    engine: Any = None,
 ) -> tuple[dict[str, Any], dict]:
-    """Compress every selected leaf of a pytree.
+    """Compress every selected leaf of a pytree, sharded across devices.
 
     ``select(key, arr)`` returns ``(method, params)`` to compress a leaf or
     ``None`` to pass it through raw.  Returns ``(flat, stats)`` where
     ``flat`` maps path keys to :class:`Compressed` or raw arrays — identical
     shapes/dtypes restore via :func:`decompress_pytree`.
+
+    Execution runs on an :class:`~repro.core.engine.ExecutionEngine`
+    (default: the process-wide engine over every local device on one
+    ``data`` axis): leaves are bucketed by post-policy spec — one plan build
+    per shape-dtype bucket, every further leaf a CMM hit — and buckets fan
+    out over the mesh's ``data``-axis devices.
     """
-    select = select or default_select
-    flat: dict[str, Any] = {}
-    stats = {"raw": 0, "compressed": 0, "leaves": 0, "compressed_leaves": 0}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _path_key(path, sep)
-        arr = np.asarray(leaf)
-        stats["raw"] += arr.nbytes
-        stats["leaves"] += 1
-        choice = select(key, arr)
-        if choice is None:
-            flat[key] = arr
-            stats["compressed"] += arr.nbytes
-            continue
-        method, params = choice
-        c = compress_leaf(arr, method, **params)
-        flat[key] = c
-        stats["compressed"] += c.nbytes()
-        stats["compressed_leaves"] += 1
-    stats["ratio"] = stats["raw"] / max(stats["compressed"], 1)
-    return flat, stats
+    from . import engine as engine_mod  # runtime import: peer layer
+
+    eng = engine if engine is not None else engine_mod.default_engine()
+    return eng.compress_pytree(tree, select, sep=sep)
 
 
-def decompress_pytree(comp: dict[str, Any], like: Any, *, sep: str = "/") -> Any:
+def decompress_pytree(
+    comp: dict[str, Any], like: Any, *, sep: str = "/", engine: Any = None
+) -> Any:
     """Rebuild the pytree ``like`` from :func:`compress_pytree` output."""
-    flat = {
-        key: decompress_leaf(val) if isinstance(val, Compressed) else val
-        for key, val in comp.items()
-    }
-    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
-    out = [jnp.asarray(flat[_path_key(path, sep)]) for path, _leaf in leaves_with_path]
-    return jax.tree_util.tree_unflatten(treedef, out)
+    from . import engine as engine_mod
+
+    eng = engine if engine is not None else engine_mod.default_engine()
+    return eng.decompress_pytree(comp, like, sep=sep)
 
 
 # ---------------------------------------------------------------------------
@@ -280,7 +298,8 @@ class CompressorStream:
     the first hits the CMM plan cache — the chunk-pipelined analogue of the
     paper's per-call context reuse.  ``to_bytes``/``from_bytes`` frame the
     per-chunk containers with an offset index so chunks can be located (and
-    eventually fetched) independently.
+    fetched lazily) independently.  Passing ``engine=`` schedules chunks
+    round-robin across the engine's ``data``-axis devices.
     """
 
     def __init__(
@@ -293,10 +312,15 @@ class CompressorStream:
         c_limit_elems: int = 1 << 28,
         phi=None,
         theta=None,
+        engine: Any = None,
+        backend: str | None = None,
         **params: Any,
     ):
         self.method = method
         self.params = params
+        if backend is None and engine is not None:
+            backend = engine.backend
+        self.backend = backend or adapters.AUTO
         self.pipeline = pl.ChunkedPipeline(
             self._encode_chunk,
             mode=mode,
@@ -305,10 +329,14 @@ class CompressorStream:
             c_limit_elems=c_limit_elems,
             phi=phi,
             theta=theta,
+            devices=engine.devices if engine is not None else None,
         )
 
     def _encode_chunk(self, chunk: jax.Array) -> Compressed:
-        return encode(make_spec(chunk, self.method, **self.params), chunk)
+        return encode(
+            make_spec(chunk, self.method, backend=self.backend, **self.params),
+            chunk,
+        )
 
     def compress(self, data: np.ndarray) -> pl.ChunkedResult:
         return self.pipeline.run(np.asarray(data))
@@ -346,7 +374,16 @@ class CompressorStream:
         return buf.getvalue()
 
     @staticmethod
-    def from_bytes(raw: bytes) -> pl.ChunkedResult:
+    def from_bytes(raw: bytes, lazy: bool = True) -> pl.ChunkedResult:
+        """Parse a framed stream; chunks are fetched lazily by default.
+
+        Framing and every chunk's byte range are validated eagerly (a
+        truncated stream raises here), but the per-chunk containers are only
+        materialised on first access via the v2 per-section offsets — a
+        reader restoring a prefix never touches the tail's bytes
+        (progressive restore while the tail is still in flight).
+        ``lazy=False`` restores the historical eager behaviour.
+        """
         raw = bytes(raw)
         if len(raw) < 16 or raw[:4] != _STREAM_MAGIC:
             raise ValueError("not an HPDR chunked stream")
@@ -358,16 +395,52 @@ class CompressorStream:
             raise ValueError("truncated HPDR chunked stream")
         header = json.loads(raw[16 : 16 + hlen].decode())
         base = 16 + hlen
-        chunks = []
+        ranges = []
         for entry in header["chunks"]:
             lo = base + entry["offset"]
             hi = lo + entry["nbytes"]
             if hi > len(raw):
                 raise ValueError("truncated HPDR chunked stream")
-            chunks.append(Compressed.from_bytes(raw[lo:hi]))
+            ranges.append((lo, hi))
+        chunks: Sequence = LazyChunks(raw, ranges)
+        if not lazy:
+            chunks = list(chunks)
         return pl.ChunkedResult(
             chunks=chunks,
             boundaries=list(header["boundaries"]),
             axis=int(header["axis"]),
             shape=tuple(header["shape"]),
         )
+
+
+class LazyChunks(Sequence):
+    """Sequence of per-chunk containers, parsed on first access.
+
+    Backed by the framed stream's byte buffer and the header's offset
+    index; ``materialized`` counts how many chunks have actually been
+    decoded from bytes (the observable for laziness tests).
+    """
+
+    def __init__(self, raw: bytes, ranges: list[tuple[int, int]]):
+        self._raw = raw
+        self._ranges = ranges
+        self._cache: list[Compressed | None] = [None] * len(ranges)
+
+    def __len__(self) -> int:
+        return len(self._ranges)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[j] for j in range(*i.indices(len(self)))]
+        if i < 0:
+            i += len(self)
+        if not 0 <= i < len(self):
+            raise IndexError(i)
+        if self._cache[i] is None:
+            lo, hi = self._ranges[i]
+            self._cache[i] = Compressed.from_bytes(self._raw[lo:hi])
+        return self._cache[i]
+
+    @property
+    def materialized(self) -> int:
+        return sum(c is not None for c in self._cache)

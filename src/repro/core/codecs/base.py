@@ -20,33 +20,50 @@ identical spec is a cache hit.
 
 from __future__ import annotations
 
+import dataclasses
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
 import jax
 
+from .. import adapters
 from ..container import Compressed
 from ..context import context_key
 
 
 @dataclass(frozen=True)
 class ReductionSpec:
-    """Hashable description of one reduction: method + data characteristics."""
+    """Hashable description of one reduction: method + data characteristics.
+
+    ``backend`` names the device adapter the plan's executables are bound to
+    (``auto`` | ``xla`` | ``pallas`` | ``pallas_interpret``).  ``auto``
+    resolves to the platform default through :func:`adapters.resolve_backend`
+    capability probing, so a defaulted spec and an explicit platform-default
+    spec share one CMM entry.
+    """
 
     method: str
     shape: tuple[int, ...]
     dtype: str
     params: tuple[tuple[str, Any], ...] = ()
+    backend: str = adapters.AUTO
 
     @classmethod
     def create(
-        cls, method: str, shape: tuple[int, ...], dtype: Any, **params: Any
+        cls,
+        method: str,
+        shape: tuple[int, ...],
+        dtype: Any,
+        backend: str = adapters.AUTO,
+        **params: Any,
     ) -> "ReductionSpec":
         return cls(
             method=method,
             shape=tuple(int(n) for n in shape),
             dtype=str(dtype),
             params=tuple(sorted(params.items())),
+            backend=str(backend),
         )
 
     def param(self, name: str, default: Any = None) -> Any:
@@ -55,9 +72,20 @@ class ReductionSpec:
                 return v
         return default
 
+    def resolved(self) -> "ReductionSpec":
+        """This spec with ``backend`` bound to a concrete, runnable adapter."""
+        concrete = adapters.resolve_backend(self.backend)
+        if concrete == self.backend:
+            return self
+        return dataclasses.replace(self, backend=concrete)
+
     def key(self) -> tuple:
-        """Canonical CMM hash key for this spec."""
-        return context_key(self.method, self.shape, self.dtype, **dict(self.params))
+        """Canonical CMM hash key for this spec (backend-resolved)."""
+        return context_key(
+            self.method, self.shape, self.dtype,
+            backend=adapters.resolve_backend(self.backend),
+            **dict(self.params),
+        )
 
 
 @dataclass
@@ -65,19 +93,28 @@ class ReductionPlan:
     """A built plan: jitted executables + persistent workspace buffers.
 
     ``executables`` maps stage name → jitted callable with the spec's static
-    arguments already bound (tracing/compilation happens once per plan).
-    ``workspace`` holds device/host arrays that are data-independent for the
-    spec (level maps, bin layouts, block permutations) — the paper's
-    persistent context allocations.
+    arguments already bound (tracing/compilation happens once per plan) and
+    the spec's ``backend`` adapter baked in — kernel dispatch happens at plan
+    time, never per call.  ``workspace`` holds device/host arrays that are
+    data-independent for the spec (level maps, bin layouts, permutations) —
+    the paper's persistent context allocations.  Executables that *donate* a
+    workspace buffer return the recycled buffer; callers re-store it under
+    :meth:`recycle` while holding :attr:`lock` (plans are shared across
+    engine worker threads).
     """
 
     spec: ReductionSpec
     executables: dict[str, Callable] = field(default_factory=dict)
     workspace: dict[str, Any] = field(default_factory=dict)
     meta: dict[str, Any] = field(default_factory=dict)
+    lock: Any = field(default_factory=threading.Lock, repr=False, compare=False)
 
     def nbytes(self) -> int:
         return sum(int(getattr(b, "nbytes", 0)) for b in self.workspace.values())
+
+    def recycle(self, name: str, buf: Any) -> None:
+        """Re-store a donated-and-returned workspace buffer."""
+        self.workspace[name] = buf
 
 
 class Codec:
@@ -103,10 +140,13 @@ class Codec:
 
         Irrelevant kwargs are dropped and missing ones filled with the
         codec's defaults, so a defaulted call and an explicit-default call
-        map to the same CMM key.
+        map to the same CMM key.  ``backend`` is resolved through adapter
+        capability probing here — the spec a caller holds is already bound
+        to a concrete adapter.
         """
+        backend = adapters.resolve_backend(kwargs.pop("backend", None))
         params = {k: kwargs.get(k, d) for k, d in self.spec_defaults.items()}
-        return ReductionSpec.create(self.name, shape, dtype, **params)
+        return ReductionSpec.create(self.name, shape, dtype, backend=backend, **params)
 
     # -- protocol ------------------------------------------------------------
 
@@ -123,3 +163,24 @@ class Codec:
     def decode_spec(self, c: Compressed) -> ReductionSpec:
         """Spec keying the decode-side plan, recovered from container meta."""
         raise NotImplementedError
+
+    # -- batched execution (engine fan-out) ----------------------------------
+    #
+    # Codecs whose whole encode chain is jittable can expose a vmappable
+    # executable; the execution engine shards a stack of same-spec leaves
+    # over the mesh "data" axis with shard_map and splits the results back
+    # into per-leaf containers.  Codecs with host-side stages (codebook
+    # builds, outlier extraction) leave this off and fan out over executor
+    # futures instead.
+
+    supports_batched_encode: bool = False
+
+    def batched_encode_executable(self, plan: ReductionPlan) -> Callable:
+        """Jittable ``(k, *spec.shape) -> stacked outputs`` encode, if any."""
+        raise NotImplementedError(f"{self.name} has no batched encode path")
+
+    def batched_encode_finish(
+        self, plan: ReductionPlan, out: Any, k: int
+    ) -> list[Compressed]:
+        """Split stacked encode outputs into ``k`` per-leaf containers."""
+        raise NotImplementedError(f"{self.name} has no batched encode path")

@@ -63,11 +63,16 @@ class HuffmanCodec(Codec):
     spec_defaults = {}
 
     def plan(self, spec: ReductionSpec) -> ReductionPlan:
+        spec = spec.resolved()
+        # adapter-bound DEM-global histogram + encode-lookup; the codebook
+        # build is per-call metadata (host scale) under every backend
         return ReductionPlan(
             spec=spec,
-            # jitted DEM-global histogram; codebook build is per-call metadata
-            executables={"histogram": huffman.histogram,
-                         "decode": huffman.decode},
+            executables={
+                "histogram": partial(huffman.histogram_op, adapter=spec.backend),
+                "encode": partial(huffman.encode, adapter=spec.backend),
+                "decode": huffman.decode,
+            },
         )
 
     def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
@@ -77,7 +82,7 @@ class HuffmanCodec(Codec):
         num_keys = int(jnp.max(data)) + 1
         freq = np.asarray(plan.executables["histogram"](data, num_keys))
         book = huffman.build_codebook(freq)
-        enc = huffman.encode(data, book)
+        enc = plan.executables["encode"](data, book)
         return encoded_to_sections(enc, data.shape, data.dtype, self.name)
 
     def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
@@ -95,10 +100,16 @@ class HuffmanBytesCodec(Codec):
     spec_defaults = {}
 
     def plan(self, spec: ReductionSpec) -> ReductionPlan:
+        spec = spec.resolved()
         return ReductionPlan(
             spec=spec,
-            executables={"histogram": partial(huffman.histogram, num_bins=256),
-                         "decode": huffman.decode},
+            executables={
+                "histogram": partial(
+                    huffman.histogram_op, num_bins=256, adapter=spec.backend
+                ),
+                "encode": partial(huffman.encode, adapter=spec.backend),
+                "decode": huffman.decode,
+            },
         )
 
     def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
@@ -108,7 +119,7 @@ class HuffmanBytesCodec(Codec):
         ).astype(jnp.int32)
         freq = np.asarray(plan.executables["histogram"](byte_keys))
         book = huffman.build_codebook(freq)
-        enc = huffman.encode(byte_keys, book)
+        enc = plan.executables["encode"](byte_keys, book)
         return encoded_to_sections(enc, np.shape(data), orig_dtype, self.name)
 
     def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:

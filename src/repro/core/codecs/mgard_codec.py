@@ -18,12 +18,11 @@ import numpy as np
 
 from .. import huffman, mgard
 from ..container import Compressed
-from ..quantize import dequantize_by_subset, unsigned_to_signed
+from ..quantize import unsigned_to_signed
 from . import register_codec
 from .base import Codec, ReductionPlan, ReductionSpec
 from .huffman_codec import encoded_to_sections, sections_to_encoded
 
-_dequantize_jit = jax.jit(dequantize_by_subset)
 _unsigned_to_signed_jit = jax.jit(unsigned_to_signed)
 
 
@@ -34,22 +33,32 @@ class MGARDCodec(Codec):
     spec_defaults = {"error_bound": 1e-2, "relative": True, "dict_size": 4096}
 
     def plan(self, spec: ReductionSpec) -> ReductionPlan:
+        spec = spec.resolved()
         shape = spec.shape
         dict_size = int(spec.param("dict_size", 4096))
         padded = tuple(mgard.padded_dim(n) for n in shape)
         L = mgard.total_levels(padded)
+        # Backend binding: the quantize/dequantize Map&Process stages and the
+        # entropy stage dispatch through the kernel registry with the spec's
+        # adapter baked in; decompose/recompose stay on the portable jnp path
+        # under every backend (no per-backend kernel exists for them — the
+        # paper's fallback rule), which also keeps the produced bitstream
+        # backend-independent.  The level map is *donated* to the planned
+        # stages and the recycled buffer re-stored (true in-place workspace
+        # recycling where the platform supports donation).
         return ReductionPlan(
             spec=spec,
             executables={
                 "decompose": partial(mgard.decompose, shape=shape),
                 "recompose": partial(mgard.recompose, shape=shape),
-                "quantize": partial(
-                    mgard._quantize_stage, shape=padded, dict_size=dict_size
+                "quantize": mgard.planned_quantize_stage(
+                    padded, dict_size, spec.backend
                 ),
-                "dequantize": _dequantize_jit,
+                "dequantize": mgard.planned_dequantize_stage(spec.backend),
             },
             workspace={"lmap": jnp.asarray(mgard.level_map(padded))},
-            meta={"padded": padded, "L": L, "dict_size": dict_size},
+            meta={"padded": padded, "L": L, "dict_size": dict_size,
+                  "backend": spec.backend},
         )
 
     def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
@@ -68,14 +77,19 @@ class MGARDCodec(Codec):
         coeffs = plan.executables["decompose"](data)
         L = plan.meta["L"]
         bins = mgard.level_bins(eb, L)
-        q, keys, inlier = plan.executables["quantize"](
-            coeffs, plan.workspace["lmap"], jnp.asarray(bins, jnp.float32)
-        )
+        # Workspace donation: the executable consumes the level map and
+        # returns the recycled buffer; serialize access so concurrent engine
+        # workers sharing this plan never donate the same buffer twice.
+        with plan.lock:
+            q, keys, inlier, lmap = plan.executables["quantize"](
+                coeffs, plan.workspace["lmap"], jnp.asarray(bins, jnp.float32)
+            )
+            plan.recycle("lmap", lmap)
         # Outliers: stored losslessly (sparse), like MGARD's escape path.
         inlier_np = np.asarray(inlier).reshape(-1)
         out_idx = np.nonzero(~inlier_np)[0]
         out_val = np.asarray(q).reshape(-1)[out_idx]
-        enc = huffman.compress(keys, dict_size)
+        enc = huffman.compress(keys, dict_size, adapter=plan.meta["backend"])
 
         c = encoded_to_sections(enc, data.shape, data.dtype, self.name)
         c.meta.update(
@@ -99,10 +113,12 @@ class MGARDCodec(Codec):
             qf = qf.copy()
             qf[out_idx] = np.asarray(c.arrays["outlier_val"])
         q = jnp.asarray(qf.reshape(plan.meta["padded"]))
-        coeffs = plan.executables["dequantize"](
-            q, plan.workspace["lmap"],
-            jnp.asarray(np.asarray(c.arrays["bins"]), jnp.float32),
-        )
+        with plan.lock:
+            coeffs, lmap = plan.executables["dequantize"](
+                q, plan.workspace["lmap"],
+                jnp.asarray(np.asarray(c.arrays["bins"]), jnp.float32),
+            )
+            plan.recycle("lmap", lmap)
         out = plan.executables["recompose"](coeffs)
         return out.astype(jnp.dtype(c.meta["dtype"]))
 

@@ -28,20 +28,25 @@ class ZFPCodec(Codec):
     spec_defaults = {"rate": 16}
 
     def plan(self, spec: ReductionSpec) -> ReductionPlan:
+        spec = spec.resolved()
         rate = int(spec.param("rate", 16))
         dims = len(spec.shape)
         if dims > 4 or dims == 0:
             raise ValueError("zfp supports 1-4 dimensional data")
         if not 1 <= rate <= 32:
             raise ValueError("rate must be in [1, 32] bits/value")
+        # The backend adapter is baked into the jitted executables here —
+        # kernel dispatch happens once, at plan time.
         return ReductionPlan(
             spec=spec,
             executables={
                 "encode": partial(
-                    zfp.compress_jit, rate=rate, dims=dims, shape=spec.shape
+                    zfp.compress_jit, rate=rate, dims=dims, shape=spec.shape,
+                    adapter=spec.backend,
                 ),
                 "decode": partial(
-                    zfp.decompress_jit, rate=rate, dims=dims, shape=spec.shape
+                    zfp.decompress_jit, rate=rate, dims=dims, shape=spec.shape,
+                    adapter=spec.backend,
                 ),
             },
             meta={"rate": rate, "dims": dims},
@@ -66,6 +71,34 @@ class ZFPCodec(Codec):
         return out.astype(jnp.dtype(c.meta["dtype"]))
 
     def decode_spec(self, c: Compressed) -> ReductionSpec:
+        # Backend deliberately defaults to auto: any backend decodes any
+        # stream (portability contract), so the decode side picks the best
+        # local adapter rather than whatever wrote the stream.
         return ReductionSpec.create(
             self.name, c.meta["shape"], c.meta["dtype"], rate=int(c.meta["rate"])
         )
+
+    # -- batched execution (engine fan-out) ---------------------------------
+
+    supports_batched_encode = True
+
+    def batched_encode_executable(self, plan: ReductionPlan):
+        enc = plan.executables["encode"]
+        return jax.vmap(lambda x: enc(x))
+
+    def batched_encode_finish(
+        self, plan: ReductionPlan, out, k: int
+    ) -> list[Compressed]:
+        payload, emax = (np.asarray(a) for a in out)
+        return [
+            Compressed(
+                method=self.name,
+                meta={
+                    "shape": plan.spec.shape,
+                    "dtype": plan.spec.dtype,
+                    "rate": plan.meta["rate"],
+                },
+                arrays={"payload": payload[i], "emax": emax[i]},
+            )
+            for i in range(k)
+        ]

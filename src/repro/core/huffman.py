@@ -53,6 +53,19 @@ def histogram(keys: jax.Array, num_bins: int) -> jax.Array:
     return jnp.bincount(keys.reshape(-1).astype(jnp.int32), length=num_bins)
 
 
+def histogram_op(keys: jax.Array, num_bins: int, adapter: str | None = None) -> jax.Array:
+    """Adapter-dispatched histogram: plans bind a concrete backend here.
+
+    ``adapter=None`` is the inline jnp path; a concrete adapter goes through
+    the ``histogram`` kernel registry (one-hot × MXU matmul on Pallas).
+    """
+    if adapter is None:
+        return histogram(keys, num_bins)
+    from repro.kernels.histogram import ops as histogram_ops  # lazy: layer order
+
+    return histogram_ops.histogram(keys, num_bins, adapter=adapter)
+
+
 # ---------------------------------------------------------------------------
 # Two-phase codebook generation (host / metadata scale)
 # ---------------------------------------------------------------------------
@@ -221,17 +234,25 @@ class Encoded:
         return int(self.words.nbytes + self.chunk_offsets.nbytes + self.length_table.nbytes)
 
 
-@partial(jax.jit, static_argnames=("num_words", "chunk_size"))
+@partial(jax.jit, static_argnames=("num_words", "chunk_size", "adapter"))
 def _encode_jit(
     keys: jax.Array,
     codes_t: jax.Array,
     lengths_t: jax.Array,
     num_words: int,
     chunk_size: int,
+    adapter: str | None = None,
 ):
     keys = keys.reshape(-1).astype(jnp.int32)
-    code = codes_t[keys]
-    length = lengths_t[keys]
+    if adapter is None:
+        code = codes_t[keys]
+        length = lengths_t[keys]
+    else:
+        from repro.kernels.huffman_encode import ops as encode_ops  # lazy
+
+        code, length = encode_ops.encode_lookup(
+            keys, codes_t, lengths_t, adapter=adapter
+        )
     offsets = bs.exclusive_cumsum(length)
     total_bits = offsets[-1] + length[-1] if keys.shape[0] else jnp.int32(0)
     words = bs.pack_bits(code, length, total_bits, num_words)
@@ -246,7 +267,8 @@ def symbol_lengths_total(keys: jax.Array, lengths_t: jax.Array) -> int:
 
 
 def encode(
-    keys: jax.Array, book: Codebook, chunk_size: int = DEFAULT_CHUNK
+    keys: jax.Array, book: Codebook, chunk_size: int = DEFAULT_CHUNK,
+    adapter: str | None = None,
 ) -> Encoded:
     """Encode ``keys`` (int in [0, K)) into a compact bitstream."""
     keys = keys.reshape(-1)
@@ -254,7 +276,9 @@ def encode(
     codes_t = jnp.asarray(book.codes, jnp.uint32)
     total_bits = symbol_lengths_total(keys, lengths_t)
     num_words = max(1, bs.words_needed(total_bits))
-    words, chunk_offsets, _ = _encode_jit(keys, codes_t, lengths_t, num_words, chunk_size)
+    words, chunk_offsets, _ = _encode_jit(
+        keys, codes_t, lengths_t, num_words, chunk_size, adapter
+    )
     return Encoded(
         words=words,
         total_bits=int(total_bits),
@@ -328,10 +352,13 @@ def decode(enc: Encoded) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def compress(keys: jax.Array, num_keys: int, chunk_size: int = DEFAULT_CHUNK) -> Encoded:
-    freq = np.asarray(histogram(keys, num_keys))
+def compress(
+    keys: jax.Array, num_keys: int, chunk_size: int = DEFAULT_CHUNK,
+    adapter: str | None = None,
+) -> Encoded:
+    freq = np.asarray(histogram_op(keys, num_keys, adapter=adapter))
     book = build_codebook(freq)
-    return encode(keys, book, chunk_size=chunk_size)
+    return encode(keys, book, chunk_size=chunk_size, adapter=adapter)
 
 
 def decompress(enc: Encoded) -> jax.Array:

@@ -336,14 +336,61 @@ class MGARDCompressed:
         )
 
 
-@partial(jax.jit, static_argnames=("shape", "dict_size"))
-def _quantize_stage(coeffs, lmap, bins, shape, dict_size):
-    q = quantize_by_subset(coeffs, lmap, bins)
-    u = signed_to_unsigned(q)
+def _quantize_stage_impl(coeffs, lmap, bins, shape, dict_size, adapter):
+    if adapter is None:
+        q = quantize_by_subset(coeffs, lmap, bins)
+        u = signed_to_unsigned(q)
+    else:
+        from repro.kernels.quantize_map import ops as quantize_ops  # lazy
+
+        u = quantize_ops.quantize(coeffs, lmap, bins, adapter=adapter).reshape(shape)
+        q = unsigned_to_signed(u)
     escape = dict_size - 1
     inlier = u < escape
     keys = jnp.where(inlier, u, jnp.uint32(escape)).astype(jnp.int32)
     return q, keys, inlier
+
+
+@partial(jax.jit, static_argnames=("shape", "dict_size"))
+def _quantize_stage(coeffs, lmap, bins, shape, dict_size):
+    return _quantize_stage_impl(coeffs, lmap, bins, shape, dict_size, None)
+
+
+def planned_quantize_stage(shape, dict_size, adapter):
+    """Plan-bound quantize executable with the level map *donated*.
+
+    Returns the (aliased) level map as an extra output; the codec re-stores
+    it in the plan workspace (``ReductionPlan.recycle``) so reuse is true
+    in-place recycling where XLA implements donation (TPU/GPU) and a plain
+    pass-through elsewhere.
+    """
+    from . import adapters
+
+    def stage(coeffs, lmap, bins):
+        q, keys, inlier = _quantize_stage_impl(
+            coeffs, lmap, bins, shape, dict_size, adapter
+        )
+        return q, keys, inlier, lmap
+
+    return adapters.donating_jit(stage, donate_argnums=(1,))
+
+
+def planned_dequantize_stage(adapter):
+    """Plan-bound dequantize executable (level map donated, see above)."""
+    from . import adapters
+
+    def stage(q, lmap, bins):
+        if adapter is None:
+            coeffs = dequantize_by_subset(q, lmap, bins)
+        else:
+            from repro.kernels.quantize_map import ops as quantize_ops  # lazy
+
+            coeffs = quantize_ops.dequantize(
+                signed_to_unsigned(q), lmap, bins, adapter=adapter
+            ).reshape(q.shape)
+        return coeffs, lmap
+
+    return adapters.donating_jit(stage, donate_argnums=(1,))
 
 
 def compress(

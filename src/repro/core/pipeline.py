@@ -297,6 +297,7 @@ class ChunkedPipeline:
         c_limit_elems: int = 1 << 28,
         phi: chunk_model.PhiModel | None = None,
         theta: chunk_model.ThetaModel | None = None,
+        devices: Sequence | None = None,
     ):
         self.compress_fn = compress_fn
         self.mode = mode
@@ -305,6 +306,9 @@ class ChunkedPipeline:
         self.c_limit = c_limit_elems
         self.phi = phi
         self.theta = theta
+        # Chunk placement ring: chunk i lands on devices[i % n] (the engine's
+        # data-axis fan-out); default is the single-device HDEM schedule.
+        self.devices = list(devices) if devices else None
 
     def _schedule(self, total: int) -> list[int]:
         if self.mode == "none":
@@ -336,7 +340,7 @@ class ChunkedPipeline:
         boundaries, chunks, timings = [], [], []
         start = 0
         t_wall = time.perf_counter()
-        device = jax.devices()[0]
+        ring = self.devices or [jax.devices()[0]]
         pending_put = None
         pending_rows = None
 
@@ -349,17 +353,18 @@ class ChunkedPipeline:
 
             t0 = time.perf_counter()
             if pending_put is None:
-                dev_chunk = jax.device_put(host_chunk, device)
+                dev_chunk = jax.device_put(host_chunk, ring[idx % len(ring)])
             else:
                 dev_chunk = pending_put
                 host_chunk = pending_rows
-            # issue H2D for the NEXT chunk before computing this one (Fig. 9)
+            # issue H2D for the NEXT chunk before computing this one (Fig. 9);
+            # the ring rotates chunks across the engine's data-axis devices
             nxt = idx + 1
             if nxt < len(rows):
                 sl2 = [slice(None)] * data.ndim
                 sl2[axis] = slice(start + r, start + r + rows[nxt])
                 nxt_host = np.ascontiguousarray(data[tuple(sl2)])
-                pending_put = jax.device_put(nxt_host, device)
+                pending_put = jax.device_put(nxt_host, ring[nxt % len(ring)])
                 pending_rows = nxt_host
             else:
                 pending_put = None

@@ -71,13 +71,16 @@ def refactor(
     coeffs = plan.executables["decompose"](data)
     padded = plan.meta["padded"]
     L = plan.meta["L"]
-    lmap = np.asarray(plan.workspace["lmap"])
     bins = mgard.level_bins(error_bound, L)
-    q = np.asarray(
-        plan.executables["quantize"](
+    # snapshot + executable call both under the lock: the quantize stage
+    # donates the lmap buffer, so unlocked readers could see a dead buffer
+    with plan.lock:
+        lmap = np.asarray(plan.workspace["lmap"])
+        q_dev, _keys, _inlier, recycled = plan.executables["quantize"](
             coeffs, plan.workspace["lmap"], jnp.asarray(bins, jnp.float32)
-        )[0]
-    )
+        )
+        plan.recycle("lmap", recycled)
+    q = np.asarray(q_dev)
     u = np.asarray(signed_to_unsigned(jnp.asarray(q))).reshape(-1)
     escape = dict_size - 1
     inlier = u < escape
@@ -114,7 +117,8 @@ def retrieve(stream: ProgressiveStream, n_segments: int | None = None) -> jax.Ar
         n_segments = len(stream.segments)
     n_segments = max(1, min(n_segments, len(stream.segments)))
     plan = _mgard_plan(stream.shape, "float32", stream.error_bound, stream.dict_size)
-    lmap = np.asarray(plan.workspace["lmap"])
+    with plan.lock:  # see refactor(): the workspace buffer may be donated
+        lmap = np.asarray(plan.workspace["lmap"])
     flat_lmap = lmap.reshape(-1)
     q = np.zeros(int(np.prod(stream.padded)), np.int32)
     loaded_levels = set()
@@ -128,10 +132,12 @@ def retrieve(stream: ProgressiveStream, n_segments: int | None = None) -> jax.Ar
     if stream.outlier_idx.size:
         mask = np.isin(flat_lmap[stream.outlier_idx], list(loaded_levels))
         q[stream.outlier_idx[mask]] = stream.outlier_val[mask]
-    coeffs = plan.executables["dequantize"](
-        jnp.asarray(q.reshape(stream.padded)), plan.workspace["lmap"],
-        jnp.asarray(stream.bins, jnp.float32),
-    )
+    with plan.lock:
+        coeffs, recycled = plan.executables["dequantize"](
+            jnp.asarray(q.reshape(stream.padded)), plan.workspace["lmap"],
+            jnp.asarray(stream.bins, jnp.float32),
+        )
+        plan.recycle("lmap", recycled)
     return plan.executables["recompose"](coeffs)
 
 

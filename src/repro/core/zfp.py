@@ -260,23 +260,49 @@ def _decompress_blocks(
     return jax.vmap(one)(payload, emax)
 
 
-@partial(jax.jit, static_argnames=("rate", "dims", "shape"))
-def compress_jit(data: jax.Array, rate: int, dims: int, shape: tuple[int, ...]):
+@partial(jax.jit, static_argnames=("rate", "dims", "shape", "adapter"))
+def compress_jit(
+    data: jax.Array, rate: int, dims: int, shape: tuple[int, ...],
+    adapter: str | None = None,
+):
+    """Whole-array fixed-rate compress; ``adapter`` binds the block kernel.
+
+    ``adapter=None`` keeps the historical inline jnp path; a concrete adapter
+    routes the block stage through the ``zfp_block`` kernel registry
+    (xla | pallas | pallas_interpret) — the dispatch happens at trace time,
+    i.e. once per plan.
+    """
     block_shape = (4,) * dims
     padded = pad_to_blocks(data.reshape(shape), block_shape)
     blocks, _counts = block_view(padded, block_shape)
-    perm = jnp.asarray(sequency_permutation(dims))
-    return _compress_blocks(blocks, rate, perm)
+    if adapter is None:
+        perm = jnp.asarray(sequency_permutation(dims))
+        return _compress_blocks(blocks, rate, perm)
+    from repro.kernels.zfp_block import ops as zfp_block_ops  # lazy: layer order
+
+    nb = blocks.shape[0]
+    return zfp_block_ops.compress_blocks(
+        blocks.reshape(nb, -1), rate, dims, adapter=adapter
+    )
 
 
-@partial(jax.jit, static_argnames=("rate", "dims", "shape"))
+@partial(jax.jit, static_argnames=("rate", "dims", "shape", "adapter"))
 def decompress_jit(
-    payload: jax.Array, emax: jax.Array, rate: int, dims: int, shape: tuple[int, ...]
+    payload: jax.Array, emax: jax.Array, rate: int, dims: int,
+    shape: tuple[int, ...], adapter: str | None = None,
 ):
     block_shape = (4,) * dims
-    perm = sequency_permutation(dims)
-    inv_perm = jnp.asarray(np.argsort(perm).astype(np.int32))
-    blocks = _decompress_blocks(payload, emax, rate, inv_perm, block_shape)
+    if adapter is None:
+        perm = sequency_permutation(dims)
+        inv_perm = jnp.asarray(np.argsort(perm).astype(np.int32))
+        blocks = _decompress_blocks(payload, emax, rate, inv_perm, block_shape)
+    else:
+        from repro.kernels.zfp_block import ops as zfp_block_ops  # lazy
+
+        flat = zfp_block_ops.decompress_blocks(
+            payload, emax, rate, dims, adapter=adapter
+        )
+        blocks = flat.reshape((flat.shape[0],) + block_shape)
     from .abstractions import padded_shape
 
     counts = tuple(p // 4 for p in padded_shape(shape, block_shape))

@@ -47,6 +47,22 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
+def make_data_mesh(n: int | None = None):
+    """One-axis ``("data",)`` mesh over ``n`` local devices (default: all).
+
+    The execution engine's canonical mesh: independent reductions (pytree
+    leaves, stream chunks) shard over this axis.
+    """
+    devs = jax.devices()
+    n = len(devs) if n is None else min(n, len(devs))
+    return make_mesh((n,), ("data",))
+
+
+def data_axis_size(mesh) -> int:
+    """Size of the ``data`` axis (1 when the mesh has none)."""
+    return int(dict(mesh.shape).get("data", 1))
+
+
 def make_test_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh over however many devices exist (tests / examples)."""
     n = len(jax.devices())

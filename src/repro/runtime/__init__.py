@@ -1,1 +1,1 @@
-from . import fault, hlo_analysis, roofline, sharding  # noqa: F401
+from . import executor, fault, hlo_analysis, roofline, sharding  # noqa: F401

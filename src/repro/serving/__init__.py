@@ -1,1 +1,7 @@
-from .engine import Request, ServingEngine, compress_kv_cache, decompress_kv_cache  # noqa: F401
+from .engine import (  # noqa: F401
+    Request,
+    ServingEngine,
+    compress_kv_cache,
+    decompress_kv_cache,
+    park_kv_cache_async,
+)

@@ -8,6 +8,9 @@ as a scanned decode over the prompt (exact, compile-once; the dry-run's
 HPDR integration: ``compress_kv_cache``/``decompress_kv_cache`` push cold KV
 pages through ZFP-X fixed-rate blocks — the serving-side analogue of the
 paper's reduction-before-I/O, used when parking long-context sessions.
+Parking runs on the execution engine: cache leaves shard over the mesh's
+``data``-axis devices, and ``park_kv_cache_async`` returns a future so the
+decode loop keeps stepping while a session is parked in the background.
 """
 
 from __future__ import annotations
@@ -21,7 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import api
+from ..core import engine as engine_mod
 from ..models.model import Model
+from ..runtime.executor import Submission
 
 
 @dataclass
@@ -114,23 +119,46 @@ class ServingEngine:
 # ---------------------------------------------------------------------------
 
 
-def compress_kv_cache(cache: Any, rate: int = 12) -> tuple[Any, dict]:
-    """ZFP-X fixed-rate compression of float cache leaves (park a session).
-
-    Thin policy over :func:`api.compress_pytree`: sizable float pages go
-    through the ZFP codec (4³ re-blocked, plan cached in the CMM so parking
-    session N+1 reuses session N's jitted executables); everything else is
-    passed through raw.
-    """
-
+def _kv_select(rate: int):
     def select(key: str, arr: np.ndarray):
         del key
         if arr.dtype.kind == "f" and arr.size >= 4096:
             return "zfp", {"rate": rate}
         return None
 
-    return api.compress_pytree(cache, select)
+    return select
 
 
-def decompress_kv_cache(comp: Any, like: Any) -> Any:
-    return api.decompress_pytree(comp, like)
+def compress_kv_cache(
+    cache: Any, rate: int = 12, engine: engine_mod.ExecutionEngine | None = None
+) -> tuple[Any, dict]:
+    """ZFP-X fixed-rate compression of float cache leaves (park a session).
+
+    Thin policy over :func:`api.compress_pytree`, executed on the execution
+    engine: same-shape KV pages bucket into one plan (cached in the CMM so
+    parking session N+1 reuses session N's jitted executables) and shard
+    across the mesh ``data`` axis; everything else is passed through raw.
+    """
+    return api.compress_pytree(cache, _kv_select(rate), engine=engine)
+
+
+def park_kv_cache_async(
+    cache: Any, rate: int = 12, engine: engine_mod.ExecutionEngine | None = None
+) -> Submission:
+    """Park a session in the background: future resolving to (flat, stats).
+
+    The cache is snapshotted to host first (the only sync point, as in
+    ``CheckpointManager.save_async``); compression then runs on the
+    engine's io lane while decode steps continue.
+    """
+    eng = engine if engine is not None else engine_mod.default_engine()
+    snapshot = jax.tree.map(np.asarray, cache)
+    return eng.submit(
+        api.compress_pytree, snapshot, _kv_select(rate), engine=eng, lane="io"
+    )
+
+
+def decompress_kv_cache(
+    comp: Any, like: Any, engine: engine_mod.ExecutionEngine | None = None
+) -> Any:
+    return api.decompress_pytree(comp, like, engine=engine)
