@@ -1,0 +1,94 @@
+"""Per-stage pipeline breakdown + host↔device transfer accounting.
+
+The paper's headline architectural number is that running the whole
+reduction pipeline on the device cuts memory-transfer overhead to ~2.3% of
+runtime.  This benchmark makes that trackable per PR: for each stage-graph
+codec it drives ``api.encode_profiled`` (warm plan, so timings are
+execution, not compilation) and emits
+
+  * wall seconds per pipeline stage (fused device segments blocked on,
+    host barriers timed as-is);
+  * exact H2D/D2H bytes for the call — every fetch in the stage pipeline is
+    declared, so this is an accounting, not an estimate;
+  * the transfer:input ratio and the stream size.
+
+``scripts/check.sh bench stages`` runs the smoke size and writes
+``BENCH_stages.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Row, nyx_like
+from repro.core import api
+
+
+CODEC_CASES = (
+    ("mgard", {"error_bound": 1e-2}),
+    ("zfp", {"rate": 16}),
+    ("huffman", {}),
+    ("huffman-bytes", {}),
+)
+
+
+def _data_for(method: str, n: int) -> np.ndarray:
+    field = nyx_like(n)
+    if method == "huffman":
+        q = np.clip((field / field.max()) * 255.0, 0, 255)
+        return q.astype(np.int32)
+    return field
+
+
+def stage_bench(out_path: str | Path = "BENCH_stages.json", n: int = 24) -> dict:
+    report: dict = {"field_elems": int(n) ** 3, "codecs": {}}
+    for method, kw in CODEC_CASES:
+        data = _data_for(method, n)
+        spec = api.make_spec(data, method, **kw)
+        api.encode_profiled(spec, jnp.asarray(data))  # warm: plan + traces
+        t0 = time.perf_counter()
+        c, stage_s, transfers = api.encode_profiled(spec, jnp.asarray(data))
+        wall = time.perf_counter() - t0
+        entry = {
+            "input_bytes": int(data.nbytes),
+            "stream_bytes": int(c.nbytes()),
+            "encode_s": wall,
+            "stages_s": {k: round(v, 6) for k, v in stage_s.items()},
+            **transfers.as_dict(),
+        }
+        entry["transfer_frac_of_input"] = round(
+            (transfers.h2d + transfers.d2h) / max(data.nbytes, 1), 4
+        )
+        report["codecs"][method] = entry
+        Row(
+            f"stages.{method}.encode", wall * 1e6,
+            f"d2h={transfers.d2h}B h2d={transfers.h2d}B "
+            f"ratio={data.nbytes / max(c.nbytes(), 1):.1f}x",
+        ).emit()
+        for stage_name, secs in stage_s.items():
+            Row(f"stages.{method}.{stage_name}", secs * 1e6, "").emit()
+    Path(out_path).write_text(json.dumps(report, indent=1))
+    return report
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="smoke-sized run (24^3 field)")
+    parser.add_argument("--out", default="BENCH_stages.json")
+    parser.add_argument("--n", type=int, default=None,
+                        help="field edge length (default 24 smoke / 48 full)")
+    args = parser.parse_args()
+    n = args.n if args.n is not None else (24 if args.smoke else 48)
+    print("name,us_per_call,derived")
+    stage_bench(args.out, n=n)
+
+
+if __name__ == "__main__":
+    main()

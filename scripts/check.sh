@@ -2,13 +2,23 @@
 # Tier-1 verification gate (ROADMAP.md) — run this before every PR.
 # CI and humans must invoke the same command; add flags here, not in CI.
 #
-#   scripts/check.sh            run the tier-1 test suite
-#   scripts/check.sh bench      benchmark smoke mode: fig16 engine throughput
-#                               on a 1×CPU mesh -> BENCH_engine.json
+#   scripts/check.sh                run the tier-1 test suite
+#   scripts/check.sh bench          benchmark smoke mode: fig16 engine
+#                                   throughput on a 1×CPU mesh
+#                                   -> BENCH_engine.json
+#   scripts/check.sh bench stages   per-stage pipeline timings + host<->device
+#                                   transfer bytes per codec (smoke-sized)
+#                                   -> BENCH_stages.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 if [[ "${1:-}" == "bench" ]]; then
   shift
+  if [[ "${1:-}" == "stages" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+      python -m benchmarks.stage_breakdown --smoke --out BENCH_stages.json "$@"
+    exit 0
+  fi
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.fig16_scalability --smoke --out BENCH_engine.json "$@"
   exit 0

@@ -59,6 +59,7 @@ from .codecs import available_methods, get_codec
 from .codecs.base import Codec, ReductionPlan, ReductionSpec  # noqa: F401
 from .container import Compressed, _jsonable  # noqa: F401
 from .context import GLOBAL_CMM, ReductionContext
+from .stages.base import CallEnv, Stage, StageGraph, TransferStats  # noqa: F401
 
 METHODS = ("mgard", "zfp", "huffman", "huffman-bytes")
 
@@ -109,6 +110,25 @@ def get_plan(spec: ReductionSpec) -> ReductionPlan:
 def encode(spec: ReductionSpec, data: jax.Array | np.ndarray) -> Compressed:
     """Compress ``data`` according to ``spec`` (plan reused via the CMM)."""
     return get_codec(spec.method).encode(get_plan(spec), data)
+
+
+def encode_profiled(
+    spec: ReductionSpec, data: jax.Array | np.ndarray
+) -> tuple[Compressed, dict[str, float], "TransferStats"]:
+    """Encode with per-stage observability (the ``bench stages`` hook).
+
+    Returns ``(container, stage_seconds, transfers)``: wall time per
+    pipeline stage (device segments blocked on for honest timings) and the
+    run's host↔device transfer bytes — the quantities
+    ``scripts/check.sh bench stages`` tracks against the paper's
+    2.3%-transfer claim.
+    """
+    codec = get_codec(spec.method)
+    plan = get_plan(spec)
+    env = CallEnv(plan)
+    profile: dict[str, float] = {}
+    c = codec.encode(plan, data, env=env, profile=profile)
+    return c, profile, env.transfers
 
 
 def decode(c: Compressed, backend: str | None = None) -> jax.Array:
@@ -177,6 +197,9 @@ def as_blocked_3d(flat: np.ndarray) -> np.ndarray:
     return x.reshape(-1, 32, 32)
 
 
+_HUFFMAN_MAX_ALPHABET = 1 << 16
+
+
 def leaf_policy(
     arr: np.ndarray, method: str, params: dict | None = None
 ) -> tuple[np.ndarray, str, dict]:
@@ -184,9 +207,11 @@ def leaf_policy(
 
     bfloat16 is cast to float32 for the lossy codecs, ZFP inputs are
     re-blocked to 4³-friendly (n, 32, 32), >4-D or 0-D MGARD inputs are
-    flattened, and anything not lossy-eligible becomes a ``huffman-bytes``
-    byte view.  Split out of :func:`compress_leaf` so the execution engine
-    can bucket leaves by their *post-policy* spec before fanning out.
+    flattened, ``huffman`` keeps genuine small-alphabet integer keys on the
+    integer-key codec (data-dependent dictionary, tighter streams than the
+    byte view), and anything else becomes a ``huffman-bytes`` byte view.
+    Split out of :func:`compress_leaf` so the execution engine can bucket
+    leaves by their *post-policy* spec before fanning out.
     """
     arr = np.asarray(arr)
     params = dict(params or {})
@@ -199,6 +224,14 @@ def leaf_policy(
         elif x.ndim > 4 or x.ndim == 0:
             x = x.reshape(-1)
         return x, method, params
+    if (
+        method == "huffman"
+        and arr.dtype.kind in ("i", "u")
+        and arr.size
+        and int(arr.min()) >= 0
+        and int(arr.max()) < _HUFFMAN_MAX_ALPHABET
+    ):
+        return arr, "huffman", params
     return np.ascontiguousarray(arr).view(np.uint8), "huffman-bytes", {}
 
 

@@ -96,17 +96,25 @@ class ReductionPlan:
     arguments already bound (tracing/compilation happens once per plan) and
     the spec's ``backend`` adapter baked in — kernel dispatch happens at plan
     time, never per call.  ``workspace`` holds device/host arrays that are
-    data-independent for the spec (level maps, bin layouts, permutations) —
-    the paper's persistent context allocations.  Executables that *donate* a
-    workspace buffer return the recycled buffer; callers re-store it under
-    :meth:`recycle` while holding :attr:`lock` (plans are shared across
-    engine worker threads).
+    data-independent for the spec (level maps, bin layouts, permutations,
+    cached decode tables) — the paper's persistent context allocations.
+    Executables that *donate* a workspace buffer return the recycled buffer;
+    callers re-store it under :meth:`recycle` while holding :attr:`lock`
+    (plans are shared across engine worker threads).
+
+    ``pipeline`` is the compiled stage graph
+    (:class:`repro.core.stages.base.CompiledPipeline`) for codecs declared
+    as stage compositions: maximal device-stage runs fused into one jitted
+    executable each, host barriers between them.  Both execution shapes —
+    the per-leaf path and the engine's stacked ``shard_map`` path — run the
+    same compiled segments.
     """
 
     spec: ReductionSpec
     executables: dict[str, Callable] = field(default_factory=dict)
     workspace: dict[str, Any] = field(default_factory=dict)
     meta: dict[str, Any] = field(default_factory=dict)
+    pipeline: Any = field(default=None, repr=False, compare=False)
     lock: Any = field(default_factory=threading.Lock, repr=False, compare=False)
 
     def nbytes(self) -> int:
@@ -154,8 +162,28 @@ class Codec:
         """Build the persistent plan for ``spec`` (called once per CMM miss)."""
         raise NotImplementedError
 
-    def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
-        raise NotImplementedError
+    def encode(
+        self,
+        plan: ReductionPlan,
+        data: jax.Array,
+        *,
+        env: Any = None,
+        profile: dict | None = None,
+    ) -> Compressed:
+        """Default encode: run the compiled stage pipeline, then serialise.
+
+        ``env``/``profile`` are the observability hooks ``api.encode_profiled``
+        threads through (per-stage wall timings, host↔device transfer bytes).
+        """
+        if plan.pipeline is None:
+            raise NotImplementedError(
+                f"codec {self.name!r} declares no stage graph; override "
+                "encode() or implement build_stages()"
+            )
+        state, env = plan.pipeline.run({"data": data}, env=env, profile=profile)
+        from ..stages.base import LeafView  # local: codecs ↔ stages layering
+
+        return self.finish_container(plan, env, LeafView(state, None, env))
 
     def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
         raise NotImplementedError
@@ -164,23 +192,30 @@ class Codec:
         """Spec keying the decode-side plan, recovered from container meta."""
         raise NotImplementedError
 
-    # -- batched execution (engine fan-out) ----------------------------------
+    # -- stage graph ---------------------------------------------------------
     #
-    # Codecs whose whole encode chain is jittable can expose a vmappable
-    # executable; the execution engine shards a stack of same-spec leaves
-    # over the mesh "data" axis with shard_map and splits the results back
-    # into per-leaf containers.  Codecs with host-side stages (codebook
-    # builds, outlier extraction) leave this off and fan out over executor
-    # futures instead.
+    # Codecs declare their encode chain as a StageGraph; plan() attaches the
+    # compiled pipeline via _attach_pipeline.  The execution engine reuses
+    # the same compiled segments to stack same-spec leaves under one
+    # shard_map over the mesh "data" axis (vmapped segments, host stages
+    # looping over per-leaf metadata), so *every* stage-graph codec has a
+    # batched encode path — the host-staged ones included, since their only
+    # remaining host work is codebook construction.
 
-    supports_batched_encode: bool = False
+    def build_stages(self, spec: ReductionSpec):
+        """Return this codec's :class:`StageGraph` (or ``None``)."""
+        return None
 
-    def batched_encode_executable(self, plan: ReductionPlan) -> Callable:
-        """Jittable ``(k, *spec.shape) -> stacked outputs`` encode, if any."""
-        raise NotImplementedError(f"{self.name} has no batched encode path")
+    def _attach_pipeline(self, plan: ReductionPlan) -> ReductionPlan:
+        graph = self.build_stages(plan.spec)
+        if graph is not None:
+            plan.pipeline = graph.compile(plan)
+        return plan
 
-    def batched_encode_finish(
-        self, plan: ReductionPlan, out: Any, k: int
-    ) -> list[Compressed]:
-        """Split stacked encode outputs into ``k`` per-leaf containers."""
-        raise NotImplementedError(f"{self.name} has no batched encode path")
+    def finish_container(self, plan: ReductionPlan, env: Any, view: Any) -> Compressed:
+        """Serialise one leaf's pipeline state into a container."""
+        raise NotImplementedError
+
+    @property
+    def supports_batched_encode(self) -> bool:
+        return type(self).build_stages is not Codec.build_stages

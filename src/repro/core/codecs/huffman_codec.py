@@ -1,47 +1,80 @@
 """Huffman-X codecs: integer-key entropy coding + the byte-wise variant.
 
-Two registrations of the same machinery (paper §IV-B):
+Two registrations of the same stage composition (paper §IV-B, Fig. 6):
 
   * ``huffman``        lossless entropy coding of integer key arrays — the
-                       dictionary size is data-dependent (max key + 1), so it
-                       lives in the container meta, not the spec;
-  * ``huffman-bytes``  lossless byte-wise coding of arbitrary arrays (256-key
-                       alphabet) — the LZ-class baseline analogue.
+                       dictionary size is data-dependent, so the graph opens
+                       with a device max-key scan (``alphabet_scan``) and a
+                       one-scalar host bind;
+  * ``huffman-bytes``  lossless byte-wise coding of arbitrary arrays (fixed
+                       256-key alphabet) — the LZ-class baseline analogue.
 
-The plan pins the jitted histogram executable; the codebook itself is
-data-dependent (per-call), exactly like the GPU implementations rebuild the
-tree per buffer while reusing the kernel plan.
+Both share the device-resident entropy tail declared here as
+:data:`ENTROPY_TAIL`: histogram (device) → canonical codebook (the single
+host barrier) → code/length gather → prefix-sum + bit-packing (device).
+The codebook itself stays per-call metadata, exactly like the GPU
+implementations rebuild the tree per buffer while reusing the kernel plan;
+decode-side tables derived from it are cached on the plan
+(:func:`plan_decode_tables`) so repeated decompress calls are CMM hits.
 """
 
 from __future__ import annotations
 
+import hashlib
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import bitstream as bs
 from .. import huffman
+from .. import stages as sg
 from ..container import Compressed
 from . import register_codec
 from .base import Codec, ReductionPlan, ReductionSpec
 
+def entropy_tail_stages(num_bins: int | None = None) -> tuple:
+    """The shared entropy tail, with a plan-static alphabet when known."""
+    return (
+        sg.HuffmanHistogram(num_bins),
+        sg.CodebookBuild(),
+        sg.HuffmanEntropy(),
+        sg.BitPack(),
+    )
 
-def encoded_to_sections(enc: huffman.Encoded, shape, dtype, method) -> Compressed:
-    """Pack a :class:`huffman.Encoded` into a method-tagged container."""
-    return Compressed(
+
+def entropy_container(
+    plan: ReductionPlan, env, view, method: str,
+    shape: tuple, dtype, n_symbols: int,
+) -> Compressed:
+    """Serialise the entropy tail's pipeline state (exact-sized fetches).
+
+    The word stream is sliced on device to ``words_needed(total_bits)``
+    before the D2H copy (the exact count is host-known from
+    ``freq · lengths``), so the transfer is the compressed size, never the
+    padded device buffer.  Layout matches the historical host encoder
+    byte-for-byte; the per-stage metadata rides in ``meta["stages"]``.
+    """
+    total_bits = int(env.meta["total_bits"])
+    c = Compressed(
         method=method,
         meta={
             "shape": tuple(shape), "dtype": str(dtype),
-            "chunk_size": enc.chunk_size, "total_bits": enc.total_bits,
-            "n_symbols": enc.n_symbols, "num_keys": enc.num_keys,
+            "chunk_size": int(env.meta["chunk_size"]),
+            "total_bits": total_bits,
+            "n_symbols": int(n_symbols),
+            "num_keys": int(env.meta["num_keys"]),
         },
         arrays={
-            "words": np.asarray(enc.words),
-            "chunk_offsets": np.asarray(enc.chunk_offsets),
-            "length_table": enc.length_table,
+            "words": view.fetch("words", max(1, bs.words_needed(total_bits))),
+            "chunk_offsets": view.fetch("chunk_offsets"),
+            "length_table": np.asarray(env.meta["length_table"], np.int32),
         },
     )
+    c.meta["stages"] = plan.meta.get("stage_graph", [])
+    return c
 
 
 def sections_to_encoded(c: Compressed) -> huffman.Encoded:
@@ -56,17 +89,51 @@ def sections_to_encoded(c: Compressed) -> huffman.Encoded:
     )
 
 
+_MAX_DECODE_TABLES = 8  # per-plan cap on cached decode-table variants
+
+
+def plan_decode_tables(plan: ReductionPlan, length_table: np.ndarray):
+    """Decode tables for ``length_table``, cached in the plan workspace.
+
+    Keyed by the table's digest, so streams written with the same codebook
+    (the common case: same data characteristics, repeated decompress calls)
+    reuse one derived + device-staged table set, and CMM byte accounting
+    sees them.  Bounded FIFO per plan.
+    """
+    lt = np.ascontiguousarray(np.asarray(length_table, np.int32))
+    key = "decode_tables:" + hashlib.sha1(lt.tobytes()).hexdigest()
+    with plan.lock:
+        tables = plan.workspace.get(key)
+    if tables is not None:
+        return tables
+    tables = huffman.decode_tables(lt)
+    with plan.lock:
+        tables = plan.workspace.setdefault(key, tables)
+        cached = [k for k in plan.workspace
+                  if isinstance(k, str) and k.startswith("decode_tables:")]
+        for stale in cached[:-_MAX_DECODE_TABLES]:
+            del plan.workspace[stale]
+    return tables
+
+
 @register_codec("huffman")
 class HuffmanCodec(Codec):
     """Entropy coding of integer keys (alphabet sized per call)."""
 
     spec_defaults = {}
 
+    def build_stages(self, spec: ReductionSpec) -> sg.StageGraph:
+        return sg.StageGraph(
+            stages=(sg.IntKeys(), sg.AlphabetScan(), sg.AlphabetBind())
+            + entropy_tail_stages(),
+            finish_keys=("words", "chunk_offsets"),
+        )
+
     def plan(self, spec: ReductionSpec) -> ReductionPlan:
         spec = spec.resolved()
-        # adapter-bound DEM-global histogram + encode-lookup; the codebook
-        # build is per-call metadata (host scale) under every backend
-        return ReductionPlan(
+        # legacy per-stage executables stay addressable; the compiled stage
+        # pipeline is what encode (and the engine's stacked path) runs
+        plan = ReductionPlan(
             spec=spec,
             executables={
                 "histogram": partial(huffman.histogram_op, adapter=spec.backend),
@@ -74,19 +141,24 @@ class HuffmanCodec(Codec):
                 "decode": huffman.decode,
             },
         )
+        return self._attach_pipeline(plan)
 
-    def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
+    def encode(self, plan: ReductionPlan, data: jax.Array, **hooks) -> Compressed:
         data = jnp.asarray(data)
         if not jnp.issubdtype(data.dtype, jnp.integer):
             raise ValueError("huffman method expects integer keys; use huffman-bytes")
-        num_keys = int(jnp.max(data)) + 1
-        freq = np.asarray(plan.executables["histogram"](data, num_keys))
-        book = huffman.build_codebook(freq)
-        enc = plan.executables["encode"](data, book)
-        return encoded_to_sections(enc, data.shape, data.dtype, self.name)
+        return super().encode(plan, data, **hooks)
+
+    def finish_container(self, plan, env, view) -> Compressed:
+        spec = plan.spec
+        return entropy_container(
+            plan, env, view, self.name, spec.shape, spec.dtype,
+            n_symbols=math.prod(spec.shape),
+        )
 
     def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
-        keys = plan.executables["decode"](sections_to_encoded(c))
+        enc = sections_to_encoded(c)
+        keys = huffman.decode(enc, tables=plan_decode_tables(plan, enc.length_table))
         return keys.reshape(tuple(c.meta["shape"])).astype(jnp.dtype(c.meta["dtype"]))
 
     def decode_spec(self, c: Compressed) -> ReductionSpec:
@@ -99,9 +171,15 @@ class HuffmanBytesCodec(Codec):
 
     spec_defaults = {}
 
+    def build_stages(self, spec: ReductionSpec) -> sg.StageGraph:
+        return sg.StageGraph(
+            stages=(sg.ByteKeys(),) + entropy_tail_stages(num_bins=256),
+            finish_keys=("words", "chunk_offsets"),
+        )
+
     def plan(self, spec: ReductionSpec) -> ReductionPlan:
         spec = spec.resolved()
-        return ReductionPlan(
+        plan = ReductionPlan(
             spec=spec,
             executables={
                 "histogram": partial(
@@ -111,19 +189,35 @@ class HuffmanBytesCodec(Codec):
                 "decode": huffman.decode,
             },
         )
+        return self._attach_pipeline(plan)
 
-    def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
-        orig_dtype = np.asarray(data).dtype
-        byte_keys = jnp.asarray(
-            np.ascontiguousarray(np.asarray(data)).view(np.uint8)
-        ).astype(jnp.int32)
-        freq = np.asarray(plan.executables["histogram"](byte_keys))
-        book = huffman.build_codebook(freq)
-        enc = plan.executables["encode"](byte_keys, book)
-        return encoded_to_sections(enc, np.shape(data), orig_dtype, self.name)
+    def encode(
+        self, plan: ReductionPlan, data: jax.Array, *,
+        env=None, profile: dict | None = None,
+    ) -> Compressed:
+        # The byte view is a host reinterpretation (no copy for contiguous
+        # input); the engine's stacked path arrives here pre-viewed by
+        # leaf_policy, so both shapes feed the pipeline identical bytes.
+        byte_view = np.ascontiguousarray(np.asarray(data)).view(np.uint8)
+        state, env = plan.pipeline.run({"data": byte_view}, env=env,
+                                       profile=profile)
+        return self.finish_container(
+            plan, env, sg.LeafView(state, None, env)
+        )
+
+    def finish_container(self, plan, env, view) -> Compressed:
+        spec = plan.spec
+        n_symbols = math.prod(spec.shape) * np.dtype(spec.dtype).itemsize
+        return entropy_container(
+            plan, env, view, self.name, spec.shape, spec.dtype,
+            n_symbols=n_symbols,
+        )
 
     def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
-        keys = np.asarray(plan.executables["decode"](sections_to_encoded(c)))
+        enc = sections_to_encoded(c)
+        keys = np.asarray(
+            huffman.decode(enc, tables=plan_decode_tables(plan, enc.length_table))
+        )
         byte_view = keys.astype(np.uint8)
         return jnp.asarray(
             byte_view.view(np.dtype(c.meta["dtype"])).reshape(tuple(c.meta["shape"]))

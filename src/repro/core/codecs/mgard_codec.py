@@ -1,15 +1,27 @@
 """MGARD-X codec: error-bounded lossy compression behind the registry.
 
-The plan carries everything that depends only on (shape, dtype, dict_size):
-the padded dyadic grid, the level map as a persistent device buffer, the
-level count, and the jitted decompose/quantize/dequantize/recompose
-executables with their static arguments bound.  Per-call work is reduced to
-the data-dependent parts — value range (relative bounds), bin schedule,
-entropy coding — which is exactly the split the paper's CMM caches.
+Declared as the full stage graph of paper Algorithm 1:
+
+    mgard_decorrelate → [bin_schedule] → uniform_quantize →
+    huffman_histogram → [codebook_build] → huffman_entropy → bit_pack
+
+Bracketed stages are the two host barriers — the bin schedule reads one
+(vmin, vmax) scalar pair and the codebook build reads the dict-size
+histogram; everything else, *including the entropy stage and the escape
+(outlier) compaction*, is device-resident.  The compiled pipeline therefore
+has three fused device segments, which is what lets MGARD buckets ride the
+execution engine's stacked ``shard_map`` path instead of fanning out over
+host futures.
+
+The plan still carries the classic per-stage executables
+(decompose/recompose/quantize/dequantize) with the level map as a donated
+persistent workspace buffer — the progressive refactor path shares them via
+the same CMM entries.
 """
 
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
@@ -17,11 +29,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import huffman, mgard
+from .. import stages as sg
 from ..container import Compressed
 from ..quantize import unsigned_to_signed
 from . import register_codec
 from .base import Codec, ReductionPlan, ReductionSpec
-from .huffman_codec import encoded_to_sections, sections_to_encoded
+from .huffman_codec import (
+    entropy_container,
+    entropy_tail_stages,
+    plan_decode_tables,
+    sections_to_encoded,
+)
 
 _unsigned_to_signed_jit = jax.jit(unsigned_to_signed)
 
@@ -32,21 +50,45 @@ class MGARDCodec(Codec):
 
     spec_defaults = {"error_bound": 1e-2, "relative": True, "dict_size": 4096}
 
+    def build_stages(self, spec: ReductionSpec) -> sg.StageGraph:
+        shape = spec.shape
+        dict_size = int(spec.param("dict_size", 4096))
+        padded = tuple(mgard.padded_dim(n) for n in shape)
+        L = mgard.total_levels(padded)
+        return sg.StageGraph(
+            stages=(
+                sg.MgardDecorrelate(shape),
+                sg.BinSchedule(
+                    float(spec.param("error_bound", 1e-2)),
+                    bool(spec.param("relative", True)),
+                    L,
+                ),
+                sg.UniformQuantize(padded, dict_size),
+            )
+            + entropy_tail_stages(num_bins=dict_size),
+            # q/keys stay device-resident; they are only fetched on the rare
+            # outlier-cap overflow fallback (see finish_container)
+            finish_keys=(
+                "words", "chunk_offsets",
+                "out_count", "out_idx", "out_val", "q", "keys",
+            ),
+        )
+
     def plan(self, spec: ReductionSpec) -> ReductionPlan:
         spec = spec.resolved()
         shape = spec.shape
         dict_size = int(spec.param("dict_size", 4096))
         padded = tuple(mgard.padded_dim(n) for n in shape)
         L = mgard.total_levels(padded)
-        # Backend binding: the quantize/dequantize Map&Process stages and the
-        # entropy stage dispatch through the kernel registry with the spec's
-        # adapter baked in; decompose/recompose stay on the portable jnp path
-        # under every backend (no per-backend kernel exists for them — the
-        # paper's fallback rule), which also keeps the produced bitstream
-        # backend-independent.  The level map is *donated* to the planned
-        # stages and the recycled buffer re-stored (true in-place workspace
-        # recycling where the platform supports donation).
-        return ReductionPlan(
+        # Classic executables (shared with core/progressive.py): the
+        # quantize/dequantize Map&Process stages dispatch through the kernel
+        # registry with the spec's adapter baked in; decompose/recompose
+        # stay on the portable jnp path under every backend (the paper's
+        # fallback rule), which also keeps streams backend-independent.
+        # The level map is *donated* to the planned stages and the recycled
+        # buffer re-stored — the stage pipeline's quantize segment routes
+        # through the same workspace buffer and the same donation contract.
+        plan = ReductionPlan(
             spec=spec,
             executables={
                 "decompose": partial(mgard.decompose, shape=shape),
@@ -60,52 +102,43 @@ class MGARDCodec(Codec):
             meta={"padded": padded, "L": L, "dict_size": dict_size,
                   "backend": spec.backend},
         )
+        return self._attach_pipeline(plan)
 
-    def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
+    def finish_container(self, plan, env, view) -> Compressed:
         spec = plan.spec
-        data = jnp.asarray(data)
-        eb0 = float(spec.param("error_bound", 1e-2))
-        relative = bool(spec.param("relative", True))
         dict_size = plan.meta["dict_size"]
-        if relative:
-            vrange = float(jnp.max(data) - jnp.min(data))
-            eb = eb0 * vrange
-        else:
-            eb = eb0
-        eb = eb if eb > 0 else eb0
-
-        coeffs = plan.executables["decompose"](data)
-        L = plan.meta["L"]
-        bins = mgard.level_bins(eb, L)
-        # Workspace donation: the executable consumes the level map and
-        # returns the recycled buffer; serialize access so concurrent engine
-        # workers sharing this plan never donate the same buffer twice.
-        with plan.lock:
-            q, keys, inlier, lmap = plan.executables["quantize"](
-                coeffs, plan.workspace["lmap"], jnp.asarray(bins, jnp.float32)
-            )
-            plan.recycle("lmap", lmap)
+        c = entropy_container(
+            plan, env, view, self.name, spec.shape, spec.dtype,
+            n_symbols=math.prod(plan.meta["padded"]),
+        )
         # Outliers: stored losslessly (sparse), like MGARD's escape path.
-        inlier_np = np.asarray(inlier).reshape(-1)
-        out_idx = np.nonzero(~inlier_np)[0]
-        out_val = np.asarray(q).reshape(-1)[out_idx]
-        enc = huffman.compress(keys, dict_size, adapter=plan.meta["backend"])
-
-        c = encoded_to_sections(enc, data.shape, data.dtype, self.name)
+        # The device compaction bounds the fetch to the occupied slots; a
+        # leaf overflowing the cap falls back to a full fetch (escape keys
+        # mark the outlier positions exactly).
+        n_out = int(view.fetch("out_count"))
+        if n_out <= plan.meta["out_cap"]:
+            out_idx = view.fetch("out_idx", n_out).astype(np.int64)
+            out_val = view.fetch("out_val", n_out).astype(np.int32)
+        else:
+            keys = view.fetch("keys").reshape(-1)
+            qf = view.fetch("q").reshape(-1)
+            out_idx = np.nonzero(keys == dict_size - 1)[0].astype(np.int64)
+            out_val = qf[out_idx].astype(np.int32)
         c.meta.update(
             padded=plan.meta["padded"],
-            error_bound=float(eb),
+            error_bound=float(env.meta["error_bound"]),
             dict_size=dict_size,
         )
         c.arrays.update(
-            outlier_idx=out_idx.astype(np.int64),
-            outlier_val=out_val.astype(np.int32),
-            bins=bins,
+            outlier_idx=out_idx,
+            outlier_val=out_val,
+            bins=np.asarray(env.meta["bins"], np.float64),
         )
         return c
 
     def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
-        keys = huffman.decompress(sections_to_encoded(c))
+        enc = sections_to_encoded(c)
+        keys = huffman.decode(enc, tables=plan_decode_tables(plan, enc.length_table))
         q = _unsigned_to_signed_jit(keys.astype(jnp.uint32))
         qf = np.asarray(q).reshape(-1)
         out_idx = np.asarray(c.arrays["outlier_idx"])

@@ -1,10 +1,10 @@
 """ZFP-X codec: fixed-rate lossy compression behind the registry.
 
-The whole transform chain is shape/rate-static, so the plan is simply the
-two jitted executables with (rate, dims, shape) bound — a second call with
-the same spec reuses the compiled program and its workspace without
-re-tracing.  Validation (ndim ≤ 4, rate ∈ [1, 32]) happens at plan time:
-an invalid spec never enters the CMM.
+The stage graph is a single device stage — ZFP's whole transform chain is
+shape/rate-static, so the compiled pipeline is one fused executable with no
+host barrier at all (it was the first codec on the engine's stacked
+``shard_map`` path for exactly that reason).  Validation (ndim ≤ 4,
+rate ∈ [1, 32]) happens at plan time: an invalid spec never enters the CMM.
 """
 
 from __future__ import annotations
@@ -13,9 +13,9 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .. import zfp
+from .. import stages as sg
 from ..container import Compressed
 from . import register_codec
 from .base import Codec, ReductionPlan, ReductionSpec
@@ -27,6 +27,13 @@ class ZFPCodec(Codec):
 
     spec_defaults = {"rate": 16}
 
+    def build_stages(self, spec: ReductionSpec) -> sg.StageGraph:
+        rate = int(spec.param("rate", 16))
+        return sg.StageGraph(
+            stages=(sg.ZfpBlockTransform(rate, len(spec.shape), spec.shape),),
+            finish_keys=("payload", "emax"),
+        )
+
     def plan(self, spec: ReductionSpec) -> ReductionPlan:
         spec = spec.resolved()
         rate = int(spec.param("rate", 16))
@@ -37,7 +44,7 @@ class ZFPCodec(Codec):
             raise ValueError("rate must be in [1, 32] bits/value")
         # The backend adapter is baked into the jitted executables here —
         # kernel dispatch happens once, at plan time.
-        return ReductionPlan(
+        plan = ReductionPlan(
             spec=spec,
             executables={
                 "encode": partial(
@@ -51,18 +58,20 @@ class ZFPCodec(Codec):
             },
             meta={"rate": rate, "dims": dims},
         )
+        return self._attach_pipeline(plan)
 
-    def encode(self, plan: ReductionPlan, data: jax.Array) -> Compressed:
-        payload, emax = plan.executables["encode"](jnp.asarray(data))
-        return Compressed(
+    def finish_container(self, plan, env, view) -> Compressed:
+        c = Compressed(
             method=self.name,
             meta={
                 "shape": plan.spec.shape,
                 "dtype": plan.spec.dtype,
                 "rate": plan.meta["rate"],
             },
-            arrays={"payload": np.asarray(payload), "emax": np.asarray(emax)},
+            arrays={"payload": view.fetch("payload"), "emax": view.fetch("emax")},
         )
+        c.meta["stages"] = plan.meta.get("stage_graph", [])
+        return c
 
     def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
         out = plan.executables["decode"](
@@ -77,28 +86,3 @@ class ZFPCodec(Codec):
         return ReductionSpec.create(
             self.name, c.meta["shape"], c.meta["dtype"], rate=int(c.meta["rate"])
         )
-
-    # -- batched execution (engine fan-out) ---------------------------------
-
-    supports_batched_encode = True
-
-    def batched_encode_executable(self, plan: ReductionPlan):
-        enc = plan.executables["encode"]
-        return jax.vmap(lambda x: enc(x))
-
-    def batched_encode_finish(
-        self, plan: ReductionPlan, out, k: int
-    ) -> list[Compressed]:
-        payload, emax = (np.asarray(a) for a in out)
-        return [
-            Compressed(
-                method=self.name,
-                meta={
-                    "shape": plan.spec.shape,
-                    "dtype": plan.spec.dtype,
-                    "rate": plan.meta["rate"],
-                },
-                arrays={"payload": payload[i], "emax": emax[i]},
-            )
-            for i in range(k)
-        ]

@@ -42,20 +42,61 @@ class ReductionContext:
     def nbytes(self) -> int:
         total = 0
         for buf in self.buffers.values():
-            total += getattr(buf, "nbytes", 0)
+            nb = getattr(buf, "nbytes", 0)
+            total += int(nb() if callable(nb) else nb)
         return total
 
 
 class ContextCache:
-    """Hash-map context cache with LRU eviction (HPDR CMM)."""
+    """Hash-map context cache with LRU eviction (HPDR CMM).
 
-    def __init__(self, capacity: int = 64):
+    Eviction runs on two policies: entry count (``capacity``, the classic
+    plan-cache bound) and, when ``capacity_bytes`` is set, total tracked
+    buffer bytes — the memory-pressure policy the serving engine's parked
+    KV pages sit behind.  ``on_evict(ctx)`` fires for every evicted context
+    *outside* the cache lock, so a spill handler can persist the evicted
+    buffers (and must not call back into the cache).
+    """
+
+    def __init__(
+        self,
+        capacity: int = 64,
+        capacity_bytes: int | None = None,
+        on_evict: Callable[[ReductionContext], None] | None = None,
+    ):
         self.capacity = capacity
+        self.capacity_bytes = capacity_bytes
+        self.on_evict = on_evict
         self._lock = threading.Lock()
         self._entries: OrderedDict[Hashable, ReductionContext] = OrderedDict()
         self.hit_count = 0
         self.miss_count = 0
         self.evict_count = 0
+
+    def _evict_over_capacity(self) -> list[ReductionContext]:
+        """Pop LRU entries past either capacity bound (lock held).
+
+        The most recent entry is never evicted — a single context larger
+        than the byte budget stays resident while in use.
+        """
+        evicted = []
+        while len(self._entries) > self.capacity and len(self._entries) > 1:
+            evicted.append(self._entries.popitem(last=False)[1])
+            self.evict_count += 1
+        if self.capacity_bytes is not None:
+            # Recomputed (not a running counter) because tracked contexts
+            # grow after insertion — plans accrete decode tables into their
+            # workspace.  Byte-capacity caches hold few, large entries
+            # (parked sessions), so the walk is cheap relative to the
+            # compression that precedes every insert; the hot plan cache
+            # (GLOBAL_CMM) sets no byte bound and never pays this.
+            total = sum(c.nbytes() for c in self._entries.values())
+            while total > self.capacity_bytes and len(self._entries) > 1:
+                _, ctx = self._entries.popitem(last=False)
+                total -= ctx.nbytes()
+                evicted.append(ctx)
+                self.evict_count += 1
+        return evicted
 
     def get_or_create(
         self, key: Hashable, builder: Callable[[], ReductionContext]
@@ -80,10 +121,26 @@ class ContextCache:
         with self._lock:
             self._entries[key] = ctx
             self._entries.move_to_end(key)
-            while len(self._entries) > self.capacity:
-                self._entries.popitem(last=False)
-                self.evict_count += 1
+            evicted = self._evict_over_capacity()
+        if self.on_evict is not None:
+            for victim in evicted:
+                self.on_evict(victim)
         return ctx
+
+    def evict(self, key: Hashable) -> ReductionContext | None:
+        """Explicitly drop one context (fires ``on_evict``); None if absent."""
+        with self._lock:
+            ctx = self._entries.pop(key, None)
+            if ctx is not None:
+                self.evict_count += 1
+        if ctx is not None and self.on_evict is not None:
+            self.on_evict(ctx)
+        return ctx
+
+    def discard(self, key: Hashable) -> ReductionContext | None:
+        """Silently drop one context (no ``on_evict``, e.g. replacement)."""
+        with self._lock:
+            return self._entries.pop(key, None)
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -15,11 +15,15 @@ split alone does not give:
      reductions — pytree leaves, stream chunks — are scheduled across the
      mesh's ``data``-axis devices.  Same-spec leaves are bucketed so each
      bucket builds *one* plan (a CMM miss) and every other leaf is a real
-     CMM hit; fully-jittable codecs (ZFP) are additionally stacked and run
-     through one ``shard_map`` over the ``data`` axis, while host-staged
-     codecs fan out over :class:`~repro.runtime.executor.DeviceExecutor`
-     futures.  ``submit()/result()`` expose the future surface the
-     checkpoint writer and the serving engine's KV parking run on.
+     CMM hit; every stage-graph codec's bucket is stacked and driven
+     through the plan's compiled pipeline under ``shard_map`` over the
+     ``data`` axis — each fused device segment is vmapped over the leaf
+     axis, and the host barriers (codebook construction) loop over
+     metadata-scale per-leaf fetches.  Since PR 3 that includes the
+     formerly host-staged codecs (MGARD, Huffman): their entropy stage is
+     device-resident, so the per-leaf host-future fan-out only remains for
+     singleton buckets.  ``submit()/result()`` expose the future surface
+     the checkpoint writer and the serving engine's KV parking run on.
 
 Most callers use the process-wide :func:`default_engine` (all local devices
 on one ``data`` axis) implicitly through ``api.compress_pytree``; custom
@@ -35,6 +39,7 @@ meshes/backends construct :class:`ExecutionEngine` directly::
 from __future__ import annotations
 
 import threading
+from collections import OrderedDict
 from typing import Any, Callable
 
 import jax
@@ -47,7 +52,8 @@ from . import adapters
 from .codecs import get_codec
 from .codecs.base import ReductionSpec
 from .container import Compressed
-from ..runtime.executor import COMPUTE, DeviceExecutor, Submission
+from .stages.base import CallEnv, LeafView, TransferStats
+from ..runtime.executor import COMPUTE, MESH, DeviceExecutor, Submission
 
 
 def data_devices(mesh: Mesh | None) -> list:
@@ -97,8 +103,15 @@ class ExecutionEngine:
             self.devices, max_workers=max_workers, io_workers=io_workers
         )
         self._lock = threading.Lock()
+        # LRU-bounded: entries pin their vmapped segment (and its compiled
+        # traces) alive, so an unbounded map would defeat CMM plan eviction
+        # in long-running processes with high spec diversity.
+        self._smap_cache: "OrderedDict[int, Callable]" = OrderedDict()
+        self._smap_capacity = 128
         self.shard_map_calls = 0
         self.sharded_leaves = 0
+        self.transfer_h2d = 0
+        self.transfer_d2h = 0
 
     # ----------------------------------------------------------- single spec
 
@@ -194,22 +207,32 @@ class ExecutionEngine:
 
         results: dict[str, Compressed] = {}
         pending: list[tuple[str, Submission]] = []
+        stacked: list[tuple[list, Submission]] = []
         for spec, items in buckets.items():
             codec = get_codec(spec.method)
-            if codec.supports_batched_encode and len(items) > 1:
-                for (key, arr, _x, _s), c in zip(
-                    items, self._encode_bucket_sharded(codec, spec, items)
-                ):
-                    api.finish_leaf_meta(c, arr)
-                    results[key] = c
-                with self._lock:
-                    self.sharded_leaves += len(items)
-                stats["sharded_leaves"] += len(items)
+            if (
+                codec.supports_batched_encode
+                and len(items) > 1
+                and api.get_plan(spec).pipeline is not None
+            ):
+                # whole-mesh task: stacked buckets overlap each other's host
+                # barriers (codebook builds) on the compute pool
+                stacked.append((items, self.executor.submit(
+                    self._encode_bucket_sharded, codec, spec, items,
+                    device=MESH,
+                )))
             else:
                 for key, arr, x, spec_i in items:
                     pending.append(
                         (key, self.executor.submit(self._encode_leaf, spec_i, x, arr))
                     )
+        for items, sub in stacked:
+            for (key, arr, _x, _s), c in zip(items, sub.result()):
+                api.finish_leaf_meta(c, arr)
+                results[key] = c
+            with self._lock:
+                self.sharded_leaves += len(items)
+            stats["sharded_leaves"] += len(items)
         for key, sub in pending:
             results[key] = sub.result()
 
@@ -247,16 +270,26 @@ class ExecutionEngine:
     def _encode_leaf(self, spec: ReductionSpec, x: np.ndarray, arr: np.ndarray):
         from . import api
 
-        c = api.encode(spec, jnp.asarray(x))
+        plan = api.get_plan(spec)
+        env = CallEnv(plan)
+        c = get_codec(spec.method).encode(plan, jnp.asarray(x), env=env)
         api.finish_leaf_meta(c, arr)
+        with self._lock:
+            self.transfer_h2d += env.transfers.h2d
+            self.transfer_d2h += env.transfers.d2h
         return c
 
     def _encode_bucket_sharded(self, codec, spec: ReductionSpec, items) -> list:
-        """Stack same-spec leaves and encode them under one ``shard_map``.
+        """Stack same-spec leaves and drive them through the plan's compiled
+        stage pipeline, one ``shard_map`` per fused device segment.
 
         The bucket's plan was resolved per leaf during bucketing (CMM hit
         accounting); the stack is padded to a multiple of the ``data``-axis
-        size and the pad rows dropped.
+        size and the pad rows dropped at serialisation.  Host stages (bin
+        schedules, codebook construction) loop over per-leaf metadata-scale
+        fetches — the only host work in the bucket — while every array-scale
+        intermediate (coefficients, keys, codes, words) stays device
+        resident until the exact-sized container fetch.
         """
         from . import api
 
@@ -266,23 +299,64 @@ class ExecutionEngine:
         pad = (-k) % n
         if pad:
             stacked = np.concatenate([stacked, np.repeat(stacked[-1:], pad, 0)])
-        fn = codec.batched_encode_executable(plan)
-        in_specs = P(*(["data"] + [None] * (stacked.ndim - 1)))
-        out_shapes = jax.eval_shape(
-            fn, jax.ShapeDtypeStruct(stacked.shape, stacked.dtype)
+        transfers = TransferStats()
+        envs = [CallEnv(plan, transfers) for _ in range(k + pad)]
+        state = plan.pipeline.run_batched(
+            {"data": stacked}, envs, self._mesh_segment_mapper(), transfers
         )
-        out_specs = jax.tree.map(
-            lambda s: P(*(["data"] + [None] * (len(s.shape) - 1))), out_shapes
-        )
-        mapped = shard_map(
-            fn, mesh=self.mesh, in_specs=(in_specs,), out_specs=out_specs,
-            check_rep=False,
-        )
-        out = mapped(jnp.asarray(stacked))
+        out = [
+            codec.finish_container(
+                plan, envs[i], LeafView(state, i, envs[i], transfers)
+            )
+            for i in range(k)
+        ]
         with self._lock:
-            self.shard_map_calls += 1
-        out = jax.tree.map(lambda a: a[:k], out)
-        return codec.batched_encode_finish(plan, out, k)
+            self.shard_map_calls += len(plan.pipeline.device_segments)
+            self.transfer_h2d += transfers.h2d
+            self.transfer_d2h += transfers.d2h
+        return out
+
+    def _mesh_segment_mapper(self) -> Callable:
+        """Wrap a vmapped pipeline segment in this engine's mesh shard_map.
+
+        State and per-leaf operands split over the ``data`` axis; plan
+        workspace buffers are replicated.  The wrapped executable is cached
+        per vmapped segment (the pipeline keeps segment identity stable per
+        statics tuple, so jit re-traces only on genuinely new shapes).
+        """
+
+        def shard(a) -> P:
+            return P(*(["data"] + [None] * (np.ndim(a) - 1)))
+
+        def mapper(seg, vfn, state_vals, operand_vals, ws_vals):
+            key = id(vfn)
+            with self._lock:
+                exe = self._smap_cache.get(key)
+                if exe is not None:
+                    self._smap_cache.move_to_end(key)
+            if exe is None:
+                in_specs = (
+                    tuple(shard(a) for a in state_vals),
+                    tuple(shard(a) for a in operand_vals),
+                    tuple(P(*([None] * np.ndim(a))) for a in ws_vals),
+                )
+                out_shapes = jax.eval_shape(vfn, state_vals, operand_vals, ws_vals)
+                out_specs = jax.tree.map(
+                    lambda s: P(*(["data"] + [None] * (len(s.shape) - 1))),
+                    out_shapes,
+                )
+                exe = shard_map(
+                    vfn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=False,
+                )
+                with self._lock:
+                    exe = self._smap_cache.setdefault(key, exe)
+                    self._smap_cache.move_to_end(key)
+                    while len(self._smap_cache) > self._smap_capacity:
+                        self._smap_cache.popitem(last=False)
+            return exe(state_vals, operand_vals, ws_vals)
+
+        return mapper
 
     # -------------------------------------------------------------- lifecycle
 
@@ -293,6 +367,8 @@ class ExecutionEngine:
                 backend=self.backend,
                 shard_map_calls=self.shard_map_calls,
                 sharded_leaves=self.sharded_leaves,
+                transfer_h2d=self.transfer_h2d,
+                transfer_d2h=self.transfer_d2h,
             )
         return s
 

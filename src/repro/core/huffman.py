@@ -253,11 +253,18 @@ def _encode_jit(
         code, length = encode_ops.encode_lookup(
             keys, codes_t, lengths_t, adapter=adapter
         )
-    offsets = bs.exclusive_cumsum(length)
-    total_bits = offsets[-1] + length[-1] if keys.shape[0] else jnp.int32(0)
-    words = bs.pack_bits(code, length, total_bits, num_words)
-    chunk_offsets = offsets[::chunk_size].astype(jnp.int32)
-    return words, chunk_offsets, total_bits
+    if keys.shape[0] == 0:
+        return (
+            jnp.zeros(num_words, jnp.uint32),
+            jnp.zeros(0, jnp.int32),
+            jnp.int32(0),
+        )
+    # serialization tail shared with the stage pipeline's bit_pack stage —
+    # one implementation, so host-encoder and device-pipeline streams can
+    # never drift apart
+    from repro.kernels.huffman_encode import ref as encode_ref  # lazy
+
+    return encode_ref.pack_stream(code, length, num_words, chunk_size)
 
 
 def symbol_lengths_total(keys: jax.Array, lengths_t: jax.Array) -> int:
@@ -329,20 +336,62 @@ def _decode_jit(
     return jax.vmap(chunk)(chunk_offsets.astype(jnp.int32))
 
 
-def decode(enc: Encoded) -> jax.Array:
-    """Decode a Huffman-X bitstream back to keys (uint/int32 array)."""
-    book = canonical_codebook_from_lengths(enc.length_table)
+@dataclass
+class DecodeTables:
+    """Device-staged canonical decode tables derived from a length table.
+
+    Rebuildable from ``length_table`` alone, but derivation + H2D staging is
+    per-stream work worth caching: decode plans store these in their CMM
+    workspace (keyed by the length table's digest), so repeated decompress
+    calls of same-codebook streams are cache hits.  ``nbytes`` makes the
+    cached bytes visible to CMM accounting.
+    """
+
+    first_code: jax.Array   # uint32[max_len+1]
+    count: jax.Array        # int32[max_len+1]
+    sym_offset: jax.Array   # int32[max_len+1]
+    sym_sorted: jax.Array   # int32[num_used]
+    max_len: int
+
+    @property
+    def nbytes(self) -> int:
+        return int(
+            self.first_code.nbytes + self.count.nbytes
+            + self.sym_offset.nbytes + self.sym_sorted.nbytes
+        )
+
+
+def decode_tables(length_table: np.ndarray) -> DecodeTables:
+    """Build (and device-stage) the decode tables for one length table."""
+    book = canonical_codebook_from_lengths(np.asarray(length_table, np.int32))
+    return DecodeTables(
+        first_code=jnp.asarray(book.first_code, jnp.uint32),
+        count=jnp.asarray(book.count, jnp.int32),
+        sym_offset=jnp.asarray(book.sym_offset, jnp.int32),
+        sym_sorted=jnp.asarray(book.sym_sorted, jnp.int32),
+        max_len=int(book.max_len),
+    )
+
+
+def decode(enc: Encoded, tables: DecodeTables | None = None) -> jax.Array:
+    """Decode a Huffman-X bitstream back to keys (uint/int32 array).
+
+    ``tables`` short-circuits the per-call codebook derivation — pass the
+    plan-cached :class:`DecodeTables` when decoding repeatedly.
+    """
+    if tables is None:
+        tables = decode_tables(enc.length_table)
     n_chunks = int(enc.chunk_offsets.shape[0])
     syms = _decode_jit(
         enc.words,
         enc.chunk_offsets,
-        jnp.asarray(book.first_code, jnp.uint32),
-        jnp.asarray(book.count, jnp.int32),
-        jnp.asarray(book.sym_offset, jnp.int32),
-        jnp.asarray(book.sym_sorted, jnp.int32),
+        tables.first_code,
+        tables.count,
+        tables.sym_offset,
+        tables.sym_sorted,
         enc.chunk_size,
         n_chunks,
-        max(book.max_len, 1),
+        max(tables.max_len, 1),
     )
     return syms.reshape(-1)[: enc.n_symbols]
 

@@ -1,0 +1,34 @@
+"""Stage-graph codec pipeline (see :mod:`repro.core.stages.base`).
+
+Codecs declare their pipelines as :class:`StageGraph` compositions of the
+concrete stages in :mod:`repro.core.stages.library`;
+``ReductionPlan.pipeline`` holds the compiled form (fused device segments +
+host barriers).  Custom stages subclass :class:`Stage` and slot into a
+codec's ``build_stages`` — see docs/api.md, "Stage graph".
+"""
+
+from __future__ import annotations
+
+from .base import (  # noqa: F401
+    CallEnv,
+    CompiledPipeline,
+    LeafView,
+    Stage,
+    StageGraph,
+    TraceEnv,
+    TransferStats,
+)
+from .library import (  # noqa: F401
+    AlphabetBind,
+    AlphabetScan,
+    BinSchedule,
+    BitPack,
+    ByteKeys,
+    CodebookBuild,
+    HuffmanEntropy,
+    HuffmanHistogram,
+    IntKeys,
+    MgardDecorrelate,
+    UniformQuantize,
+    ZfpBlockTransform,
+)

@@ -1,0 +1,577 @@
+"""Stage-graph codec pipeline — reductions as composable device stages.
+
+HPDR's architectural claim (paper §III, Fig. 1) is that a reduction is a
+*pipeline of composable stages* — decorrelate → quantize → entropy → pack —
+that runs end-to-end on the device, with host↔device traffic reduced to the
+few metadata-scale synchronisation points the algorithm genuinely needs
+(2.3% of runtime in the paper's measurement).  This package makes that
+structure explicit:
+
+  * :class:`Stage` — the protocol one pipeline stage implements.  *Device*
+    stages expose pure, jittable ``apply``/``invert`` transformations of the
+    flowing state; *host* stages are the explicit synchronisation points
+    (e.g. canonical-codebook construction from the device histogram) and
+    declare exactly which state keys they pull to host (``fetches``) — the
+    quantity the transfer-bytes benchmark tracks.
+  * :class:`StageGraph` — a codec's declarative stage composition plus the
+    state keys its container serialiser consumes (``finish_keys``).
+  * :class:`CompiledPipeline` — what ``StageGraph.compile(plan)`` produces
+    and ``ReductionPlan.pipeline`` stores: maximal runs of device stages
+    fused into **one jitted executable per segment** (host barriers are the
+    only cut points), with liveness-pruned inputs/outputs so intermediate
+    arrays never leave the device.
+
+The same compiled segments serve both execution shapes: the per-leaf path
+(:meth:`CompiledPipeline.run`) and the execution engine's stacked
+``shard_map`` path (:meth:`CompiledPipeline.run_batched`), where every
+device segment is vmapped over the leaf axis and the host stages loop over
+metadata-scale per-leaf fetches.  That is what lets the host-staged codecs
+(MGARD, Huffman) join ZFP on the engine's stacked fan-out: the only host
+work left per bucket is codebook construction.
+
+State is a flat ``dict[str, Array]``; stages declare ``reads``/``writes``
+so the compiler can partition and prune without tracing.  Statics (e.g. the
+packed word-buffer size) flow through :class:`CallEnv` — host stages set
+them, and each later segment is re-jitted per distinct static tuple (with
+:meth:`Stage.jit_statics` rounding, so e.g. word buffers bucket to 4 KiB
+multiples instead of retracing per byte-length).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import adapters
+
+
+# ---------------------------------------------------------------------------
+# transfer accounting
+# ---------------------------------------------------------------------------
+
+
+def _nbytes(a: Any) -> int:
+    return int(getattr(a, "nbytes", 0))
+
+
+@dataclass
+class TransferStats:
+    """Host↔device byte accounting for pipeline executions.
+
+    ``d2h`` counts exactly the bytes host stages fetch plus the bytes the
+    container serialiser pulls (:meth:`LeafView.fetch`); ``h2d`` counts the
+    input staging plus operands host stages ship back.  This is the
+    observable behind the paper's 2.3%-transfer claim, emitted per codec by
+    ``scripts/check.sh bench stages``.
+    """
+
+    h2d: int = 0
+    d2h: int = 0
+
+    def count_h2d(self, *arrays: Any) -> None:
+        self.h2d += sum(_nbytes(a) for a in arrays)
+
+    def count_d2h(self, *arrays: Any) -> None:
+        self.d2h += sum(_nbytes(a) for a in arrays)
+
+    def as_dict(self) -> dict[str, int]:
+        return {"h2d_bytes": self.h2d, "d2h_bytes": self.d2h}
+
+
+# ---------------------------------------------------------------------------
+# per-call environment
+# ---------------------------------------------------------------------------
+
+
+class CallEnv:
+    """Mutable per-call environment threaded through one pipeline run.
+
+    Host stages write three kinds of products here:
+      * ``meta``     — per-call metadata destined for the container header
+                       (per-stage sections, see :meth:`StageGraph.describe`);
+      * ``operands`` — host-built arrays later device segments consume
+                       (canonical codebook tables, bin schedules), shipped
+                       H2D once per call;
+      * ``statics``  — python ints later segments are specialised on
+                       (packed word count, alphabet size).
+    """
+
+    __slots__ = ("plan", "spec", "meta", "operands", "statics", "transfers")
+
+    def __init__(self, plan: Any, transfers: TransferStats | None = None):
+        self.plan = plan
+        self.spec = plan.spec
+        self.meta: dict[str, Any] = {}
+        self.operands: dict[str, Any] = {}
+        self.statics: dict[str, int] = dict(plan.meta.get("statics", ()) or {})
+        self.transfers = transfers if transfers is not None else TransferStats()
+
+
+class TraceEnv:
+    """What a device stage sees inside a fused jitted segment: traced
+    operand/workspace arrays plus the segment's static values."""
+
+    __slots__ = ("statics", "backend", "_operands", "_workspace")
+
+    def __init__(self, statics: dict, backend: str, operands: dict, workspace: dict):
+        self.statics = statics
+        self.backend = backend
+        self._operands = operands
+        self._workspace = workspace
+
+    def static(self, name: str) -> Any:
+        return self.statics[name]
+
+    def operand(self, name: str) -> jax.Array:
+        return self._operands[name]
+
+    def workspace(self, name: str) -> jax.Array:
+        return self._workspace[name]
+
+
+# ---------------------------------------------------------------------------
+# the Stage protocol
+# ---------------------------------------------------------------------------
+
+
+class Stage:
+    """One named, composable pipeline stage.
+
+    Device stages (``device = True``) implement :meth:`apply` (and
+    :meth:`invert` for the decode direction) as *pure jittable* functions:
+    they may only read the declared ``reads`` state keys, ``operands``,
+    ``workspace`` buffers and ``statics``, and must return the declared
+    ``writes``.  The compiler fuses consecutive device stages into one
+    jitted executable — a stage never implies a dispatch boundary.
+
+    Host stages (``device = False``) implement :meth:`host_apply`.  They are
+    the explicit synchronisation points of the graph: ``fetches`` names the
+    state keys pulled D2H (metadata scale by design), and anything they put
+    in ``env.operands`` is shipped H2D for the segments that follow.
+
+    ``stage_meta`` is the stage's metadata contract: the static,
+    plan-derived parameters recorded per stage in the container header so a
+    reader can reconstruct the pipeline that wrote a stream.
+    """
+
+    name: str = "stage"
+    device: bool = True
+    reads: tuple[str, ...] = ()
+    writes: tuple[str, ...] = ()
+    operands: tuple[str, ...] = ()
+    workspace: tuple[str, ...] = ()
+    donates: tuple[str, ...] = ()
+    statics: tuple[str, ...] = ()
+    fetches: tuple[str, ...] = ()         # host stages only
+    static_outputs: tuple[str, ...] = ()  # host stages only
+
+    def planned(self, plan: Any) -> None:
+        """Plan-time hook: record plan-constant statics/workspace/meta."""
+
+    # -- device stages -------------------------------------------------------
+
+    def apply(self, env: TraceEnv, state: dict) -> dict:
+        raise NotImplementedError(f"{self.name} is not a device stage")
+
+    def invert(self, env: TraceEnv, state: dict) -> dict:
+        raise NotImplementedError(f"{self.name} has no inverse")
+
+    # -- host stages ---------------------------------------------------------
+
+    def host_apply(self, env: CallEnv, fetched: dict[str, np.ndarray]) -> None:
+        raise NotImplementedError(f"{self.name} is not a host stage")
+
+    def merge_static(self, name: str, values: Sequence[int]) -> int:
+        """Combine per-leaf statics for a stacked batch (default: must agree)."""
+        v0 = values[0]
+        if any(v != v0 for v in values):
+            raise ValueError(
+                f"stage {self.name}: static {name!r} differs across leaves "
+                f"({sorted(set(values))}); override merge_static to combine"
+            )
+        return v0
+
+    def jit_statics(self, statics: dict[str, int]) -> dict[str, int]:
+        """Statics as baked into the jitted segment (hook for bucketing
+        data-dependent sizes so traces are reused across calls)."""
+        return statics
+
+    def stage_meta(self, plan: Any) -> dict[str, Any]:
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# graph → compiled pipeline
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StageGraph:
+    """A codec's declarative stage composition.
+
+    ``finish_keys`` are the state keys the codec's container serialiser may
+    fetch after the run — the liveness roots that keep segment outputs
+    alive.  ``inputs`` names the initial state (default: the raw ``data``
+    array).
+    """
+
+    stages: tuple[Stage, ...]
+    finish_keys: tuple[str, ...]
+    inputs: tuple[str, ...] = ("data",)
+
+    def compile(self, plan: Any) -> "CompiledPipeline":
+        return CompiledPipeline(self, plan)
+
+    def describe(self, plan: Any) -> list[dict]:
+        """Per-stage metadata layout recorded in the container header."""
+        out = []
+        for st in self.stages:
+            entry = {"stage": st.name, "kind": "device" if st.device else "host"}
+            entry.update(st.stage_meta(plan))
+            out.append(entry)
+        return out
+
+
+@dataclass
+class _Segment:
+    """A maximal run of device stages fused into one jitted executable."""
+
+    index: int
+    stages: list[Stage]
+    in_keys: tuple[str, ...] = ()
+    out_keys: tuple[str, ...] = ()
+    operand_keys: tuple[str, ...] = ()
+    workspace_keys: tuple[str, ...] = ()
+    donate_keys: tuple[str, ...] = ()
+    static_keys: tuple[str, ...] = ()
+
+    @property
+    def name(self) -> str:
+        return "+".join(st.name for st in self.stages)
+
+
+def _dedup(items) -> tuple:
+    seen, out = set(), []
+    for it in items:
+        if it not in seen:
+            seen.add(it)
+            out.append(it)
+    return tuple(out)
+
+
+class CompiledPipeline:
+    """Compiled stage graph bound to one :class:`ReductionPlan`.
+
+    Segment executables are built lazily per distinct static tuple and
+    cached here (the plan lives in the CMM, so the cache has plan lifetime —
+    the stage-graph analogue of the paper's cached plans).  ``run`` executes
+    the per-leaf path; ``run_batched`` drives a stacked leaf batch, with the
+    engine supplying the mesh mapping for each device segment.
+    """
+
+    def __init__(self, graph: StageGraph, plan: Any):
+        self.graph = graph
+        self.plan = plan
+        self._lock = threading.Lock()
+        self._exe: dict[tuple, Callable] = {}
+        for st in graph.stages:
+            st.planned(plan)
+        self.steps = self._partition()
+        plan.meta.setdefault("stage_graph", graph.describe(plan))
+
+    # -- compilation ---------------------------------------------------------
+
+    def _partition(self) -> list[Any]:
+        """Group consecutive device stages; compute liveness per boundary."""
+        groups: list[Any] = []
+        for st in self.graph.stages:
+            if st.device and groups and isinstance(groups[-1], _Segment):
+                groups[-1].stages.append(st)
+            elif st.device:
+                groups.append(_Segment(index=len(groups), stages=[st]))
+            else:
+                groups.append(st)
+
+        # keys needed after each step: later reads/fetches + finish keys
+        needed_after: list[set[str]] = []
+        needed = set(self.graph.finish_keys)
+        for step in reversed(groups):
+            needed_after.append(set(needed))
+            if isinstance(step, _Segment):
+                for st in step.stages:
+                    needed |= set(st.reads)
+            else:
+                needed |= set(step.fetches)
+        needed_after.reverse()
+
+        available = set(self.graph.inputs)
+        for step, after in zip(groups, needed_after):
+            if not isinstance(step, _Segment):
+                missing = set(step.fetches) - available
+                if missing:
+                    raise ValueError(
+                        f"host stage {step.name} fetches {sorted(missing)} "
+                        "which no earlier stage produces"
+                    )
+                continue
+            written: set[str] = set()
+            ins: list[str] = []
+            for st in step.stages:
+                for k in st.reads:
+                    if k not in written:
+                        if k not in available:
+                            raise ValueError(
+                                f"stage {st.name} reads {k!r} which no earlier "
+                                "stage produces"
+                            )
+                        ins.append(k)
+                written |= set(st.writes)
+            step.in_keys = _dedup(ins)
+            step.out_keys = _dedup(k for k in written if k in after)
+            step.operand_keys = _dedup(k for st in step.stages for k in st.operands)
+            step.workspace_keys = _dedup(k for st in step.stages for k in st.workspace)
+            step.donate_keys = _dedup(k for st in step.stages for k in st.donates)
+            step.static_keys = _dedup(k for st in step.stages for k in st.statics)
+            available |= written
+        return groups
+
+    def _seg_statics(self, seg: _Segment, statics: dict) -> tuple[tuple, dict]:
+        sub = {k: statics[k] for k in seg.static_keys}
+        for st in seg.stages:
+            sub = st.jit_statics(sub)
+        return tuple(sorted(sub.items())), sub
+
+    def _raw_fn(self, seg: _Segment, jit_statics: dict, with_ws_out: bool) -> Callable:
+        backend = self.plan.spec.backend
+
+        def fn(state_vals, operand_vals, ws_vals):
+            state = dict(zip(seg.in_keys, state_vals))
+            env = TraceEnv(
+                jit_statics, backend,
+                dict(zip(seg.operand_keys, operand_vals)),
+                dict(zip(seg.workspace_keys, ws_vals)),
+            )
+            for st in seg.stages:
+                state.update(st.apply(env, state))
+            outs = tuple(state[k] for k in seg.out_keys)
+            if not with_ws_out:
+                return outs
+            return outs, tuple(env._workspace[k] for k in seg.workspace_keys)
+
+        return fn
+
+    def segment_exe(self, seg: _Segment, statics: dict, batched: bool) -> Callable:
+        """Jitted (serial) or vmapped-raw (batched) segment executable.
+
+        Serial executables donate the plan workspace where the platform
+        supports it (the PR-2 recycle contract); batched executables skip
+        donation — the workspace is broadcast across the leaf axis.
+        """
+        key_statics, jit_statics = self._seg_statics(seg, statics)
+        key = (seg.index, key_statics, batched)
+        with self._lock:
+            exe = self._exe.get(key)
+        if exe is not None:
+            return exe
+        if batched:
+            # workspace is broadcast over the leaf axis, so donation (which
+            # would alias a shared buffer into per-leaf outputs) is skipped
+            raw = self._raw_fn(seg, jit_statics, with_ws_out=False)
+            exe = jax.vmap(raw, in_axes=(0, 0, None))
+        else:
+            raw = self._raw_fn(seg, jit_statics, with_ws_out=True)
+            donate = ()
+            if seg.donate_keys and seg.donate_keys == seg.workspace_keys:
+                donate = (2,)
+            exe = adapters.donating_jit(raw, donate_argnums=donate)
+        with self._lock:
+            exe = self._exe.setdefault(key, exe)
+        return exe
+
+    # -- execution: per-leaf -------------------------------------------------
+
+    def run(
+        self,
+        state0: dict[str, Any],
+        env: CallEnv | None = None,
+        profile: dict[str, float] | None = None,
+    ) -> tuple[dict[str, Any], CallEnv]:
+        """Execute the encode direction for one leaf.
+
+        Device segments run as single fused dispatches; host stages fetch
+        exactly their declared keys (counted in ``env.transfers``).  When
+        ``profile`` is given, per-stage wall times accumulate into it keyed
+        by stage name (device results are blocked on for honest timings).
+        """
+        plan = self.plan
+        env = env or CallEnv(plan)
+        env.transfers.count_h2d(*state0.values())
+        state = {k: jnp.asarray(v) for k, v in state0.items()}
+        shipped: set[str] = set()
+        for step in self.steps:
+            t0 = _clock() if profile is not None else 0.0
+            if isinstance(step, _Segment):
+                operand_vals = tuple(
+                    self._ship(env, k, shipped) for k in step.operand_keys
+                )
+                ws_vals = tuple(plan.workspace[k] for k in step.workspace_keys)
+                exe = self.segment_exe(step, env.statics, batched=False)
+                state_vals = tuple(state[k] for k in step.in_keys)
+                if step.workspace_keys:
+                    with plan.lock:
+                        outs, ws_out = exe(state_vals, operand_vals, ws_vals)
+                        for k, buf in zip(step.workspace_keys, ws_out):
+                            plan.recycle(k, buf)
+                else:
+                    outs, _ = exe(state_vals, operand_vals, ws_vals)
+                state.update(zip(step.out_keys, outs))
+                if profile is not None:
+                    jax.block_until_ready(outs)
+            else:
+                fetched = {k: np.asarray(state[k]) for k in step.fetches}
+                env.transfers.count_d2h(*fetched.values())
+                step.host_apply(env, fetched)
+            if profile is not None:
+                profile[step.name] = profile.get(step.name, 0.0) + (_clock() - t0)
+        return state, env
+
+    def _ship(self, env: CallEnv, name: str, shipped: set[str]) -> jax.Array:
+        val = env.operands[name]
+        arr = jnp.asarray(val)
+        if name not in shipped:
+            env.transfers.count_h2d(arr)
+            shipped.add(name)
+        env.operands[name] = arr
+        return arr
+
+    # -- execution: stacked batch (engine shard_map path) --------------------
+
+    def run_batched(
+        self,
+        state0: dict[str, Any],
+        envs: list[CallEnv],
+        device_mapper: Callable,
+        transfers: TransferStats,
+    ) -> dict[str, Any]:
+        """Drive a stacked leaf batch through the pipeline.
+
+        ``state0`` holds arrays with a leading leaf axis of ``len(envs)``;
+        ``device_mapper(seg, vfn, state_vals, operand_vals, ws_vals)`` is
+        supplied by the execution engine and wraps the vmapped segment in
+        its mesh ``shard_map``.  Host stages loop over per-leaf fetches —
+        metadata scale — and their statics are merged across leaves
+        (:meth:`Stage.merge_static`) before the next segment is specialised.
+        """
+        plan = self.plan
+        transfers.count_h2d(*state0.values())
+        state = {k: jnp.asarray(v) for k, v in state0.items()}
+        merged: dict[str, int] = dict(envs[0].statics)
+        stacked_ops: dict[str, jax.Array] = {}
+        for step in self.steps:
+            if isinstance(step, _Segment):
+                for k in step.operand_keys:
+                    if k not in stacked_ops:
+                        arr = jnp.asarray(_stack_pad(
+                            [np.asarray(e.operands[k]) for e in envs]
+                        ))
+                        transfers.count_h2d(arr)
+                        stacked_ops[k] = arr
+                operand_vals = tuple(stacked_ops[k] for k in step.operand_keys)
+                vfn = self.segment_exe(step, merged, batched=True)
+                state_vals = tuple(state[k] for k in step.in_keys)
+                if step.workspace_keys:
+                    # Dispatch under plan.lock: the serial path *donates*
+                    # these buffers under the same lock, so a concurrent
+                    # per-leaf encode can neither invalidate the buffer we
+                    # captured before our dispatch nor donate it mid-window
+                    # (after dispatch XLA holds its own reference).
+                    with plan.lock:
+                        ws_vals = tuple(
+                            plan.workspace[k] for k in step.workspace_keys
+                        )
+                        outs = device_mapper(
+                            step, vfn, state_vals, operand_vals, ws_vals
+                        )
+                else:
+                    outs = device_mapper(step, vfn, state_vals, operand_vals, ())
+                state.update(zip(step.out_keys, outs))
+            else:
+                fetched = {k: np.asarray(state[k]) for k in step.fetches}
+                transfers.count_d2h(*fetched.values())
+                for i, env in enumerate(envs):
+                    step.host_apply(env, {k: fetched[k][i] for k in step.fetches})
+                for name in step.static_outputs:
+                    merged[name] = step.merge_static(
+                        name, [env.statics[name] for env in envs]
+                    )
+        return state
+
+    @property
+    def device_segments(self) -> list[_Segment]:
+        return [s for s in self.steps if isinstance(s, _Segment)]
+
+
+def _clock() -> float:
+    import time
+
+    return time.perf_counter()
+
+
+def _stack_pad(arrs: list[np.ndarray]) -> np.ndarray:
+    """Stack per-leaf operands, zero-padding axis 0 to the widest leaf.
+
+    Needed when a host stage builds data-dependent tables per leaf (e.g.
+    per-leaf codebooks over differing alphabets): zero-length codes are
+    never gathered for keys inside a leaf's own alphabet, so the padding is
+    inert by construction.
+    """
+    if all(a.shape == arrs[0].shape for a in arrs):
+        return np.stack(arrs)
+    width = max(a.shape[0] for a in arrs)
+    out = np.zeros((len(arrs), width) + arrs[0].shape[1:], arrs[0].dtype)
+    for i, a in enumerate(arrs):
+        out[i, : a.shape[0]] = a
+    return out
+
+
+# ---------------------------------------------------------------------------
+# container-side fetch view
+# ---------------------------------------------------------------------------
+
+
+class LeafView:
+    """One leaf's window onto (possibly stacked) pipeline state.
+
+    The container serialiser pulls arrays through :meth:`fetch`, which
+    slices the leaf row (batched runs) and an optional leading-axis prefix
+    *on device* before the D2H copy — so a Huffman stream whose exact word
+    count is known host-side transfers exactly its compressed bytes, never
+    the worst-case buffer.
+    """
+
+    def __init__(
+        self,
+        state: dict[str, Any],
+        index: int | None,
+        env: CallEnv,
+        transfers: TransferStats | None = None,
+    ):
+        self.state = state
+        self.index = index
+        self.env = env
+        self.transfers = transfers if transfers is not None else env.transfers
+
+    def fetch(self, key: str, length: int | None = None) -> np.ndarray:
+        arr = self.state[key]
+        if self.index is not None:
+            arr = arr[self.index]
+        if length is not None:
+            arr = arr[:length]
+        out = np.asarray(arr)
+        self.transfers.count_d2h(out)
+        return out

@@ -33,3 +33,29 @@ def encode_lookup(
     return adapters.dispatch("huffman_encode_lookup", adapter)(
         keys, codes_table, lens_table
     )
+
+
+# The serialization tail of the device-resident entropy stage: exclusive
+# prefix sum of code lengths + disjoint-bit segment-sum packing.  One
+# portable implementation (registered under the XLA adapter) serves every
+# backend through the registry's fallback rule — the scan/segment-sum
+# lowering is already the TPU-native formulation (see core/bitstream.py),
+# so no hand-tiled kernel is needed for this op.
+
+
+@adapters.register("huffman_pack_stream", adapters.XLA)
+def _pack_xla(codes, lens, num_words, chunk_size):
+    return ref.pack_stream(codes, lens, num_words, chunk_size)
+
+
+def pack_stream(
+    codes: jax.Array,
+    lens: jax.Array,
+    num_words: int,
+    chunk_size: int,
+    adapter: str | None = None,
+):
+    """Device bit-packing of (code, length) pairs into the word stream."""
+    return adapters.dispatch("huffman_pack_stream", adapter)(
+        codes, lens, num_words, chunk_size
+    )

@@ -1,9 +1,11 @@
-"""Pure-jnp oracle for the huffman_encode kernel."""
+"""Pure-jnp oracle for the huffman_encode kernel ops."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import bitstream as bs
 
 
 def encode_lookup(
@@ -14,3 +16,21 @@ def encode_lookup(
         codes_table.astype(jnp.uint32)[keys],
         lens_table.astype(jnp.int32)[keys],
     )
+
+
+def pack_stream(
+    codes: jax.Array, lens: jax.Array, num_words: int, chunk_size: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefix-sum offset pass + scatter-free word packing (DEM stage).
+
+    Returns ``(words[num_words] uint32, chunk_offsets int32, total_bits
+    int32)``.  ``num_words`` is a static upper bound; words past
+    ``total_bits`` are zero, so a caller holding the exact bit count can
+    slice the stream without re-packing.
+    """
+    lens = lens.astype(jnp.int32)
+    offsets = bs.exclusive_cumsum(lens)
+    total_bits = (offsets[-1] + lens[-1]).astype(jnp.int32)
+    words = bs.pack_bits(codes, lens, total_bits, num_words)
+    chunk_offsets = offsets[::chunk_size].astype(jnp.int32)
+    return words, chunk_offsets, total_bits

@@ -33,6 +33,12 @@ import jax
 
 COMPUTE, IO = "compute", "io"
 
+# Placement sentinel: run on the compute pool WITHOUT pinning a default
+# device.  Used for whole-mesh work — e.g. the engine's stacked shard_map
+# buckets, which span every data-axis device and must not be confined to
+# one ring slot (a pinned default_device would fight the mesh sharding).
+MESH = object()
+
 
 class Submission:
     """Handle for one submitted task (the engine's future type)."""
@@ -98,10 +104,14 @@ class DeviceExecutor:
 
         ``lane="io"`` routes to the single-threaded orchestration pool (used
         by async checkpoint saves); ``lane="compute"`` (default) round-robins
-        over the device ring.
+        over the device ring.  ``device=MESH`` runs on the compute pool with
+        no default-device pin — for tasks that span the whole mesh (stacked
+        shard_map buckets).
         """
         if lane == IO:
             pool, dev = self._io_pool, None
+        elif device is MESH:
+            pool, dev = self._pool, None
         else:
             pool, dev = self._pool, (device if device is not None else self.next_device())
         with self._lock:

@@ -11,12 +11,21 @@ paper's reduction-before-I/O, used when parking long-context sessions.
 Parking runs on the execution engine: cache leaves shard over the mesh's
 ``data``-axis devices, and ``park_kv_cache_async`` returns a future so the
 decode loop keeps stepping while a session is parked in the background.
+:class:`KVPageStore` bounds the memory parked sessions hold: tracked bytes
+sit behind a CMM byte-budget LRU whose evictions spill containers to disk,
+and evicted sessions re-materialise transparently on next access.
 """
 
 from __future__ import annotations
 
+import hashlib
+import io
+import json
+import tempfile
+import threading
 import time
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Any, Callable
 
 import jax
@@ -25,6 +34,7 @@ import numpy as np
 
 from ..core import api
 from ..core import engine as engine_mod
+from ..core.context import ContextCache, ReductionContext
 from ..models.model import Model
 from ..runtime.executor import Submission
 
@@ -162,3 +172,182 @@ def decompress_kv_cache(
     comp: Any, like: Any, engine: engine_mod.ExecutionEngine | None = None
 ) -> Any:
     return api.decompress_pytree(comp, like, engine=engine)
+
+
+# ---------------------------------------------------------------------------
+# parked-session store: CMM byte-budget LRU + transparent disk spill
+# ---------------------------------------------------------------------------
+
+_KV_MAGIC = b"HPKV"
+_KV_VERSION = 1
+
+
+def _dump_flat(flat: dict[str, Any]) -> bytes:
+    """Serialise one parked session's ``compress_kv_cache`` output."""
+    entries, blobs = [], []
+    off = 0
+    for key, val in flat.items():
+        if isinstance(val, api.Compressed):
+            kind, blob = "hpdr", val.to_bytes()
+        else:
+            buf = io.BytesIO()
+            np.save(buf, np.asarray(val), allow_pickle=False)
+            kind, blob = "npy", buf.getvalue()
+        entries.append({"key": key, "kind": kind, "offset": off,
+                        "nbytes": len(blob)})
+        off += len(blob)
+        blobs.append(blob)
+    header = json.dumps({"entries": entries}).encode()
+    out = io.BytesIO()
+    out.write(_KV_MAGIC)
+    out.write(np.uint32(_KV_VERSION).tobytes())
+    out.write(np.uint64(len(header)).tobytes())
+    out.write(header)
+    for blob in blobs:
+        out.write(blob)
+    return out.getvalue()
+
+
+def _load_flat(raw: bytes) -> dict[str, Any]:
+    if len(raw) < 16 or raw[:4] != _KV_MAGIC:
+        raise ValueError("not an HPDR parked-KV stream")
+    version = int(np.frombuffer(raw[4:8], np.uint32)[0])
+    if version != _KV_VERSION:
+        raise ValueError(f"unsupported parked-KV version {version}")
+    hlen = int(np.frombuffer(raw[8:16], np.uint64)[0])
+    header = json.loads(raw[16:16 + hlen].decode())
+    base = 16 + hlen
+    flat: dict[str, Any] = {}
+    for entry in header["entries"]:
+        lo = base + entry["offset"]
+        blob = raw[lo:lo + entry["nbytes"]]
+        if entry["kind"] == "hpdr":
+            flat[entry["key"]] = api.Compressed.from_bytes(blob)
+        else:
+            flat[entry["key"]] = np.load(io.BytesIO(blob), allow_pickle=False)
+    return flat
+
+
+class KVPageStore:
+    """Parked serving sessions behind the CMM's byte-budget LRU.
+
+    ``park`` compresses a session's KV cache on the execution engine
+    (stacked over the mesh ``data`` axis, plans CMM-cached) and tracks the
+    resulting containers as a :class:`~repro.core.context.ContextCache`
+    entry, so total parked bytes are bounded: under memory pressure the
+    least-recently-used sessions are evicted through the cache's
+    ``on_evict`` hook, which *spills their containers to disk*.  A later
+    ``fetch``/``restore`` of an evicted session re-materialises it from the
+    spill transparently (observable as ``load_count``).
+    """
+
+    def __init__(
+        self,
+        capacity_bytes: int = 256 << 20,
+        spill_dir: str | Path | None = None,
+        rate: int = 12,
+        engine: engine_mod.ExecutionEngine | None = None,
+    ):
+        self.rate = rate
+        self.engine = engine
+        self.spill_dir = Path(
+            spill_dir if spill_dir is not None
+            else tempfile.mkdtemp(prefix="hpdr-kv-")
+        )
+        self.spill_dir.mkdir(parents=True, exist_ok=True)
+        self.cache = ContextCache(
+            capacity=1 << 30,  # bounded by bytes, not entry count
+            capacity_bytes=capacity_bytes,
+            on_evict=self._spill,
+        )
+        # Store-level mutation lock (reentrant: an insert may trigger an
+        # eviction spill while the lock is held).  Serialises park / fetch /
+        # release against in-flight LRU spills, so releasing a session
+        # cannot interleave with its own eviction and resurrect it from a
+        # spill written after the release.
+        self._lock = threading.RLock()
+        self.spill_count = 0
+        self.load_count = 0
+
+    # -- internals -----------------------------------------------------------
+
+    @staticmethod
+    def _key(session_id: str) -> tuple:
+        return ("kv_page", str(session_id))
+
+    def _path(self, session_id: str) -> Path:
+        # digest suffix: sanitization alone could collide distinct session
+        # ids ("user:1" vs "user_1") onto one spill file — and silently
+        # serve one session's KV state for another after re-materialising
+        sid = str(session_id)
+        safe = "".join(c if c.isalnum() or c in "-_." else "_" for c in sid)
+        digest = hashlib.sha1(sid.encode()).hexdigest()[:8]
+        return self.spill_dir / f"{safe[:80]}-{digest}.hpkv"
+
+    def _spill(self, ctx) -> None:
+        session_id = ctx.key[1]
+        self._path(session_id).write_bytes(_dump_flat(ctx.buffers))
+        with self._lock:
+            self.spill_count += 1
+
+    # -- public API ----------------------------------------------------------
+
+    def park(self, session_id: str, cache: Any) -> dict:
+        """Compress + track one session; returns the compression stats."""
+        snapshot = jax.tree.map(np.asarray, cache)
+        flat, stats = compress_kv_cache(snapshot, rate=self.rate,
+                                        engine=self.engine)
+        key = self._key(session_id)
+        with self._lock:
+            self.cache.discard(key)  # re-park replaces the tracked entry
+            ctx = ReductionContext(key=key, plan=None, buffers=flat)
+            self.cache.get_or_create(key, lambda: ctx)
+        return stats
+
+    def park_async(self, session_id: str, cache: Any) -> Submission:
+        """Background park on the engine's io lane (decode keeps stepping)."""
+        eng = self.engine if self.engine is not None else engine_mod.default_engine()
+        snapshot = jax.tree.map(np.asarray, cache)
+        return eng.submit(self.park, session_id, snapshot, lane="io")
+
+    def fetch(self, session_id: str) -> dict[str, Any]:
+        """The session's compressed containers; re-materialises a spilled
+        session from disk transparently."""
+
+        def rematerialize():
+            path = self._path(session_id)
+            if not path.exists():
+                raise KeyError(f"unknown parked session {session_id!r}")
+            flat = _load_flat(path.read_bytes())
+            self.load_count += 1
+            return ReductionContext(key=self._key(session_id), plan=None,
+                                    buffers=flat)
+
+        with self._lock:
+            return self.cache.get_or_create(
+                self._key(session_id), rematerialize
+            ).buffers
+
+    def restore(self, session_id: str, like: Any) -> Any:
+        """Decompress a parked session back into ``like``'s structure."""
+        return decompress_kv_cache(self.fetch(session_id), like,
+                                   engine=self.engine)
+
+    def release(self, session_id: str) -> None:
+        """Forget a session entirely (cache entry + spill file)."""
+        with self._lock:
+            self.cache.discard(self._key(session_id))
+            path = self._path(session_id)
+            if path.exists():
+                path.unlink()
+
+    def stats(self) -> dict[str, int]:
+        with self._lock:
+            return {
+                "sessions": len(self.cache),
+                "parked_bytes": self.cache.nbytes(),
+                "capacity_bytes": self.cache.capacity_bytes,
+                "spills": self.spill_count,
+                "loads": self.load_count,
+                "evictions": self.cache.evict_count,
+            }

@@ -56,3 +56,52 @@ def test_thread_safety():
         t.join()
     assert not errs
     assert c.hit_count + c.miss_count == 8 * 200
+
+
+def _sized_ctx(key, nbytes):
+    import numpy as np
+
+    return ReductionContext(
+        key=key, plan=None, buffers={"buf": np.zeros(nbytes, np.uint8)}
+    )
+
+
+def test_byte_capacity_eviction_with_spill_hook():
+    spilled = []
+    c = ContextCache(capacity=64, capacity_bytes=2_500,
+                     on_evict=spilled.append)
+    keys = [context_key("kv", (i,), "u8") for i in range(4)]
+    for k in keys:
+        c.get_or_create(k, lambda k=k: _sized_ctx(k, 1_000))
+    # 4 KB tracked > 2.5 KB budget -> two LRU entries evicted through the hook
+    assert c.nbytes() <= 2_500
+    assert [ctx.key for ctx in spilled] == keys[:2]
+    assert keys[3] in c and keys[0] not in c
+    assert c.evict_count == 2
+
+
+def test_byte_capacity_never_evicts_newest():
+    c = ContextCache(capacity=64, capacity_bytes=100)
+    k = context_key("kv", (0,), "u8")
+    c.get_or_create(k, lambda: _sized_ctx(k, 10_000))
+    assert k in c  # an over-budget single context stays resident while in use
+
+
+def test_explicit_evict_and_discard():
+    spilled = []
+    c = ContextCache(capacity=8, on_evict=spilled.append)
+    k0, k1 = [context_key("kv", (i,), "u8") for i in range(2)]
+    c.get_or_create(k0, lambda: _sized_ctx(k0, 10))
+    c.get_or_create(k1, lambda: _sized_ctx(k1, 10))
+    assert c.evict(k0).key == k0 and len(spilled) == 1
+    assert c.discard(k1).key == k1 and len(spilled) == 1  # no hook
+    assert c.evict(k0) is None
+
+
+def test_nbytes_counts_callable_nbytes():
+    class Obj:
+        def nbytes(self):
+            return 123
+
+    ctx = ReductionContext(key="x", plan=None, buffers={"o": Obj()})
+    assert ctx.nbytes() == 123

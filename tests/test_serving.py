@@ -67,3 +67,80 @@ def test_kv_cache_compression_roundtrip():
             assert np.abs(a - b).max() / scale < 2e-3
         else:
             np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# parked-session store: byte-budget LRU eviction + transparent rematerialize
+# ---------------------------------------------------------------------------
+
+
+def _session_cache(seed):
+    r = np.random.default_rng(seed)
+    return {
+        "k": r.normal(size=(2, 4, 64, 8, 16)).astype(np.float32),
+        "v": r.normal(size=(2, 4, 64, 8, 16)).astype(np.float32),
+        "pos": np.arange(4, dtype=np.int32),
+    }
+
+
+def test_kv_page_store_evicts_and_rematerializes(tmp_path):
+    from repro.serving.engine import KVPageStore
+
+    store = KVPageStore(capacity_bytes=600_000, spill_dir=tmp_path, rate=16)
+    sessions = {f"s{i}": _session_cache(i) for i in range(4)}
+    for sid, cache in sessions.items():
+        stats = store.park(sid, cache)
+        assert stats["compressed_leaves"] == 2
+    st = store.stats()
+    # memory pressure: parked bytes stay within budget, LRU sessions spilled
+    assert st["parked_bytes"] <= st["capacity_bytes"]
+    assert st["spills"] >= 1 and st["evictions"] >= 1
+    assert store._path("s0").exists()
+
+    # evicted session rematerializes transparently on access
+    restored = store.restore("s0", sessions["s0"])
+    np.testing.assert_array_equal(np.asarray(restored["pos"]),
+                                  sessions["s0"]["pos"])
+    for leaf in ("k", "v"):
+        err = np.abs(np.asarray(restored[leaf]) - sessions["s0"][leaf]).max()
+        assert err < 1e-2 * np.abs(sessions["s0"][leaf]).max()
+    assert store.stats()["loads"] >= 1
+
+    # a still-resident (most recent) session restores without a disk load
+    loads_before = store.stats()["loads"]
+    store.restore("s3", sessions["s3"])
+    assert store.stats()["loads"] == loads_before
+
+    store.release("s0")
+    assert not store._path("s0").exists()
+
+
+def test_kv_page_store_async_and_unknown_session(tmp_path):
+    import pytest
+
+    from repro.serving.engine import KVPageStore
+
+    store = KVPageStore(capacity_bytes=64 << 20, spill_dir=tmp_path, rate=16)
+    sub = store.park_async("bg", _session_cache(7))
+    stats = sub.result()
+    assert stats["compressed_leaves"] == 2
+    assert "bg" in str(sorted(k[1] for k in store.cache._entries))
+    with pytest.raises(KeyError, match="unknown parked session"):
+        store.fetch("never-parked")
+
+
+def test_kv_page_store_colliding_session_ids_get_distinct_spills(tmp_path):
+    from repro.serving.engine import KVPageStore
+
+    store = KVPageStore(capacity_bytes=64 << 20, spill_dir=tmp_path, rate=16)
+    assert store._path("user:1") != store._path("user_1")
+    a, b = _session_cache(1), _session_cache(2)
+    store.park("user:1", a)
+    store.park("user_1", b)
+    store.cache.evict(("kv_page", "user:1"))  # force both to spill
+    store.cache.evict(("kv_page", "user_1"))
+    ra = store.restore("user:1", a)
+    rb = store.restore("user_1", b)
+    assert not np.allclose(np.asarray(ra["k"]), np.asarray(rb["k"]))
+    err = np.abs(np.asarray(ra["k"]) - a["k"]).max()
+    assert err < 1e-2 * np.abs(a["k"]).max()
