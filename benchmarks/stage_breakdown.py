@@ -2,14 +2,19 @@
 
 The paper's headline architectural number is that running the whole
 reduction pipeline on the device cuts memory-transfer overhead to ~2.3% of
-runtime.  This benchmark makes that trackable per PR: for each stage-graph
-codec it drives ``api.encode_profiled`` (warm plan, so timings are
-execution, not compilation) and emits
+runtime.  This benchmark makes that trackable per PR, in *both* directions:
+for each stage-graph codec it drives ``api.encode_profiled`` and
+``api.decode_profiled`` (warm plans, so timings are execution, not
+compilation) and emits
 
-  * wall seconds per pipeline stage (fused device segments blocked on,
-    host barriers timed as-is);
-  * exact H2D/D2H bytes for the call — every fetch in the stage pipeline is
-    declared, so this is an accounting, not an estimate;
+  * wall seconds per pipeline stage, encode and decode (fused device
+    segments blocked on, host barriers/prepares timed as-is);
+  * exact H2D/D2H bytes per call — every transfer in the stage pipeline is
+    declared, so this is an accounting, not an estimate.  The decode rows
+    carry the symmetry check: decode H2D must equal the compressed
+    sections plus metadata-scale decode operands (``decode_h2d_bytes`` vs
+    ``stream_bytes`` + ``decode_operand_bytes``) — never a raw-array-sized
+    staging transfer;
   * the transfer:input ratio and the stream size.
 
 ``scripts/check.sh bench stages`` runs the smoke size and writes
@@ -28,6 +33,7 @@ import numpy as np
 
 from .common import Row, nyx_like
 from repro.core import api
+from repro.core.codecs import get_codec
 
 
 CODEC_CASES = (
@@ -73,6 +79,50 @@ def stage_bench(out_path: str | Path = "BENCH_stages.json", n: int = 24) -> dict
         ).emit()
         for stage_name, secs in stage_s.items():
             Row(f"stages.{method}.{stage_name}", secs * 1e6, "").emit()
+
+        # decode direction: warm the inverse pipeline, then measure — the
+        # symmetry claim is that H2D is the compressed sections plus
+        # metadata-scale decode operands (codebook tables, bin schedules),
+        # never a raw-array-sized staging transfer
+        api.decode_profiled(c)
+        t0 = time.perf_counter()
+        out, dec_stage_s, dec_tr = api.decode_profiled(c)
+        import jax
+
+        jax.block_until_ready(out)
+        dec_wall = time.perf_counter() - t0
+        codec = get_codec(method)
+        plan = api.get_plan(codec.decode_spec(c))
+        prepared = codec.decode_state(plan, c)
+        state_bytes = (
+            sum(int(a.nbytes) for a in prepared[0].values())
+            if prepared is not None else 0
+        )
+        entry.update(
+            decode_s=dec_wall,
+            decode_stages_s={k: round(v, 6) for k, v in dec_stage_s.items()},
+            decode_h2d_bytes=int(dec_tr.h2d),
+            decode_d2h_bytes=int(dec_tr.d2h),
+            decode_state_bytes=int(state_bytes),
+            decode_operand_bytes=int(dec_tr.h2d - state_bytes),
+            # the flag asserts the pipeline path actually ran AND counted
+            # its staging: h2d at least the compressed sections (a silent
+            # host-fallback regression measures 0 and must read false);
+            # sections may pad up to one outlier bucket and operands are
+            # metadata-scale — 64 KiB bounds both for every case here
+            decode_h2d_is_stream_plus_meta=bool(
+                prepared is not None
+                and state_bytes > 0
+                and state_bytes <= dec_tr.h2d <= c.nbytes() + 65536
+                and dec_tr.h2d < max(data.nbytes, 1)
+            ),
+        )
+        Row(
+            f"stages.{method}.decode", dec_wall * 1e6,
+            f"h2d={dec_tr.h2d}B stream={c.nbytes()}B",
+        ).emit()
+        for stage_name, secs in dec_stage_s.items():
+            Row(f"stages.{method}.dec.{stage_name}", secs * 1e6, "").emit()
     Path(out_path).write_text(json.dumps(report, indent=1))
     return report
 

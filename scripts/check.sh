@@ -6,11 +6,20 @@
 #   scripts/check.sh bench          benchmark smoke mode: fig16 engine
 #                                   throughput on a 1×CPU mesh
 #                                   -> BENCH_engine.json
-#   scripts/check.sh bench stages   per-stage pipeline timings + host<->device
-#                                   transfer bytes per codec (smoke-sized)
+#   scripts/check.sh bench stages   per-stage pipeline timings (encode AND
+#                                   decode) + host<->device transfer bytes
+#                                   per codec (smoke-sized)
 #                                   -> BENCH_stages.json
+#   scripts/check.sh docs           execute every fenced ```python block in
+#                                   docs/*.md against the current API
 set -euo pipefail
 cd "$(dirname "$0")/.."
+if [[ "${1:-}" == "docs" ]]; then
+  shift
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/check_docs.py "$@"
+  exit 0
+fi
 if [[ "${1:-}" == "bench" ]]; then
   shift
   if [[ "${1:-}" == "stages" ]]; then

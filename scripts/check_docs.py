@@ -1,0 +1,74 @@
+"""Validate that fenced ``python`` blocks in docs/*.md run against the API.
+
+Documentation drifts; executable documentation doesn't.  Every fenced code
+block tagged exactly ```python is executed, in file order, in one shared
+namespace per document (so later blocks build on earlier imports and
+variables, reading top-to-bottom like a session).  Blocks tagged
+```python notest are skipped — reserved for illustrative sketches
+(protocol outlines, platform-specific snippets) that are not runnable on a
+CPU CI container.
+
+Usage:  PYTHONPATH=src python scripts/check_docs.py [docs/*.md ...]
+Exit status is non-zero on the first failing block, with the doc name,
+block index and the offending source echoed.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+import traceback
+from pathlib import Path
+
+_FENCE = re.compile(
+    r"^```python[ \t]*(?P<tag>[^\n`]*)\n(?P<body>.*?)^```[ \t]*$",
+    re.MULTILINE | re.DOTALL,
+)
+
+
+def doc_blocks(text: str) -> list[tuple[bool, str]]:
+    """All ```python fences as ``(runnable, source)`` in document order."""
+    out = []
+    for m in _FENCE.finditer(text):
+        runnable = "notest" not in m.group("tag").split()
+        out.append((runnable, m.group("body")))
+    return out
+
+
+def check_doc(path: Path) -> tuple[int, int]:
+    """Run ``path``'s python blocks; returns (ran, skipped).  Raises on
+    the first failing block with the source attached."""
+    ns: dict = {"__name__": f"docs:{path.name}"}
+    ran = skipped = 0
+    for i, (runnable, src) in enumerate(doc_blocks(path.read_text())):
+        if not runnable:
+            skipped += 1
+            continue
+        try:
+            exec(compile(src, f"{path}#block{i}", "exec"), ns)
+        except Exception:
+            print(f"FAIL {path} block {i}:\n{'-' * 60}\n{src}{'-' * 60}")
+            traceback.print_exc()
+            raise SystemExit(1)
+        ran += 1
+    return ran, skipped
+
+
+def main(argv: list[str]) -> int:
+    paths = [Path(p) for p in argv] or sorted(Path("docs").glob("*.md"))
+    if not paths:
+        print("no docs to check")
+        return 1
+    total_ran = 0
+    for path in paths:
+        ran, skipped = check_doc(path)
+        total_ran += ran
+        print(f"ok {path}: {ran} block(s) ran, {skipped} skipped")
+    if total_ran == 0:
+        print("no runnable python blocks found — docs are unchecked")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

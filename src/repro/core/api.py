@@ -136,12 +136,37 @@ def decode(c: Compressed, backend: str | None = None) -> jax.Array:
 
     Any backend decodes any stream (portability contract); ``backend``
     overrides the decode-side adapter, defaulting to the platform's best.
+    Streams carrying a decode chunk index run the compiled inverse pipeline
+    — one fused device dispatch, H2D = compressed bytes + metadata; older
+    streams fall back to the host-orchestrated decoder transparently.
     """
     codec = get_codec(c.method)
     spec = codec.decode_spec(c)
     if backend is not None:
         spec = dataclasses.replace(spec, backend=adapters.resolve_backend(backend))
     return codec.decode(get_plan(spec), c)
+
+
+def decode_profiled(
+    c: Compressed, backend: str | None = None
+) -> tuple[jax.Array, dict[str, float], "TransferStats"]:
+    """Decode with per-stage observability (the ``bench stages`` decode hook).
+
+    Returns ``(array, stage_seconds, transfers)``: wall time per inverse
+    pipeline step (host prepares + the fused inverse segments, blocked on
+    for honest timings) and the run's transfer bytes — on the pipeline
+    path H2D is exactly the compressed sections plus the metadata-scale
+    decode operands, never a raw-array-sized staging transfer.
+    """
+    codec = get_codec(c.method)
+    spec = codec.decode_spec(c)
+    if backend is not None:
+        spec = dataclasses.replace(spec, backend=adapters.resolve_backend(backend))
+    plan = get_plan(spec)
+    env = CallEnv(plan)
+    profile: dict[str, float] = {}
+    out = codec.decode(plan, c, env=env, profile=profile)
+    return out, profile, env.transfers
 
 
 # ---------------------------------------------------------------------------
@@ -254,9 +279,13 @@ def compress_leaf(arr: np.ndarray, method: str, **params: Any) -> Compressed:
     return finish_leaf_meta(c, arr)
 
 
-def decompress_leaf(c: Compressed) -> np.ndarray:
-    """Inverse of :func:`compress_leaf`: restores original dtype and shape."""
-    out = np.asarray(decode(c))
+def restore_leaf(out: np.ndarray, c: Compressed) -> np.ndarray:
+    """Undo :func:`leaf_policy` on a decoded array: original dtype + shape.
+
+    Split out of :func:`decompress_leaf` so the execution engine's stacked
+    decode path can restore per-leaf rows it decoded in one batch.
+    """
+    out = np.asarray(out)
     dtype = np.dtype(c.meta["orig_dtype"])
     shape = tuple(c.meta["orig_shape"])
     n = math.prod(shape) if shape else 1
@@ -264,6 +293,11 @@ def decompress_leaf(c: Compressed) -> np.ndarray:
         out = out.view(dtype) if out.dtype == np.uint8 else out.astype(dtype)
         return out.reshape(shape) if n == out.size else out
     return out.reshape(-1)[:n].astype(dtype).reshape(shape)
+
+
+def decompress_leaf(c: Compressed) -> np.ndarray:
+    """Inverse of :func:`compress_leaf`: restores original dtype and shape."""
+    return restore_leaf(np.asarray(decode(c)), c)
 
 
 # ---------------------------------------------------------------------------

@@ -185,12 +185,69 @@ class Codec:
 
         return self.finish_container(plan, env, LeafView(state, None, env))
 
-    def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
+    def decode(
+        self,
+        plan: ReductionPlan,
+        c: Compressed,
+        *,
+        env: Any = None,
+        profile: dict | None = None,
+    ) -> jax.Array:
         raise NotImplementedError
 
     def decode_spec(self, c: Compressed) -> ReductionSpec:
         """Spec keying the decode-side plan, recovered from container meta."""
         raise NotImplementedError
+
+    # -- decode direction ----------------------------------------------------
+    #
+    # Codecs with an invertible stage graph expose the compiled decode path
+    # through two hooks: decode_state() maps a container onto the inverse
+    # pipeline's initial state (or None when the stream predates the decode
+    # chunk index / needs the host fallback), and finish_decode() extracts
+    # the result.  The default decode flow then mirrors encode: a single
+    # fused device dispatch per inverse segment, H2D = compressed sections
+    # plus metadata-scale operands.  The engine stacks whole buckets of
+    # same-spec containers through the same hooks (invert_batched).
+
+    def decode_state(
+        self, plan: ReductionPlan, c: Compressed
+    ) -> tuple[dict[str, Any], dict[str, Any]] | None:
+        """``(inverse state0, env meta)`` for a container, or None."""
+        return None
+
+    def finish_decode(
+        self, plan: ReductionPlan, env: Any, state: dict, c: Compressed
+    ) -> jax.Array:
+        """Extract one leaf's decoded array from inverse pipeline state."""
+        return state["data"]
+
+    def _pipeline_decode(
+        self,
+        plan: ReductionPlan,
+        c: Compressed,
+        env: Any = None,
+        profile: dict | None = None,
+    ) -> jax.Array | None:
+        """Run the compiled inverse pipeline; None → caller's host fallback."""
+        if plan.pipeline is None or not plan.pipeline.invertible:
+            return None
+        prepared = self.decode_state(plan, c)
+        if prepared is None:
+            return None
+        state0, meta = prepared
+        from ..stages.base import CallEnv  # local: codecs ↔ stages layering
+
+        env = env if env is not None else CallEnv(plan)
+        env.meta.update(meta)
+        state, env = plan.pipeline.invert(state0, env=env, profile=profile)
+        return self.finish_decode(plan, env, state, c)
+
+    @property
+    def supports_batched_decode(self) -> bool:
+        return (
+            type(self).decode_state is not Codec.decode_state
+        )
 
     # -- stage graph ---------------------------------------------------------
     #

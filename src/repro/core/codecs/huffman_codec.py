@@ -20,7 +20,6 @@ decode-side tables derived from it are cached on the plan
 
 from __future__ import annotations
 
-import hashlib
 import math
 from functools import partial
 
@@ -43,6 +42,14 @@ def entropy_tail_stages(num_bins: int | None = None) -> tuple:
         sg.HuffmanEntropy(),
         sg.BitPack(),
     )
+
+
+# decode-direction graph parameters shared by every entropy-tail codec: the
+# compressed sections that seed the inverse state, and the 4 KiB word-stream
+# bucket that bounds inverse retraces across stream sizes (the decode
+# analogue of BitPack.jit_statics)
+ENTROPY_INV_INPUTS = ("words", "chunk_offsets")
+ENTROPY_INV_PADS = (("words", 1024),)
 
 
 def entropy_container(
@@ -73,8 +80,62 @@ def entropy_container(
             "length_table": np.asarray(env.meta["length_table"], np.int32),
         },
     )
-    c.meta["stages"] = plan.meta.get("stage_graph", [])
+    # Per-stage metadata plus the decode chunk index: the bit_pack entry
+    # records the chunk layout the chunk-parallel decoder fans out over.
+    # Purely additive (still container v2); readers seeing a stream without
+    # it — anything written before the stacked decode path existed — take
+    # the host-orchestrated fallback (see stream_decode_index).
+    n_chunks = int(c.arrays["chunk_offsets"].shape[0])
+    stages = [dict(s) for s in plan.meta.get("stage_graph", [])]
+    for s in stages:
+        if s.get("stage") == "bit_pack":
+            s["decode_index"] = {
+                "n_chunks": n_chunks,
+                "chunk_size": int(env.meta["chunk_size"]),
+                "n_symbols": int(n_symbols),
+            }
+    c.meta["stages"] = stages
     return c
+
+
+def stream_decode_index(c: Compressed) -> dict | None:
+    """The stream's decode chunk index, or None for pre-index streams."""
+    for s in c.meta.get("stages", ()) or ():
+        if isinstance(s, dict) and s.get("stage") == "bit_pack":
+            idx = s.get("decode_index")
+            return dict(idx) if isinstance(idx, dict) else None
+    return None
+
+
+def entropy_decode_state(
+    plan: ReductionPlan, c: Compressed
+) -> tuple[dict, dict] | None:
+    """Inverse-pipeline state for an entropy-tail stream (None: fallback).
+
+    The state is exactly the compressed sections — ``words`` and the
+    prefix-sum ``chunk_offsets`` the encoder persisted — so staging it is an
+    H2D of the compressed bytes, nothing else.  The env metadata carries
+    what the decode-direction host prepares consume (length table, chunk
+    geometry); old streams without the chunk index return None and decode
+    through the host path.
+    """
+    idx = stream_decode_index(c)
+    if idx is None:
+        return None
+    if int(idx["n_chunks"]) != int(c.arrays["chunk_offsets"].shape[0]):
+        return None  # inconsistent index: fail safe onto the host path
+    state0 = {
+        "words": np.asarray(c.arrays["words"], np.uint32),
+        "chunk_offsets": np.asarray(c.arrays["chunk_offsets"], np.int32),
+    }
+    meta = {
+        "length_table": np.asarray(c.arrays["length_table"], np.int32),
+        "chunk_size": int(idx["chunk_size"]),
+        "n_symbols": int(idx["n_symbols"]),
+        "num_keys": int(c.meta["num_keys"]),
+        "total_bits": int(c.meta["total_bits"]),
+    }
+    return state0, meta
 
 
 def sections_to_encoded(c: Compressed) -> huffman.Encoded:
@@ -89,31 +150,10 @@ def sections_to_encoded(c: Compressed) -> huffman.Encoded:
     )
 
 
-_MAX_DECODE_TABLES = 8  # per-plan cap on cached decode-table variants
-
-
-def plan_decode_tables(plan: ReductionPlan, length_table: np.ndarray):
-    """Decode tables for ``length_table``, cached in the plan workspace.
-
-    Keyed by the table's digest, so streams written with the same codebook
-    (the common case: same data characteristics, repeated decompress calls)
-    reuse one derived + device-staged table set, and CMM byte accounting
-    sees them.  Bounded FIFO per plan.
-    """
-    lt = np.ascontiguousarray(np.asarray(length_table, np.int32))
-    key = "decode_tables:" + hashlib.sha1(lt.tobytes()).hexdigest()
-    with plan.lock:
-        tables = plan.workspace.get(key)
-    if tables is not None:
-        return tables
-    tables = huffman.decode_tables(lt)
-    with plan.lock:
-        tables = plan.workspace.setdefault(key, tables)
-        cached = [k for k in plan.workspace
-                  if isinstance(k, str) and k.startswith("decode_tables:")]
-        for stale in cached[:-_MAX_DECODE_TABLES]:
-            del plan.workspace[stale]
-    return tables
+# Decode tables live in core.huffman since PR 4 so the stage library's
+# decode-direction prepare step shares the same per-plan cache without a
+# codecs → stages import cycle; this alias keeps the historical import path.
+plan_decode_tables = huffman.plan_decode_tables
 
 
 @register_codec("huffman")
@@ -127,6 +167,8 @@ class HuffmanCodec(Codec):
             stages=(sg.IntKeys(), sg.AlphabetScan(), sg.AlphabetBind())
             + entropy_tail_stages(),
             finish_keys=("words", "chunk_offsets"),
+            inv_inputs=ENTROPY_INV_INPUTS,
+            inv_pads=ENTROPY_INV_PADS,
         )
 
     def plan(self, spec: ReductionSpec) -> ReductionPlan:
@@ -156,7 +198,17 @@ class HuffmanCodec(Codec):
             n_symbols=math.prod(spec.shape),
         )
 
-    def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
+    def decode_state(self, plan: ReductionPlan, c: Compressed):
+        return entropy_decode_state(plan, c)
+
+    def decode(
+        self, plan: ReductionPlan, c: Compressed, *,
+        env=None, profile: dict | None = None,
+    ) -> jax.Array:
+        out = self._pipeline_decode(plan, c, env=env, profile=profile)
+        if out is not None:
+            return out
+        # host fallback: streams without a decode chunk index
         enc = sections_to_encoded(c)
         keys = huffman.decode(enc, tables=plan_decode_tables(plan, enc.length_table))
         return keys.reshape(tuple(c.meta["shape"])).astype(jnp.dtype(c.meta["dtype"]))
@@ -175,6 +227,8 @@ class HuffmanBytesCodec(Codec):
         return sg.StageGraph(
             stages=(sg.ByteKeys(),) + entropy_tail_stages(num_bins=256),
             finish_keys=("words", "chunk_offsets"),
+            inv_inputs=ENTROPY_INV_INPUTS,
+            inv_pads=ENTROPY_INV_PADS,
         )
 
     def plan(self, spec: ReductionSpec) -> ReductionPlan:
@@ -213,7 +267,23 @@ class HuffmanBytesCodec(Codec):
             n_symbols=n_symbols,
         )
 
-    def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
+    def decode_state(self, plan: ReductionPlan, c: Compressed):
+        # the device-side inverse byte view is a bitcast, only expressible
+        # for plain 1/2/4-byte element types — anything else (8-byte
+        # doubles under 32-bit jax, structured dtypes) stays on the host
+        # fallback, which reinterprets via numpy
+        dt = np.dtype(plan.spec.dtype)
+        if dt.kind not in "iuf" or dt.itemsize not in (1, 2, 4):
+            return None
+        return entropy_decode_state(plan, c)
+
+    def decode(
+        self, plan: ReductionPlan, c: Compressed, *,
+        env=None, profile: dict | None = None,
+    ) -> jax.Array:
+        out = self._pipeline_decode(plan, c, env=env, profile=profile)
+        if out is not None:
+            return out
         enc = sections_to_encoded(c)
         keys = np.asarray(
             huffman.decode(enc, tables=plan_decode_tables(plan, enc.length_table))

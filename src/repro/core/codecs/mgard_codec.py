@@ -35,13 +35,22 @@ from ..quantize import unsigned_to_signed
 from . import register_codec
 from .base import Codec, ReductionPlan, ReductionSpec
 from .huffman_codec import (
+    ENTROPY_INV_INPUTS,
+    ENTROPY_INV_PADS,
     entropy_container,
+    entropy_decode_state,
     entropy_tail_stages,
     plan_decode_tables,
     sections_to_encoded,
 )
 
 _unsigned_to_signed_jit = jax.jit(unsigned_to_signed)
+
+# Outlier slots pad to this bucket (bounds inverse retraces across streams
+# with differing escape counts) using an out-of-range index sentinel, which
+# the device scatter drops — a negative fill would wrap.
+_OUT_BUCKET = 64
+_OUT_SENTINEL = np.int32(2**31 - 1)
 
 
 @register_codec("mgard")
@@ -72,6 +81,9 @@ class MGARDCodec(Codec):
                 "words", "chunk_offsets",
                 "out_count", "out_idx", "out_val", "q", "keys",
             ),
+            inv_inputs=ENTROPY_INV_INPUTS + ("out_idx", "out_val"),
+            inv_pads=ENTROPY_INV_PADS,
+            inv_fills=(("out_idx", int(_OUT_SENTINEL)),),
         )
 
     def plan(self, spec: ReductionSpec) -> ReductionPlan:
@@ -136,7 +148,32 @@ class MGARDCodec(Codec):
         )
         return c
 
-    def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
+    def decode_state(self, plan: ReductionPlan, c: Compressed):
+        prepared = entropy_decode_state(plan, c)
+        if prepared is None:
+            return None
+        state0, meta = prepared
+        out_idx = np.asarray(c.arrays["outlier_idx"], np.int64)
+        if out_idx.size and out_idx.max(initial=0) >= int(_OUT_SENTINEL):
+            return None  # grid too large for the int32 scatter: host path
+        pad = (-out_idx.size) % _OUT_BUCKET
+        state0["out_idx"] = np.concatenate(
+            [out_idx.astype(np.int32), np.full(pad, _OUT_SENTINEL, np.int32)]
+        )
+        state0["out_val"] = np.concatenate(
+            [np.asarray(c.arrays["outlier_val"], np.int32), np.zeros(pad, np.int32)]
+        )
+        meta["bins"] = np.asarray(c.arrays["bins"], np.float64)
+        return state0, meta
+
+    def decode(
+        self, plan: ReductionPlan, c: Compressed, *,
+        env=None, profile: dict | None = None,
+    ) -> jax.Array:
+        out = self._pipeline_decode(plan, c, env=env, profile=profile)
+        if out is not None:
+            return out
+        # host fallback: streams without a decode chunk index
         enc = sections_to_encoded(c)
         keys = huffman.decode(enc, tables=plan_decode_tables(plan, enc.length_table))
         q = _unsigned_to_signed_jit(keys.astype(jnp.uint32))

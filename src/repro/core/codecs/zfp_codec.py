@@ -13,6 +13,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .. import zfp
 from .. import stages as sg
@@ -32,6 +33,7 @@ class ZFPCodec(Codec):
         return sg.StageGraph(
             stages=(sg.ZfpBlockTransform(rate, len(spec.shape), spec.shape),),
             finish_keys=("payload", "emax"),
+            inv_inputs=("payload", "emax"),
         )
 
     def plan(self, spec: ReductionSpec) -> ReductionPlan:
@@ -73,7 +75,20 @@ class ZFPCodec(Codec):
         c.meta["stages"] = plan.meta.get("stage_graph", [])
         return c
 
-    def decode(self, plan: ReductionPlan, c: Compressed) -> jax.Array:
+    def decode_state(self, plan: ReductionPlan, c: Compressed):
+        state0 = {
+            "payload": np.asarray(c.arrays["payload"]),
+            "emax": np.asarray(c.arrays["emax"]),
+        }
+        return state0, {}
+
+    def decode(
+        self, plan: ReductionPlan, c: Compressed, *,
+        env=None, profile: dict | None = None,
+    ) -> jax.Array:
+        out = self._pipeline_decode(plan, c, env=env, profile=profile)
+        if out is not None:
+            return out
         out = plan.executables["decode"](
             jnp.asarray(c.arrays["payload"]), jnp.asarray(c.arrays["emax"])
         )

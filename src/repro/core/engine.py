@@ -39,6 +39,7 @@ meshes/backends construct :class:`ExecutionEngine` directly::
 from __future__ import annotations
 
 import threading
+import weakref
 from collections import OrderedDict
 from typing import Any, Callable
 
@@ -106,12 +107,20 @@ class ExecutionEngine:
         # LRU-bounded: entries pin their vmapped segment (and its compiled
         # traces) alive, so an unbounded map would defeat CMM plan eviction
         # in long-running processes with high spec diversity.
-        self._smap_cache: "OrderedDict[int, Callable]" = OrderedDict()
+        self._smap_cache: "OrderedDict[tuple, Callable]" = OrderedDict()
         self._smap_capacity = 128
+        # per-shard workspace stacks for the donating batched path: keyed by
+        # the vmapped segment, popped before dispatch and re-stored from the
+        # executable's pass-through output (true recycling where XLA
+        # implements donation)
+        self._ws_stacks: dict[tuple, tuple] = {}
         self.shard_map_calls = 0
         self.sharded_leaves = 0
+        self.sharded_decoded_leaves = 0
         self.transfer_h2d = 0
         self.transfer_d2h = 0
+        self.ws_stack_builds = 0
+        self.ws_donated_calls = 0
 
     # ----------------------------------------------------------- single spec
 
@@ -249,16 +258,70 @@ class ExecutionEngine:
         return flat, stats
 
     def decompress_pytree(self, comp: dict[str, Any], like: Any, *, sep: str = "/") -> Any:
-        """Parallel inverse of :meth:`compress_pytree` (per-leaf futures)."""
+        """Sharded-parallel inverse of :meth:`compress_pytree`.
+
+        The mirror image of the encode fan-out: leaves are bucketed by
+        decode spec — one plan resolution per leaf, so repeat leaves are
+        CMM hits — and every bucket whose codec compiled an inverse
+        pipeline is stacked and driven through ``invert_batched`` under one
+        whole-mesh ``shard_map`` submission (H2D = compressed sections plus
+        metadata-scale decode operands, never a raw-array-sized transfer).
+        Streams without a decode chunk index, singleton buckets, and
+        codecs without a compiled inverse fall back to per-leaf futures.
+        """
+        import dataclasses as _dc
+
         from . import api
 
-        pending = {
-            key: self.executor.submit(api.decompress_leaf, val)
-            for key, val in comp.items()
-            if isinstance(val, Compressed)
-        }
+        buckets: dict[ReductionSpec, list] = {}
+        for key, val in comp.items():
+            if not isinstance(val, Compressed):
+                continue
+            spec = _dc.replace(
+                get_codec(val.method).decode_spec(val), backend=self.backend
+            )
+            # per-leaf context resolution, mirroring the encode direction:
+            # the first leaf of a bucket builds the decode plan (CMM miss),
+            # every further leaf is a real hit
+            api.get_plan(spec)
+            buckets.setdefault(spec, []).append((key, val))
+
+        results: dict[str, Any] = {}
+        pending: list[tuple[str, Submission]] = []
+        stacked: list[tuple[list, Submission]] = []
+        for spec, items in buckets.items():
+            codec = get_codec(spec.method)
+            plan = api.get_plan(spec)
+            prepared = None
+            if (
+                codec.supports_batched_decode
+                and len(items) > 1
+                and plan.pipeline is not None
+                and plan.pipeline.invertible
+            ):
+                prepared = [codec.decode_state(plan, c) for _k, c in items]
+                if any(p is None for p in prepared):
+                    prepared = None  # old streams in the bucket: host path
+            if prepared is not None:
+                stacked.append((items, self.executor.submit(
+                    self._decode_bucket_sharded, codec, spec, items, prepared,
+                    device=MESH,
+                )))
+            else:
+                for key, c in items:
+                    pending.append(
+                        (key, self.executor.submit(self._decode_leaf, spec, c))
+                    )
+        for items, sub in stacked:
+            for (key, _c), out in zip(items, sub.result()):
+                results[key] = out
+            with self._lock:
+                self.sharded_decoded_leaves += len(items)
+        for key, sub in pending:
+            results[key] = sub.result()
+
         flat = {
-            key: pending[key].result() if key in pending else val
+            key: results[key] if isinstance(val, Compressed) else val
             for key, val in comp.items()
         }
         leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
@@ -278,6 +341,20 @@ class ExecutionEngine:
             self.transfer_h2d += env.transfers.h2d
             self.transfer_d2h += env.transfers.d2h
         return c
+
+    def _decode_leaf(self, spec: ReductionSpec, c: Compressed):
+        """Per-leaf decode under the engine-bound spec (the plan the bucket
+        loop already resolved), mirroring `_encode_leaf` — the fallback must
+        not rebuild a second platform-default plan via `api.decode`."""
+        from . import api
+
+        plan = api.get_plan(spec)
+        env = CallEnv(plan)
+        out = get_codec(spec.method).decode(plan, c, env=env)
+        with self._lock:
+            self.transfer_h2d += env.transfers.h2d
+            self.transfer_d2h += env.transfers.d2h
+        return api.restore_leaf(np.asarray(out), c)
 
     def _encode_bucket_sharded(self, codec, spec: ReductionSpec, items) -> list:
         """Stack same-spec leaves and drive them through the plan's compiled
@@ -316,47 +393,165 @@ class ExecutionEngine:
             self.transfer_d2h += transfers.d2h
         return out
 
+    def _decode_bucket_sharded(
+        self, codec, spec: ReductionSpec, items, prepared
+    ) -> list:
+        """Stack same-spec containers and drive them through the plan's
+        compiled inverse pipeline, one ``shard_map`` per fused inverse
+        segment (in practice: one per bucket — the decode direction has no
+        host barriers).
+
+        The stack is padded to a multiple of the ``data``-axis size and the
+        pad rows dropped at restore.  H2D is the compressed sections plus
+        the decode-table/bin-schedule operands; the decoded arrays stay
+        device-resident until the per-leaf restore slices them out.
+        """
+        from . import api
+
+        plan = api.get_plan(spec)
+        k, n = len(items), len(self.devices)
+        pad = (-k) % n
+        prepared = list(prepared) + [prepared[-1]] * pad
+        transfers = TransferStats()
+        envs = []
+        for state0, meta in prepared:
+            env = CallEnv(plan, transfers)
+            env.meta.update(meta)
+            envs.append(env)
+        state = plan.pipeline.invert_batched(
+            [p[0] for p in prepared], envs, self._mesh_segment_mapper(),
+            transfers,
+        )
+        out = []
+        for i, (_key, c) in enumerate(items):
+            row = {key: arr[i] for key, arr in state.items()}
+            leaf = codec.finish_decode(plan, envs[i], row, c)
+            out.append(api.restore_leaf(np.asarray(leaf), c))
+        with self._lock:
+            self.shard_map_calls += len(plan.pipeline.inv_segments)
+            self.transfer_h2d += transfers.h2d
+            self.transfer_d2h += transfers.d2h
+        return out
+
     def _mesh_segment_mapper(self) -> Callable:
         """Wrap a vmapped pipeline segment in this engine's mesh shard_map.
 
-        State and per-leaf operands split over the ``data`` axis; plan
-        workspace buffers are replicated.  The wrapped executable is cached
-        per vmapped segment (the pipeline keeps segment identity stable per
-        statics tuple, so jit re-traces only on genuinely new shapes).
+        State and per-leaf operands split over the ``data`` axis.  Plan
+        workspace buffers take one of two routes:
+
+          * **broadcast** (platforms without XLA buffer donation): the
+            single plan copy is replicated to every shard and the vmapped
+            segment's workspace pass-through is dropped;
+          * **per-shard donation** (TPU/GPU, the ROADMAP "batched-path
+            donation" item): the engine keeps a per-segment stack of one
+            workspace copy per data shard, donates it into the dispatch,
+            and re-stores the recycled stack the executable passes back —
+            so stacked buckets reuse buffers in place exactly like the
+            serial path's ``ReductionPlan.recycle`` contract.
+
+        The wrapped executable is cached per vmapped segment (the pipeline
+        keeps segment identity stable per statics tuple, so jit re-traces
+        only on genuinely new shapes).
         """
 
         def shard(a) -> P:
             return P(*(["data"] + [None] * (np.ndim(a) - 1)))
 
         def mapper(seg, vfn, state_vals, operand_vals, ws_vals):
-            key = id(vfn)
+            donate = (
+                bool(ws_vals)
+                and seg.donate_keys == seg.workspace_keys
+                and adapters.supports_donation()
+            )
+            key = (id(vfn), donate)
             with self._lock:
                 exe = self._smap_cache.get(key)
                 if exe is not None:
                     self._smap_cache.move_to_end(key)
             if exe is None:
-                in_specs = (
-                    tuple(shard(a) for a in state_vals),
-                    tuple(shard(a) for a in operand_vals),
-                    tuple(P(*([None] * np.ndim(a))) for a in ws_vals),
+                state_specs = tuple(shard(a) for a in state_vals)
+                op_specs = tuple(shard(a) for a in operand_vals)
+                outs_shapes, _ws_shapes = jax.eval_shape(
+                    vfn, state_vals, operand_vals, ws_vals
                 )
-                out_shapes = jax.eval_shape(vfn, state_vals, operand_vals, ws_vals)
-                out_specs = jax.tree.map(
-                    lambda s: P(*(["data"] + [None] * (len(s.shape) - 1))),
-                    out_shapes,
+                outs_specs = tuple(
+                    P(*(["data"] + [None] * (len(s.shape) - 1)))
+                    for s in outs_shapes
                 )
-                exe = shard_map(
-                    vfn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
-                    check_rep=False,
-                )
+                if donate:
+                    ws_specs = tuple(
+                        P(*(["data"] + [None] * np.ndim(a))) for a in ws_vals
+                    )
+
+                    def wrapped(s, o, wstack):
+                        outs, _ = vfn(s, o, tuple(w[0] for w in wstack))
+                        return outs, wstack
+
+                    exe = adapters.donating_jit(
+                        shard_map(
+                            wrapped, mesh=self.mesh,
+                            in_specs=(state_specs, op_specs, ws_specs),
+                            out_specs=(outs_specs, ws_specs),
+                            check_rep=False,
+                        ),
+                        donate_argnums=(2,),
+                    )
+                else:
+                    ws_specs = tuple(
+                        P(*([None] * np.ndim(a))) for a in ws_vals
+                    )
+                    exe = shard_map(
+                        lambda s, o, w: vfn(s, o, w)[0],
+                        mesh=self.mesh,
+                        in_specs=(state_specs, op_specs, ws_specs),
+                        out_specs=outs_specs,
+                        check_rep=False,
+                    )
                 with self._lock:
                     exe = self._smap_cache.setdefault(key, exe)
                     self._smap_cache.move_to_end(key)
                     while len(self._smap_cache) > self._smap_capacity:
-                        self._smap_cache.popitem(last=False)
-            return exe(state_vals, operand_vals, ws_vals)
+                        old_key, _ = self._smap_cache.popitem(last=False)
+                        # keep workspace stacks bounded with the exe cache;
+                        # a re-run of the segment simply rebuilds its stack
+                        self._ws_stacks.pop(old_key, None)
+            if not donate:
+                return exe(state_vals, operand_vals, ws_vals)
+            stacks = self._take_ws_stacks(key, ws_vals, vfn)
+            outs, stacks = exe(state_vals, operand_vals, stacks)
+            with self._lock:
+                self._ws_stacks[key] = stacks
+                self.ws_donated_calls += 1
+            return outs
 
         return mapper
+
+    def _take_ws_stacks(self, key: tuple, ws_vals: tuple, vfn: Callable) -> tuple:
+        """Pop (or build) the per-shard workspace stack for a segment.
+
+        Popping under the lock gives each concurrent bucket exclusive
+        ownership of a stack for the duration of its dispatch — donation
+        invalidates the input buffer, so a shared reference would be a
+        use-after-donate.  The entry's lifetime is tied to the vmapped
+        segment itself: a ``weakref.finalize`` on ``vfn`` drops the stack
+        when the segment (and its owning plan) is collected, so evicted
+        plans release their device buffers AND a recycled ``id()`` can
+        never resurrect another plan's workspace contents (the finalizer
+        runs before the id can be reused).
+        """
+        with self._lock:
+            stacks = self._ws_stacks.pop(key, None)
+        if stacks is None:
+            n = len(self.devices)
+            stacks = tuple(
+                jnp.stack([jnp.asarray(w)] * n) for w in ws_vals
+            )
+            # no engine lock in the callback: it may fire from GC at any
+            # point, and dict.pop is GIL-atomic
+            weakref.finalize(vfn, self._ws_stacks.pop, key, None)
+            with self._lock:
+                self.ws_stack_builds += 1
+        return stacks
 
     # -------------------------------------------------------------- lifecycle
 
@@ -367,8 +562,11 @@ class ExecutionEngine:
                 backend=self.backend,
                 shard_map_calls=self.shard_map_calls,
                 sharded_leaves=self.sharded_leaves,
+                sharded_decoded_leaves=self.sharded_decoded_leaves,
                 transfer_h2d=self.transfer_h2d,
                 transfer_d2h=self.transfer_d2h,
+                ws_stack_builds=self.ws_stack_builds,
+                ws_donated_calls=self.ws_donated_calls,
             )
         return s
 

@@ -302,7 +302,7 @@ def encode(
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("chunk_size", "n_chunks", "max_len"))
+@partial(jax.jit, static_argnames=("chunk_size", "n_chunks", "max_len", "adapter"))
 def _decode_jit(
     words: jax.Array,
     chunk_offsets: jax.Array,
@@ -313,27 +313,22 @@ def _decode_jit(
     chunk_size: int,
     n_chunks: int,
     max_len: int,
+    adapter: str | None = None,
 ):
-    lens = jnp.arange(1, max_len + 1, dtype=jnp.int32)
-    fc = first_code[1:]
-    ct = count[1:]
-    so = sym_offset[1:]
+    del n_chunks  # shape-derived; kept in the signature for trace keying
+    if adapter is None:
+        from repro.kernels.huffman_decode import ref as decode_ref  # lazy
 
-    def step(cursor, _):
-        window = bs.read_window(words, cursor)
-        cands = bs._safe_shr(jnp.broadcast_to(window, (max_len,)), 32 - lens)
-        rel = cands - fc  # uint32; wraps when cands < fc, guarded below
-        valid = (cands >= fc) & (rel < ct.astype(jnp.uint32))
-        li = jnp.argmax(valid)  # first (shortest) valid length index
-        l = lens[li]
-        sym = sym_sorted[so[li] + rel[li].astype(jnp.int32)]
-        return cursor + l, sym
+        return decode_ref.decode_chunks(
+            words, chunk_offsets, first_code, count, sym_offset, sym_sorted,
+            chunk_size, max_len,
+        )
+    from repro.kernels.huffman_decode import ops as decode_ops  # lazy: layering
 
-    def chunk(off):
-        _, syms = jax.lax.scan(step, off, None, length=chunk_size)
-        return syms
-
-    return jax.vmap(chunk)(chunk_offsets.astype(jnp.int32))
+    return decode_ops.decode_chunks(
+        words, chunk_offsets, first_code, count, sym_offset, sym_sorted,
+        chunk_size, max_len, adapter=adapter,
+    )
 
 
 @dataclass
@@ -373,11 +368,15 @@ def decode_tables(length_table: np.ndarray) -> DecodeTables:
     )
 
 
-def decode(enc: Encoded, tables: DecodeTables | None = None) -> jax.Array:
+def decode(
+    enc: Encoded, tables: DecodeTables | None = None, adapter: str | None = None
+) -> jax.Array:
     """Decode a Huffman-X bitstream back to keys (uint/int32 array).
 
     ``tables`` short-circuits the per-call codebook derivation — pass the
-    plan-cached :class:`DecodeTables` when decoding repeatedly.
+    plan-cached :class:`DecodeTables` when decoding repeatedly.  ``adapter``
+    routes the chunk scan through the ``huffman_decode`` kernel registry
+    (``None``: the inline jnp reference path).
     """
     if tables is None:
         tables = decode_tables(enc.length_table)
@@ -392,8 +391,40 @@ def decode(enc: Encoded, tables: DecodeTables | None = None) -> jax.Array:
         enc.chunk_size,
         n_chunks,
         max(tables.max_len, 1),
+        adapter,
     )
     return syms.reshape(-1)[: enc.n_symbols]
+
+
+_MAX_DECODE_TABLES = 8  # per-plan cap on cached decode-table variants
+
+
+def plan_decode_tables(plan, length_table: np.ndarray) -> DecodeTables:
+    """Decode tables for ``length_table``, cached in the plan workspace.
+
+    Keyed by the table's digest, so streams written with the same codebook
+    (the common case: same data characteristics, repeated decompress calls)
+    reuse one derived + device-staged table set, and CMM byte accounting
+    sees them.  Bounded FIFO per plan.  Shared by the legacy host decode
+    path and the stage pipeline's inverse direction (its ``codebook_build``
+    prepare step), so both hit the same cache.
+    """
+    import hashlib
+
+    lt = np.ascontiguousarray(np.asarray(length_table, np.int32))
+    key = "decode_tables:" + hashlib.sha1(lt.tobytes()).hexdigest()
+    with plan.lock:
+        tables = plan.workspace.get(key)
+    if tables is not None:
+        return tables
+    tables = decode_tables(lt)
+    with plan.lock:
+        tables = plan.workspace.setdefault(key, tables)
+        cached = [k for k in plan.workspace
+                  if isinstance(k, str) and k.startswith("decode_tables:")]
+        for stale in cached[:-_MAX_DECODE_TABLES]:
+            del plan.workspace[stale]
+    return tables
 
 
 # ---------------------------------------------------------------------------

@@ -170,6 +170,24 @@ class Stage:
     fetches: tuple[str, ...] = ()         # host stages only
     static_outputs: tuple[str, ...] = ()  # host stages only
 
+    # -- decode direction ----------------------------------------------------
+    # Device stages with a non-empty ``inv_writes`` participate in the
+    # compiled inverse pipeline: ``invert`` is fused exactly like ``apply``,
+    # with its own reads/writes/operands/statics declarations.  Host stages
+    # implement ``host_prepare`` instead of a device fetch: the decode
+    # direction has *no* device→host synchronisation points — everything a
+    # host stage contributed at encode time (codebooks, bin schedules) is in
+    # the container, so preparation only reads ``env.meta`` and ships
+    # operands.  That is why a codec's whole decode chain fuses into a
+    # single jitted executable (see CompiledPipeline.invert).
+    inv_reads: tuple[str, ...] = ()
+    inv_writes: tuple[str, ...] = ()
+    inv_operands: tuple[str, ...] = ()
+    inv_workspace: tuple[str, ...] = ()
+    inv_donates: tuple[str, ...] = ()
+    inv_statics: tuple[str, ...] = ()
+    inv_static_outputs: tuple[str, ...] = ()  # host stages only
+
     def planned(self, plan: Any) -> None:
         """Plan-time hook: record plan-constant statics/workspace/meta."""
 
@@ -185,6 +203,10 @@ class Stage:
 
     def host_apply(self, env: CallEnv, fetched: dict[str, np.ndarray]) -> None:
         raise NotImplementedError(f"{self.name} is not a host stage")
+
+    def host_prepare(self, env: CallEnv) -> None:
+        """Decode-direction preparation: derive operands/statics from the
+        container metadata in ``env.meta`` (never a device fetch)."""
 
     def merge_static(self, name: str, values: Sequence[int]) -> int:
         """Combine per-leaf statics for a stacked batch (default: must agree)."""
@@ -223,6 +245,17 @@ class StageGraph:
     stages: tuple[Stage, ...]
     finish_keys: tuple[str, ...]
     inputs: tuple[str, ...] = ("data",)
+    # decode direction: ``inv_inputs`` names the state the codec rebuilds
+    # from container sections (empty: the graph has no compiled inverse);
+    # ``inv_finish`` the keys the inverse run must produce; ``inv_pads``
+    # rounds named state arrays up to a size bucket before the fused
+    # executable sees them (bounds retraces across stream sizes, the decode
+    # analogue of BitPack.jit_statics); ``inv_fills`` sets the pad fill
+    # value per key (e.g. an out-of-range sentinel for scatter indices).
+    inv_inputs: tuple[str, ...] = ()
+    inv_finish: tuple[str, ...] = ("data",)
+    inv_pads: tuple[tuple[str, int], ...] = ()
+    inv_fills: tuple[tuple[str, int], ...] = ()
 
     def compile(self, plan: Any) -> "CompiledPipeline":
         return CompiledPipeline(self, plan)
@@ -239,10 +272,17 @@ class StageGraph:
 
 @dataclass
 class _Segment:
-    """A maximal run of device stages fused into one jitted executable."""
+    """A maximal run of device stages fused into one jitted executable.
+
+    ``direction`` selects which side of the Stage protocol the fused
+    executable calls: ``"fwd"`` runs ``apply`` in graph order, ``"inv"``
+    runs ``invert`` with ``stages`` already stored in inverse execution
+    order (the compiler reverses the graph when partitioning).
+    """
 
     index: int
     stages: list[Stage]
+    direction: str = "fwd"
     in_keys: tuple[str, ...] = ()
     out_keys: tuple[str, ...] = ()
     operand_keys: tuple[str, ...] = ()
@@ -252,7 +292,9 @@ class _Segment:
 
     @property
     def name(self) -> str:
-        return "+".join(st.name for st in self.stages)
+        sep = "+" if self.direction == "fwd" else "·"
+        base = sep.join(st.name for st in self.stages)
+        return base if self.direction == "fwd" else f"invert[{base}]"
 
 
 def _dedup(items) -> tuple:
@@ -282,7 +324,13 @@ class CompiledPipeline:
         for st in graph.stages:
             st.planned(plan)
         self.steps = self._partition()
+        self.inv_preps, self.inv_segments = self._partition_inverse()
         plan.meta.setdefault("stage_graph", graph.describe(plan))
+
+    @property
+    def invertible(self) -> bool:
+        """True when the graph compiled a device-resident decode direction."""
+        return bool(self.inv_segments)
 
     # -- compilation ---------------------------------------------------------
 
@@ -340,6 +388,68 @@ class CompiledPipeline:
             available |= written
         return groups
 
+    def _partition_inverse(self) -> tuple[list[Stage], list[_Segment]]:
+        """Compile the decode direction: host prepares + fused inverse runs.
+
+        Host stages become *prepare* steps (container metadata → operands/
+        statics, no device fetch), hoisted ahead of all device work; every
+        device stage with a declared inverse joins a maximal inverse run,
+        walking the graph backwards.  Stages without an inverse contract
+        (histograms, scans — encode-only analysis) are identities in the
+        decode direction and never cut a run, so with no host barriers left
+        the whole decode chain typically fuses into ONE jitted executable —
+        the mirror image of the forward direction's segment structure.
+        """
+        if not self.graph.inv_inputs:
+            return [], []
+        preps = [st for st in self.graph.stages if not st.device]
+        segs: list[_Segment] = []
+        for st in reversed(self.graph.stages):
+            if not (st.device and st.inv_writes):
+                continue
+            if segs:
+                segs[-1].stages.append(st)
+            else:
+                segs.append(_Segment(index=0, stages=[st], direction="inv"))
+        available = set(self.graph.inv_inputs)
+        for seg in segs:
+            written: set[str] = set()
+            ins: list[str] = []
+            for st in seg.stages:
+                for k in st.inv_reads:
+                    if k not in written:
+                        if k not in available:
+                            raise ValueError(
+                                f"inverse of {st.name} reads {k!r} which "
+                                "neither inv_inputs nor an earlier inverse "
+                                "stage produces"
+                            )
+                        ins.append(k)
+                written |= set(st.inv_writes)
+            seg.in_keys = _dedup(ins)
+            seg.out_keys = _dedup(
+                k for k in self.graph.inv_finish if k in written
+            )
+            seg.operand_keys = _dedup(
+                k for st in seg.stages for k in st.inv_operands
+            )
+            seg.workspace_keys = _dedup(
+                k for st in seg.stages for k in st.inv_workspace
+            )
+            seg.donate_keys = _dedup(
+                k for st in seg.stages for k in st.inv_donates
+            )
+            seg.static_keys = _dedup(
+                k for st in seg.stages for k in st.inv_statics
+            )
+            available |= written
+        missing = set(self.graph.inv_finish) - available
+        if missing:
+            raise ValueError(
+                f"inverse pipeline never produces {sorted(missing)}"
+            )
+        return preps, segs
+
     def _seg_statics(self, seg: _Segment, statics: dict) -> tuple[tuple, dict]:
         sub = {k: statics[k] for k in seg.static_keys}
         for st in seg.stages:
@@ -348,6 +458,7 @@ class CompiledPipeline:
 
     def _raw_fn(self, seg: _Segment, jit_statics: dict, with_ws_out: bool) -> Callable:
         backend = self.plan.spec.backend
+        inverse = seg.direction == "inv"
 
         def fn(state_vals, operand_vals, ws_vals):
             state = dict(zip(seg.in_keys, state_vals))
@@ -357,7 +468,8 @@ class CompiledPipeline:
                 dict(zip(seg.workspace_keys, ws_vals)),
             )
             for st in seg.stages:
-                state.update(st.apply(env, state))
+                state.update(st.invert(env, state) if inverse
+                             else st.apply(env, state))
             outs = tuple(state[k] for k in seg.out_keys)
             if not with_ws_out:
                 return outs
@@ -369,20 +481,23 @@ class CompiledPipeline:
         """Jitted (serial) or vmapped-raw (batched) segment executable.
 
         Serial executables donate the plan workspace where the platform
-        supports it (the PR-2 recycle contract); batched executables skip
-        donation — the workspace is broadcast across the leaf axis.
+        supports it (the PR-2 recycle contract); batched executables return
+        ``(outs, workspace)`` with the workspace un-vmapped, leaving the
+        broadcast-vs-donate decision to the engine's mesh mapper.
         """
         key_statics, jit_statics = self._seg_statics(seg, statics)
-        key = (seg.index, key_statics, batched)
+        key = (seg.index, seg.direction, key_statics, batched)
         with self._lock:
             exe = self._exe.get(key)
         if exe is not None:
             return exe
         if batched:
-            # workspace is broadcast over the leaf axis, so donation (which
-            # would alias a shared buffer into per-leaf outputs) is skipped
-            raw = self._raw_fn(seg, jit_statics, with_ws_out=False)
-            exe = jax.vmap(raw, in_axes=(0, 0, None))
+            # Workspace rides along un-vmapped (one copy per shard) and is
+            # passed back out, so the engine's mesh mapper can either drop
+            # it (broadcast semantics) or donate per-shard stacks and
+            # recycle the returned buffers (see ExecutionEngine).
+            raw = self._raw_fn(seg, jit_statics, with_ws_out=True)
+            exe = jax.vmap(raw, in_axes=(0, 0, None), out_axes=(0, None))
         else:
             raw = self._raw_fn(seg, jit_statics, with_ws_out=True)
             donate = ()
@@ -419,16 +534,22 @@ class CompiledPipeline:
                 operand_vals = tuple(
                     self._ship(env, k, shipped) for k in step.operand_keys
                 )
-                ws_vals = tuple(plan.workspace[k] for k in step.workspace_keys)
                 exe = self.segment_exe(step, env.statics, batched=False)
                 state_vals = tuple(state[k] for k in step.in_keys)
                 if step.workspace_keys:
+                    # Read the workspace inside the lock: a concurrent
+                    # donating dispatch invalidates and replaces these
+                    # buffers under the same lock, so a reference captured
+                    # outside it could be a use-after-donate.
                     with plan.lock:
+                        ws_vals = tuple(
+                            plan.workspace[k] for k in step.workspace_keys
+                        )
                         outs, ws_out = exe(state_vals, operand_vals, ws_vals)
                         for k, buf in zip(step.workspace_keys, ws_out):
                             plan.recycle(k, buf)
                 else:
-                    outs, _ = exe(state_vals, operand_vals, ws_vals)
+                    outs, _ = exe(state_vals, operand_vals, ())
                 state.update(zip(step.out_keys, outs))
                 if profile is not None:
                     jax.block_until_ready(outs)
@@ -515,6 +636,145 @@ class CompiledPipeline:
     def device_segments(self) -> list[_Segment]:
         return [s for s in self.steps if isinstance(s, _Segment)]
 
+    # -- execution: decode direction ----------------------------------------
+
+    def _pad_state(self, state: dict) -> dict:
+        """Round ``inv_pads`` keys up to their bucket on device (a cheap
+        concat, no H2D) so nearby stream sizes share one fused trace."""
+        for key, mult in self.graph.inv_pads:
+            arr = state.get(key)
+            if arr is None:
+                continue
+            pad = (-arr.shape[0]) % mult
+            if pad:
+                state[key] = jnp.concatenate(
+                    [arr, jnp.zeros((pad,) + arr.shape[1:], arr.dtype)]
+                )
+        return state
+
+    def invert(
+        self,
+        state0: dict[str, Any],
+        env: CallEnv | None = None,
+        profile: dict[str, float] | None = None,
+    ) -> tuple[dict[str, Any], CallEnv]:
+        """Execute the decode direction for one leaf.
+
+        ``state0`` is the container-section state (``graph.inv_inputs``);
+        ``env.meta`` must already hold the stream's metadata.  Host stages
+        run as *prepare* steps — metadata-only, no device fetch — then the
+        fused inverse segments run back-to-back, so H2D is exactly the
+        compressed sections plus the prepared operands, and nothing comes
+        back D2H until the caller looks at the output.
+        """
+        if not self.invertible:
+            raise NotImplementedError(
+                f"codec {self.plan.spec.method!r} has no compiled inverse"
+            )
+        plan = self.plan
+        env = env or CallEnv(plan)
+        for st in self.inv_preps:
+            t0 = _clock() if profile is not None else 0.0
+            st.host_prepare(env)
+            if profile is not None:
+                profile[st.name] = profile.get(st.name, 0.0) + (_clock() - t0)
+        env.transfers.count_h2d(*state0.values())
+        state = self._pad_state({k: jnp.asarray(v) for k, v in state0.items()})
+        shipped: set[str] = set()
+        for seg in self.inv_segments:
+            t0 = _clock() if profile is not None else 0.0
+            operand_vals = tuple(
+                self._ship(env, k, shipped) for k in seg.operand_keys
+            )
+            exe = self.segment_exe(seg, env.statics, batched=False)
+            state_vals = tuple(state[k] for k in seg.in_keys)
+            if seg.workspace_keys:
+                # workspace read under the lock — see run() for the
+                # use-after-donate rationale
+                with plan.lock:
+                    ws_vals = tuple(
+                        plan.workspace[k] for k in seg.workspace_keys
+                    )
+                    outs, ws_out = exe(state_vals, operand_vals, ws_vals)
+                    for k, buf in zip(seg.workspace_keys, ws_out):
+                        plan.recycle(k, buf)
+            else:
+                outs, _ = exe(state_vals, operand_vals, ())
+            state.update(zip(seg.out_keys, outs))
+            if profile is not None:
+                jax.block_until_ready(outs)
+                profile[seg.name] = profile.get(seg.name, 0.0) + (_clock() - t0)
+        return state, env
+
+    def invert_batched(
+        self,
+        states: list[dict[str, Any]],
+        envs: list[CallEnv],
+        device_mapper: Callable,
+        transfers: TransferStats,
+    ) -> dict[str, Any]:
+        """Drive a stacked leaf batch through the decode direction.
+
+        ``states`` holds one container-section state dict per leaf; they are
+        stacked here with ``inv_fills`` padding (e.g. out-of-range scatter
+        sentinels) and ``inv_pads`` bucketing, so streams of differing sizes
+        share one vmapped trace.  Host prepares run per leaf — metadata
+        scale — and their statics merge (:meth:`Stage.merge_static`) before
+        the fused inverse segments dispatch under the engine's mesh
+        ``shard_map``, exactly like the forward ``run_batched`` path.
+        """
+        plan = self.plan
+        for st in self.inv_preps:
+            for env in envs:
+                st.host_prepare(env)
+        merged: dict[str, int] = dict(envs[0].statics)
+        for st in self.inv_preps:
+            for name in st.inv_static_outputs:
+                merged[name] = st.merge_static(
+                    name, [env.statics[name] for env in envs]
+                )
+        fills = dict(self.graph.inv_fills)
+        pads = dict(self.graph.inv_pads)
+        state: dict[str, Any] = {}
+        for key in states[0]:
+            arr = _stack_pad(
+                [np.asarray(s[key]) for s in states], fill=fills.get(key, 0)
+            )
+            mult = pads.get(key)
+            if mult and (-arr.shape[1]) % mult:
+                pad = (-arr.shape[1]) % mult
+                arr = np.concatenate(
+                    [arr, np.full((arr.shape[0], pad) + arr.shape[2:],
+                                  fills.get(key, 0), arr.dtype)], axis=1,
+                )
+            a = jnp.asarray(arr)
+            transfers.count_h2d(a)
+            state[key] = a
+        stacked_ops: dict[str, jax.Array] = {}
+        for seg in self.inv_segments:
+            for k in seg.operand_keys:
+                if k not in stacked_ops:
+                    arr = jnp.asarray(_stack_pad(
+                        [np.asarray(e.operands[k]) for e in envs]
+                    ))
+                    transfers.count_h2d(arr)
+                    stacked_ops[k] = arr
+            operand_vals = tuple(stacked_ops[k] for k in seg.operand_keys)
+            vfn = self.segment_exe(seg, merged, batched=True)
+            state_vals = tuple(state[k] for k in seg.in_keys)
+            if seg.workspace_keys:
+                with plan.lock:
+                    ws_vals = tuple(
+                        plan.workspace[k] for k in seg.workspace_keys
+                    )
+                    outs = device_mapper(
+                        seg, vfn, state_vals, operand_vals, ws_vals
+                    )
+            else:
+                outs = device_mapper(seg, vfn, state_vals, operand_vals, ())
+            state.update(zip(seg.out_keys, outs))
+        return state
+
 
 def _clock() -> float:
     import time
@@ -522,18 +782,20 @@ def _clock() -> float:
     return time.perf_counter()
 
 
-def _stack_pad(arrs: list[np.ndarray]) -> np.ndarray:
-    """Stack per-leaf operands, zero-padding axis 0 to the widest leaf.
+def _stack_pad(arrs: list[np.ndarray], fill: int = 0) -> np.ndarray:
+    """Stack per-leaf operands, padding axis 0 to the widest leaf.
 
     Needed when a host stage builds data-dependent tables per leaf (e.g.
     per-leaf codebooks over differing alphabets): zero-length codes are
-    never gathered for keys inside a leaf's own alphabet, so the padding is
-    inert by construction.
+    never gathered for keys inside a leaf's own alphabet, so zero padding
+    is inert by construction.  ``fill`` overrides the pad value for state
+    whose neutral element is not zero (e.g. scatter indices, which pad with
+    an out-of-range sentinel so the padded rows drop).
     """
     if all(a.shape == arrs[0].shape for a in arrs):
         return np.stack(arrs)
     width = max(a.shape[0] for a in arrs)
-    out = np.zeros((len(arrs), width) + arrs[0].shape[1:], arrs[0].dtype)
+    out = np.full((len(arrs), width) + arrs[0].shape[1:], fill, arrs[0].dtype)
     for i, a in enumerate(arrs):
         out[i, : a.shape[0]] = a
     return out

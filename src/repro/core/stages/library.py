@@ -55,15 +55,39 @@ class IntKeys(Stage):
     name = "int_keys"
     reads = ("data",)
     writes = ("keys",)
+    inv_reads = ("keys",)
+    inv_writes = ("data",)
+
+    def planned(self, plan) -> None:
+        self._shape = tuple(plan.spec.shape)
+        self._dtype = plan.spec.dtype
 
     def apply(self, env: TraceEnv, state: dict) -> dict:
         return {"keys": state["data"].reshape(-1).astype(jnp.int32)}
+
+    def invert(self, env: TraceEnv, state: dict) -> dict:
+        keys = state["keys"]
+        return {"data": keys.reshape(self._shape).astype(jnp.dtype(self._dtype))}
 
 
 class ByteKeys(IntKeys):
     """Byte view of the input as the key stream (256-key alphabet)."""
 
     name = "byte_keys"
+
+    def invert(self, env: TraceEnv, state: dict) -> dict:
+        # device-side inverse of the host byte view: bitcast the decoded
+        # byte stream back to the element dtype (little-endian layouts
+        # match numpy's .view on every supported platform)
+        dt = np.dtype(self._dtype)
+        raw = state["keys"].astype(jnp.uint8)
+        if dt.itemsize == 1:
+            data = raw.astype(jnp.dtype(self._dtype))
+        else:
+            data = jax.lax.bitcast_convert_type(
+                raw.reshape(-1, dt.itemsize), jnp.dtype(self._dtype)
+            )
+        return {"data": data.reshape(self._shape)}
 
 
 class AlphabetScan(Stage):
@@ -112,9 +136,14 @@ class MgardDecorrelate(Stage):
     name = "mgard_decorrelate"
     reads = ("data",)
     writes = ("coeffs", "vmin", "vmax")
+    inv_reads = ("coeffs",)
+    inv_writes = ("data",)
 
     def __init__(self, shape: tuple[int, ...]):
         self.shape = tuple(shape)
+
+    def planned(self, plan) -> None:
+        self._dtype = plan.spec.dtype
 
     def apply(self, env: TraceEnv, state: dict) -> dict:
         from .. import mgard
@@ -129,7 +158,8 @@ class MgardDecorrelate(Stage):
     def invert(self, env: TraceEnv, state: dict) -> dict:
         from .. import mgard
 
-        return {"data": mgard.recompose(state["coeffs"], shape=self.shape)}
+        out = mgard.recompose(state["coeffs"], shape=self.shape)
+        return {"data": out.astype(jnp.dtype(self._dtype))}
 
     def stage_meta(self, plan) -> dict:
         return {"shape": list(self.shape)}
@@ -160,6 +190,11 @@ class BinSchedule(Stage):
         env.meta["bins"] = bins
         env.operands["bins"] = np.asarray(bins, np.float32)
 
+    def host_prepare(self, env: CallEnv) -> None:
+        # decode direction: the bin schedule was recorded in the container —
+        # ship it back as the dequantize operand, no device sync needed
+        env.operands["bins"] = np.asarray(env.meta["bins"], np.float32)
+
     def stage_meta(self, plan) -> dict:
         return {"error_bound": self.eb0, "relative": self.relative,
                 "levels": self.L + 1}
@@ -181,6 +216,11 @@ class UniformQuantize(Stage):
     operands = ("bins",)
     workspace = ("lmap",)
     donates = ("lmap",)
+    inv_reads = ("keys", "out_idx", "out_val")
+    inv_writes = ("coeffs",)
+    inv_operands = ("bins",)
+    inv_workspace = ("lmap",)
+    inv_donates = ("lmap",)
 
     def __init__(self, padded: tuple[int, ...], dict_size: int):
         self.padded = tuple(padded)
@@ -215,10 +255,17 @@ class UniformQuantize(Stage):
         }
 
     def invert(self, env: TraceEnv, state: dict) -> dict:
-        from ..quantize import signed_to_unsigned
+        from ..quantize import signed_to_unsigned, unsigned_to_signed
         from repro.kernels.quantize_map import ops as quantize_ops
 
-        q = state["q"]
+        # zig-zag back to signed, restore escaped outliers losslessly (the
+        # padded index rows carry an out-of-range sentinel and drop), then
+        # dequantize through the same planned kernel the encode side used
+        q = unsigned_to_signed(state["keys"].astype(jnp.uint32)).reshape(-1)
+        q = q.at[state["out_idx"]].set(
+            state["out_val"].astype(jnp.int32), mode="drop"
+        )
+        q = q.reshape(self.padded)
         coeffs = quantize_ops.dequantize(
             signed_to_unsigned(q), env.workspace("lmap"), env.operand("bins"),
             adapter=env.backend,
@@ -278,6 +325,7 @@ class CodebookBuild(Stage):
     device = False
     fetches = ("freq",)
     static_outputs = ("num_words",)
+    inv_static_outputs = ("chunk_size", "n_symbols")
 
     def __init__(self, chunk_size: int = huffman.DEFAULT_CHUNK):
         self.chunk_size = int(chunk_size)
@@ -298,6 +346,30 @@ class CodebookBuild(Stage):
         env.operands["codes_t"] = np.asarray(book.codes, np.uint32)
         env.operands["lens_t"] = np.asarray(book.lengths, np.int32)
 
+    def host_prepare(self, env: CallEnv) -> None:
+        """Decode direction: canonical decode tables from the serialised
+        length table — the plan-cached derivation (`plan_decode_tables`),
+        so repeated decodes of same-codebook streams reuse one table set.
+        The tables are metadata-scale operands; nothing is fetched from the
+        device, which is what keeps the whole inverse pipeline fused."""
+        tables = huffman.plan_decode_tables(
+            env.plan, np.asarray(env.meta["length_table"], np.int32)
+        )
+        fc = np.asarray(tables.first_code, np.uint32)
+        ct = np.asarray(tables.count, np.int32)
+        so = np.asarray(tables.sym_offset, np.int32)
+        ss = np.asarray(tables.sym_sorted, np.int32)
+        if tables.max_len == 0:  # degenerate empty alphabet: keep width ≥ 2
+            fc, ct, so = (np.pad(a, (0, 1)) for a in (fc, ct, so))
+        if ss.size == 0:
+            ss = np.zeros(1, np.int32)
+        env.operands["first_code"] = fc
+        env.operands["count"] = ct
+        env.operands["sym_offset"] = so
+        env.operands["sym_sorted"] = ss
+        env.statics["chunk_size"] = int(env.meta["chunk_size"])
+        env.statics["n_symbols"] = int(env.meta["n_symbols"])
+
     def merge_static(self, name: str, values) -> int:
         return max(values)
 
@@ -317,6 +389,10 @@ class HuffmanEntropy(Stage):
     reads = ("keys",)
     writes = ("codes", "lens")
     operands = ("codes_t", "lens_t")
+    inv_reads = ("words", "chunk_offsets")
+    inv_writes = ("keys",)
+    inv_operands = ("first_code", "count", "sym_offset", "sym_sorted")
+    inv_statics = ("chunk_size", "n_symbols")
 
     def apply(self, env: TraceEnv, state: dict) -> dict:
         from repro.kernels.huffman_encode import ops as encode_ops
@@ -330,20 +406,26 @@ class HuffmanEntropy(Stage):
         return {"codes": codes, "lens": lens}
 
     def invert(self, env: TraceEnv, state: dict) -> dict:
-        # The packed stream is self-synchronising per chunk; the inverse is
-        # the chunk-parallel scan decoder over (words, chunk_offsets).
-        syms = huffman._decode_jit(
+        # The packed stream is self-synchronising per chunk: all chunks
+        # decode in parallel through the huffman_decode kernel registry
+        # (the decode mirror of the encode_lookup gather above).  max_len
+        # comes from the staged table width, so a stacked batch padded to
+        # its widest codebook specialises one shared trace.
+        from repro.kernels.huffman_decode import ops as decode_ops
+
+        first_code = env.operand("first_code")
+        syms = decode_ops.decode_chunks(
             state["words"],
             state["chunk_offsets"],
-            env.operand("first_code"),
+            first_code,
             env.operand("count"),
             env.operand("sym_offset"),
             env.operand("sym_sorted"),
             env.static("chunk_size"),
-            int(state["chunk_offsets"].shape[0]),
-            env.static("max_len"),
+            max(int(first_code.shape[0]) - 1, 1),
+            adapter=env.backend,
         )
-        return {"keys": syms.reshape(-1)}
+        return {"keys": syms.reshape(-1)[: env.static("n_symbols")]}
 
 
 class BitPack(Stage):
@@ -389,11 +471,11 @@ class BitPack(Stage):
             "total_bits": total_bits,
         }
 
-    def invert(self, env: TraceEnv, state: dict) -> dict:
-        # Variable-length codes cannot be unpacked independently of the
-        # codebook: the decode direction is fused into HuffmanEntropy.invert
-        # (self-synchronising chunked scan over the packed words).
-        return {}
+    # Variable-length codes cannot be unpacked independently of the
+    # codebook, so BitPack declares no inverse of its own: the decode
+    # direction is fused into HuffmanEntropy.invert (self-synchronising
+    # chunked scan over the packed words), and the inverse compiler treats
+    # this stage as an identity.
 
     def stage_meta(self, plan) -> dict:
         return {"chunk_size": self.chunk_size, "word_bits": bs.WORD_BITS}
@@ -414,11 +496,16 @@ class ZfpBlockTransform(Stage):
     name = "zfp_block_transform"
     reads = ("data",)
     writes = ("payload", "emax")
+    inv_reads = ("payload", "emax")
+    inv_writes = ("data",)
 
     def __init__(self, rate: int, dims: int, shape: tuple[int, ...]):
         self.rate = int(rate)
         self.dims = int(dims)
         self.shape = tuple(shape)
+
+    def planned(self, plan) -> None:
+        self._dtype = plan.spec.dtype
 
     def apply(self, env: TraceEnv, state: dict) -> dict:
         from .. import zfp
@@ -432,12 +519,11 @@ class ZfpBlockTransform(Stage):
     def invert(self, env: TraceEnv, state: dict) -> dict:
         from .. import zfp
 
-        return {
-            "data": zfp.decompress_jit(
-                state["payload"], state["emax"], rate=self.rate,
-                dims=self.dims, shape=self.shape, adapter=env.backend,
-            )
-        }
+        out = zfp.decompress_jit(
+            state["payload"], state["emax"], rate=self.rate,
+            dims=self.dims, shape=self.shape, adapter=env.backend,
+        )
+        return {"data": out.astype(jnp.dtype(self._dtype))}
 
     def stage_meta(self, plan) -> dict:
         return {"rate": self.rate, "dims": self.dims}

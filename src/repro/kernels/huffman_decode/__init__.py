@@ -1,0 +1,3 @@
+"""Chunk-parallel canonical-Huffman decode kernel (decode mirror of
+``kernels/huffman_encode``): every self-synchronising chunk of the packed
+word stream decodes independently from its recorded bit offset."""

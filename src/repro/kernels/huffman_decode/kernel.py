@@ -1,0 +1,99 @@
+"""Huffman decode kernel — Pallas TPU (chunk-parallel canonical scan).
+
+Per grid cell: one self-synchronising chunk decodes its ``chunk_size``
+symbols with a sequential ``fori_loop`` over the packed words staged in
+VMEM.  The canonical decode tables (first_code/count/sym_offset/sym_sorted)
+are replicated in VMEM exactly like the encode kernel's codebook — every
+table probe is an on-chip gather, the same shared-memory placement GPU
+Huffman decoders rely on.
+
+VMEM budget: the word stream is the compressed payload (≤ a few MiB for the
+per-shard leaves this decodes) and the tables are metadata-scale, so both
+stay resident; chunks are independent, so the grid parallelises freely.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(
+    off_ref, words_ref, fc_ref, ct_ref, so_ref, sym_ref, out_ref,
+    *, chunk_size: int, max_len: int,
+):
+    from repro.core import bitstream as bs
+
+    words = words_ref[...]
+    # traced iota, not jnp.arange: Pallas kernels cannot capture host consts
+    lens = jax.lax.iota(jnp.int32, max_len) + 1
+    fc = fc_ref[...][1:]
+    ct = ct_ref[...][1:]
+    so = so_ref[...][1:]
+    sym_sorted = sym_ref[...]
+
+    def body(i, cursor):
+        # bs.read_window is the shared bit-exact window primitive (also
+        # used by the jnp reference decoder) — one implementation, so the
+        # cross-backend bit-identity invariant cannot drift
+        window = bs.read_window(words, cursor)
+        cands = bs._safe_shr(jnp.broadcast_to(window, (max_len,)), 32 - lens)
+        rel = cands - fc
+        valid = (cands >= fc) & (rel < ct.astype(jnp.uint32))
+        li = jnp.argmax(valid)
+        l = lens[li]
+        sym = sym_sorted[so[li] + rel[li].astype(jnp.int32)]
+        out_ref[0, i] = sym
+        return cursor + l
+
+    jax.lax.fori_loop(0, chunk_size, body, off_ref[0].astype(jnp.int32))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk_size", "max_len", "interpret")
+)
+def decode_chunks(
+    words: jax.Array,
+    chunk_offsets: jax.Array,
+    first_code: jax.Array,
+    count: jax.Array,
+    sym_offset: jax.Array,
+    sym_sorted: jax.Array,
+    chunk_size: int,
+    max_len: int,
+    interpret: bool = True,
+) -> jax.Array:
+    n_chunks = chunk_offsets.shape[0]
+    w = words.shape[0]
+    t = first_code.shape[0]
+    s = max(1, sym_sorted.shape[0])
+    sym_sorted = sym_sorted.reshape(-1)
+    if sym_sorted.shape[0] == 0:  # empty alphabet: keep the gather well-formed
+        sym_sorted = jnp.zeros(1, jnp.int32)
+    return pl.pallas_call(
+        functools.partial(
+            _decode_kernel, chunk_size=chunk_size, max_len=max_len
+        ),
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((w,), lambda i: (0,)),  # stream replicated in VMEM
+            pl.BlockSpec((t,), lambda i: (0,)),  # canonical tables in VMEM
+            pl.BlockSpec((t,), lambda i: (0,)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk_size), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, chunk_size), jnp.int32),
+        interpret=interpret,
+    )(
+        chunk_offsets.astype(jnp.int32),
+        words.astype(jnp.uint32),
+        first_code.astype(jnp.uint32),
+        count.astype(jnp.int32),
+        sym_offset.astype(jnp.int32),
+        sym_sorted.astype(jnp.int32),
+    )

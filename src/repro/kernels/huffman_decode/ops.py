@@ -1,0 +1,54 @@
+"""Adapter-dispatched entry points for the huffman_decode kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import adapters
+
+from . import kernel, ref
+
+
+@adapters.register("huffman_decode_chunks", adapters.XLA)
+def _dec_xla(words, chunk_offsets, first_code, count, sym_offset, sym_sorted,
+             chunk_size, max_len):
+    return ref.decode_chunks(
+        words, chunk_offsets, first_code, count, sym_offset, sym_sorted,
+        chunk_size, max_len,
+    )
+
+
+@adapters.register("huffman_decode_chunks", adapters.PALLAS)
+def _dec_pallas(words, chunk_offsets, first_code, count, sym_offset,
+                sym_sorted, chunk_size, max_len):
+    return kernel.decode_chunks(
+        words, chunk_offsets, first_code, count, sym_offset, sym_sorted,
+        chunk_size, max_len, interpret=False,
+    )
+
+
+@adapters.register("huffman_decode_chunks", adapters.PALLAS_INTERPRET)
+def _dec_interp(words, chunk_offsets, first_code, count, sym_offset,
+                sym_sorted, chunk_size, max_len):
+    return kernel.decode_chunks(
+        words, chunk_offsets, first_code, count, sym_offset, sym_sorted,
+        chunk_size, max_len, interpret=True,
+    )
+
+
+def decode_chunks(
+    words: jax.Array,
+    chunk_offsets: jax.Array,
+    first_code: jax.Array,
+    count: jax.Array,
+    sym_offset: jax.Array,
+    sym_sorted: jax.Array,
+    chunk_size: int,
+    max_len: int,
+    adapter: str | None = None,
+) -> jax.Array:
+    """Chunk-parallel canonical-Huffman decode: int32[n_chunks, chunk_size]."""
+    return adapters.dispatch("huffman_decode_chunks", adapter)(
+        words, chunk_offsets, first_code, count, sym_offset, sym_sorted,
+        chunk_size, max_len,
+    )

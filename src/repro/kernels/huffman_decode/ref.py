@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the huffman_decode kernel ops.
+
+The packed stream is self-synchronising per fixed-size symbol chunk: the
+encoder's ``pack_stream`` records the bit offset of every chunk boundary
+(an exclusive prefix sum sampled every ``chunk_size`` symbols), so chunks
+decode in parallel — a ``vmap`` over chunk offsets with a sequential
+canonical-prefix scan inside.  This is the device mirror of the GPU
+decoders the paper compares against, and the exact implementation the
+historical host-orchestrated ``huffman.decode`` ran; both directions share
+it so the chunk-parallel and legacy paths can never drift apart.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitstream as bs
+
+
+def decode_chunks(
+    words: jax.Array,          # uint32[W] packed stream (MSB-first words)
+    chunk_offsets: jax.Array,  # int32[n_chunks] bit offset of each chunk
+    first_code: jax.Array,     # uint32[max_len+1] canonical table
+    count: jax.Array,          # int32[max_len+1]
+    sym_offset: jax.Array,     # int32[max_len+1] index into sym_sorted
+    sym_sorted: jax.Array,     # int32[num_used]
+    chunk_size: int,
+    max_len: int,
+) -> jax.Array:
+    """Decode every chunk in parallel; returns int32[n_chunks, chunk_size].
+
+    Each chunk runs the canonical-Huffman scan: read a 32-bit MSB-aligned
+    window at the cursor, find the shortest length ``l`` whose prefix is a
+    valid code (``first_code[l] <= window >> (32-l) < first_code[l] +
+    count[l]``), emit the symbol, advance the cursor by ``l``.  Reads past
+    ``total_bits`` return zero bits (see :func:`bs.read_window`); symbols
+    decoded there are padding the caller slices off.
+    """
+    lens = jnp.arange(1, max_len + 1, dtype=jnp.int32)
+    fc = first_code[1:]
+    ct = count[1:]
+    so = sym_offset[1:]
+
+    def step(cursor, _):
+        window = bs.read_window(words, cursor)
+        cands = bs._safe_shr(jnp.broadcast_to(window, (max_len,)), 32 - lens)
+        rel = cands - fc  # uint32; wraps when cands < fc, guarded below
+        valid = (cands >= fc) & (rel < ct.astype(jnp.uint32))
+        li = jnp.argmax(valid)  # first (shortest) valid length index
+        l = lens[li]
+        sym = sym_sorted[so[li] + rel[li].astype(jnp.int32)]
+        return cursor + l, sym
+
+    def chunk(off):
+        _, syms = jax.lax.scan(step, off, None, length=chunk_size)
+        return syms
+
+    return jax.vmap(chunk)(chunk_offsets.astype(jnp.int32))

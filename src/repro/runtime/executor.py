@@ -85,6 +85,7 @@ class DeviceExecutor:
         self._lock = threading.Lock()
         self.submitted = 0
         self.completed = 0
+        self.mesh_submitted = 0  # whole-mesh (device=MESH) tasks
 
     # ------------------------------------------------------------ submission
 
@@ -116,6 +117,8 @@ class DeviceExecutor:
             pool, dev = self._pool, (device if device is not None else self.next_device())
         with self._lock:
             self.submitted += 1
+            if device is MESH:
+                self.mesh_submitted += 1
         return Submission(pool.submit(self._run, dev, fn, args, kwargs), dev, lane)
 
     def _run(self, device: Any, fn: Callable, args: tuple, kwargs: dict) -> Any:
@@ -140,6 +143,7 @@ class DeviceExecutor:
                 "devices": len(self.devices),
                 "submitted": self.submitted,
                 "completed": self.completed,
+                "mesh_submitted": self.mesh_submitted,
             }
 
     def shutdown(self, wait: bool = True) -> None:
