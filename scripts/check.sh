@@ -2,7 +2,10 @@
 # Tier-1 verification gate (ROADMAP.md) — run this before every PR.
 # CI and humans must invoke the same command; add flags here, not in CI.
 #
-#   scripts/check.sh                run the tier-1 test suite
+#   scripts/check.sh                run the full tier-1 test suite
+#   scripts/check.sh fast           the iteration tier (<1 min): the
+#                                   conformance suite + core fast tests,
+#                                   skipping @slow and @subprocess tests
 #   scripts/check.sh bench          benchmark smoke mode: fig16 engine
 #                                   throughput on a 1×CPU mesh
 #                                   -> BENCH_engine.json
@@ -10,6 +13,10 @@
 #                                   decode) + host<->device transfer bytes
 #                                   per codec (smoke-sized)
 #                                   -> BENCH_stages.json
+#   scripts/check.sh bench pipeline chunk-pipeline overlap: pipelined vs
+#                                   serial wall clock, per-lane timings,
+#                                   bit-identity check
+#                                   -> BENCH_pipeline.json
 #   scripts/check.sh docs           execute every fenced ```python block in
 #                                   docs/*.md against the current API
 set -euo pipefail
@@ -20,12 +27,29 @@ if [[ "${1:-}" == "docs" ]]; then
     python scripts/check_docs.py "$@"
   exit 0
 fi
+if [[ "${1:-}" == "fast" ]]; then
+  shift
+  # the per-iteration gate: round-trip conformance + the quick unit tiers,
+  # with multi-device subprocess tests and slow model suites excluded
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q -m "not slow and not subprocess" \
+      tests/test_conformance.py tests/test_pipeline.py tests/test_bitstream.py \
+      tests/test_cmm.py tests/test_abstractions.py tests/test_api_portability.py \
+      "$@"
+  exit 0
+fi
 if [[ "${1:-}" == "bench" ]]; then
   shift
   if [[ "${1:-}" == "stages" ]]; then
     shift
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
       python -m benchmarks.stage_breakdown --smoke --out BENCH_stages.json "$@"
+    exit 0
+  fi
+  if [[ "${1:-}" == "pipeline" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+      python -m benchmarks.fig10_13_pipeline --smoke --out BENCH_pipeline.json "$@"
     exit 0
   fi
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

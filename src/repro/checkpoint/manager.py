@@ -19,7 +19,15 @@ checkpoint stream, so every shard is pushed through the HPDR pipeline:
     runs with (`jax.device_put` with the new NamedSharding), so pod counts
     can change between runs.
 
-Layout:  <dir>/step_<N>/manifest.json + <dir>/step_<N>/<leaf-path>.hpdr
+  * **aggregated I/O**: every leaf's container coalesces into ONE aligned
+    segment file per step (``leaves.hpdr``) written through
+    :class:`repro.runtime.io.AggregatedWriter` — large positional writes on
+    a dedicated flush thread, with a segment directory so restore
+    ``pread``s exactly the leaves it needs (old per-leaf-file checkpoints
+    still restore).
+
+Layout:  <dir>/step_<N>/manifest.json + <dir>/step_<N>/leaves.hpdr
+         (pre-aggregation checkpoints: <dir>/step_<N>/<leaf-path>.hpdr)
 """
 
 from __future__ import annotations
@@ -37,8 +45,10 @@ import numpy as np
 from ..core import api
 from ..core import engine as engine_mod
 from ..runtime.executor import IO, Submission
+from ..runtime.io import AggregatedReader, AggregatedWriter
 
 _SEP = "::"
+_AGGREGATE_FILE = "leaves.hpdr"
 
 
 @dataclass(frozen=True)
@@ -104,36 +114,45 @@ class CheckpointManager:
         flat = _flatten(tree)
         step_dir = self.dir / f"step_{step:08d}"
         step_dir.mkdir(parents=True, exist_ok=True)
-        manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+        manifest = {"step": step, "extra": extra or {},
+                    "aggregate": _AGGREGATE_FILE, "leaves": {}}
         raw_total, comp_total = 0, 0
         # Fan per-leaf compression out across the engine's data-axis devices
-        # (compute lane); bytes are written back in manifest order.
+        # (compute lane); blobs coalesce into ONE aggregated segment file —
+        # large aligned positional writes flushed on the writer's own flush
+        # thread, so leaf i+1's compression overlaps leaf i's disk write.
+        # Restore preads exactly the segments it needs via the directory.
         subs = [
             (key, arr, self.engine.submit(_compress_leaf, arr, self.policy))
             for key, arr in flat.items()
         ]
         used: set[str] = set()
-        for key, arr, sub in subs:
-            blob = sub.result()
-            # sanitize path separators (leaf names are not directories) and
-            # dedupe: distinct keys must never share a shard file — restore
-            # reads the key->file mapping from the manifest, so any
-            # injective name works
-            base = key.replace(_SEP, "__").replace("/", "_") or "_root"
-            fname, i = base, 2
-            while fname in used:
-                fname = f"{base}~{i}"
-                i += 1
-            used.add(fname)
-            (step_dir / f"{fname}.hpdr").write_bytes(blob)
-            manifest["leaves"][key] = {"file": f"{fname}.hpdr",
-                                       "bytes": len(blob), "raw": arr.nbytes}
-            raw_total += arr.nbytes
-            comp_total += len(blob)
+        with AggregatedWriter(
+            step_dir / _AGGREGATE_FILE, meta={"step": step}
+        ) as writer:
+            for key, arr, sub in subs:
+                blob = sub.result()
+                # sanitize separators and dedupe: distinct keys must never
+                # share a segment — restore reads the key->segment mapping
+                # from the manifest, so any injective name works
+                base = key.replace(_SEP, "__").replace("/", "_") or "_root"
+                name, i = base, 2
+                while name in used:
+                    name = f"{base}~{i}"
+                    i += 1
+                used.add(name)
+                writer.add(name, blob)
+                manifest["leaves"][key] = {"segment": name,
+                                           "bytes": len(blob),
+                                           "raw": arr.nbytes}
+                raw_total += arr.nbytes
+                comp_total += len(blob)
+        io_stats = dict(writer.stats)  # after close(): counts the final flush
         manifest["raw_bytes"] = raw_total
         manifest["compressed_bytes"] = comp_total
         manifest["ratio"] = raw_total / max(comp_total, 1)
         manifest["save_s"] = time.perf_counter() - t0
+        manifest["io"] = io_stats
         (step_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
         # commit marker: restore only sees completed checkpoints
         (step_dir / "COMMITTED").write_text("ok")
@@ -144,14 +163,24 @@ class CheckpointManager:
         """Snapshot to host, then compress+write on the engine's io lane.
 
         The returned :class:`Submission` resolves to the manifest; training
-        continues immediately after the snapshot.  A previous in-flight save
-        is waited on first (saves serialize, matching the io lane's width).
+        continues immediately after the snapshot.  A previous in-flight
+        save is *chained*, not waited on — the new save is submitted to the
+        io lane the moment the previous one completes, so the train loop's
+        bubble really is just the snapshot.  If the previous save failed,
+        its exception propagates from this submission's ``result()`` (the
+        chained save is skipped — a torn earlier checkpoint fails fast).
         """
         snapshot = jax.tree.map(np.asarray, tree)  # the only sync point
-        self.wait()
-        self._pending = self.engine.submit(
-            self.save, step, snapshot, extra, lane=IO
-        )
+        prev, self._pending = self._pending, None
+        if prev is None:
+            self._pending = self.engine.submit(
+                self.save, step, snapshot, extra, lane=IO
+            )
+        else:
+            self._pending = self.engine.executor.submit_after(
+                prev, lambda _prev_manifest: self.save(step, snapshot, extra),
+                lane=IO,
+            )
         return self._pending
 
     def wait(self) -> dict | None:
@@ -175,12 +204,16 @@ class CheckpointManager:
         step: int | None = None,
         target: Any | None = None,
         shardings: Any | None = None,
+        leaves: Any | None = None,
     ) -> tuple[Any, dict]:
         """Load a checkpoint; optionally reshard onto a (new) mesh.
 
         ``target`` supplies the pytree structure; ``shardings`` (same
         structure) re-places every leaf — elastic restarts pass the new
-        mesh's shardings here.
+        mesh's shardings here.  ``leaves`` (flat-mode only, ``target=None``)
+        selects a subset of leaf keys: on the aggregated layout only those
+        leaves' byte ranges are ``pread`` — a partial restore never touches
+        the rest of the file.
         """
         if step is None:
             step = self.latest_step()
@@ -188,10 +221,27 @@ class CheckpointManager:
                 raise FileNotFoundError(f"no committed checkpoints in {self.dir}")
         step_dir = self.dir / f"step_{step:08d}"
         manifest = json.loads((step_dir / "manifest.json").read_text())
-        flat = {}
-        for key, info in manifest["leaves"].items():
-            raw = (step_dir / info["file"]).read_bytes()
-            flat[key] = _decompress_leaf(raw)
+        if leaves is not None and target is not None:
+            raise ValueError("leaves= selects a subset; incompatible with target=")
+        wanted = None if leaves is None else set(leaves)
+        reader = (
+            AggregatedReader(step_dir / manifest["aggregate"])
+            if manifest.get("aggregate")
+            else None
+        )
+        try:
+            flat = {}
+            for key, info in manifest["leaves"].items():
+                if wanted is not None and key not in wanted:
+                    continue
+                if "segment" in info:
+                    raw = reader.read(info["segment"])
+                else:  # pre-aggregation layout: one file per leaf
+                    raw = (step_dir / info["file"]).read_bytes()
+                flat[key] = _decompress_leaf(raw)
+        finally:
+            if reader is not None:
+                reader.close()
         if target is None:
             return flat, manifest
         leaves_with_path = jax.tree_util.tree_flatten_with_path(target)

@@ -24,6 +24,7 @@ from . import (  # noqa: F401
 from .api import (  # noqa: F401
     Compressed,
     CompressorStream,
+    ContainerError,
     ReductionPlan,
     ReductionSpec,
     compress,

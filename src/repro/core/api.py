@@ -47,6 +47,7 @@ import dataclasses
 import io
 import json
 import math
+import threading
 from typing import Any, Callable, Sequence
 
 import jax
@@ -57,7 +58,7 @@ from . import adapters
 from . import pipeline as pl
 from .codecs import available_methods, get_codec
 from .codecs.base import Codec, ReductionPlan, ReductionSpec  # noqa: F401
-from .container import Compressed, _jsonable  # noqa: F401
+from .container import Compressed, ContainerError, _jsonable  # noqa: F401
 from .context import GLOBAL_CMM, ReductionContext
 from .stages.base import CallEnv, Stage, StageGraph, TransferStats  # noqa: F401
 
@@ -359,14 +360,27 @@ def decompress_pytree(
 
 
 class CompressorStream:
-    """Chunked streaming compression on the HDEM double-buffered pipeline.
+    """Chunked streaming compression on the lane-overlapped HDEM pipeline.
 
     Chunks share a spec whenever their shapes agree, so every chunk after
     the first hits the CMM plan cache — the chunk-pipelined analogue of the
-    paper's per-call context reuse.  ``to_bytes``/``from_bytes`` frame the
-    per-chunk containers with an offset index so chunks can be located (and
-    fetched lazily) independently.  Passing ``engine=`` schedules chunks
-    round-robin across the engine's ``data``-axis devices.
+    paper's per-call context reuse.  Each chunk runs as a *two-phase*
+    encode: the fused ``CompiledPipeline`` segments execute on the
+    executor's compute lane (phase 1, device-resident) while the previous
+    chunk's D2H fetch + container serialization runs on the io lane
+    (phase 2) and the next chunk stages H2D — the paper's Fig. 9 overlap,
+    bounded at ``window`` in-flight chunks.  Plans with persistent
+    workspace get one donated copy per window slot, recycled across the
+    chunks that reuse the slot, so concurrent chunk encodes never contend
+    on the plan's shared buffers.
+
+    ``to_bytes``/``from_bytes`` frame the per-chunk containers with an
+    offset index so chunks can be located (and fetched lazily)
+    independently; ``to_file``/``from_file`` add an aligned, aggregated
+    on-disk layout with a segment directory, so a reader ``pread``s
+    exactly the chunks it needs.  Passing ``engine=`` schedules chunks
+    round-robin across the engine's ``data``-axis devices and runs the
+    lanes on the engine's executor.
     """
 
     def __init__(
@@ -381,6 +395,8 @@ class CompressorStream:
         theta=None,
         engine: Any = None,
         backend: str | None = None,
+        window: int = 2,
+        frame: bool = False,
         **params: Any,
     ):
         self.method = method
@@ -388,8 +404,14 @@ class CompressorStream:
         if backend is None and engine is not None:
             backend = engine.backend
         self.backend = backend or adapters.AUTO
+        self.window = max(1, int(window))
+        # frame=True moves wire serialization (container v2 framing + crc32)
+        # onto the io lane too: each chunk's byte frame is produced while
+        # the next chunk computes, and to_bytes/to_file reuse it
+        self.frame = bool(frame)
+        self._slot_ws: dict[tuple, tuple] = {}
+        self._slot_lock = threading.Lock()
         self.pipeline = pl.ChunkedPipeline(
-            self._encode_chunk,
             mode=mode,
             c_init_elems=c_init_elems,
             c_fixed_elems=c_fixed_elems,
@@ -397,13 +419,82 @@ class CompressorStream:
             phi=phi,
             theta=theta,
             devices=engine.devices if engine is not None else None,
+            compute_fn=self._compute_chunk,
+            finish_fn=self._finish_chunk,
+            executor=engine.executor if engine is not None else None,
+            window=self.window,
         )
 
-    def _encode_chunk(self, chunk: jax.Array) -> Compressed:
-        return encode(
-            make_spec(chunk, self.method, backend=self.backend, **self.params),
-            chunk,
+    # -- two-phase chunk encode ---------------------------------------------
+
+    def _slot_workspace(self, plan: "ReductionPlan", slot: int) -> dict | None:
+        """One private workspace copy per (plan, window slot).
+
+        Donating segment executables invalidate their input buffers, so
+        concurrent in-flight chunks must not share the plan's single
+        workspace; the slot copy is donated into each dispatch and the
+        recycled buffer re-stored under the same slot (the stream analogue
+        of the engine's per-shard stacks).  Slots are reused serially —
+        chunk *i* and *i+window* share a slot, but the window bound
+        guarantees chunk *i* has fully finished first.
+        """
+        keys = {
+            k
+            for seg in plan.pipeline.device_segments
+            for k in seg.workspace_keys
+        }
+        if not keys:
+            return None
+        # the entry pins the plan alive, so the id() key can never be
+        # recycled onto a different plan while this stream exists
+        cache_key = (id(plan), slot)
+        with self._slot_lock:
+            entry = self._slot_ws.get(cache_key)
+            if entry is not None and entry[0] is plan:
+                self._slot_ws[cache_key] = self._slot_ws.pop(cache_key)  # LRU
+                return entry[1]
+        with plan.lock:
+            ws = {k: jnp.array(plan.workspace[k], copy=True) for k in keys}
+        with self._slot_lock:
+            # bounded: adaptive streams see a plan per chunk shape, and
+            # workspaces are input-sized — keep the few most recent plans'
+            # slots instead of pinning every plan the stream ever touched.
+            # Evicting an entry an in-flight chunk still holds is safe:
+            # the chunk owns its dict reference exclusively; a later chunk
+            # simply rebuilds a fresh copy.
+            while len(self._slot_ws) >= 4 * self.window:
+                self._slot_ws.pop(next(iter(self._slot_ws)))
+            self._slot_ws[cache_key] = (plan, ws)
+        return ws
+
+    def _compute_chunk(self, chunk: jax.Array, slot: int):
+        """Phase 1 (compute lane): fused device segments, state stays put."""
+        spec = make_spec(chunk, self.method, backend=self.backend, **self.params)
+        codec = get_codec(spec.method)
+        plan = get_plan(spec)
+        if plan.pipeline is None:  # codec without a stage graph: one phase
+            return ("container", codec.encode(plan, jnp.asarray(chunk)))
+        state, env = codec.encode_begin(
+            plan, chunk, workspace=self._slot_workspace(plan, slot)
         )
+        # block here, on the compute lane: serialization must only see
+        # finished device buffers, and lane timings must be honest
+        jax.block_until_ready([v for v in state.values()])
+        return ("state", codec, plan, state, env)
+
+    def _finish_chunk(self, payload, slot: int) -> Compressed:
+        """Phase 2 (io lane): exact-sized D2H fetch + container build."""
+        del slot
+        if payload[0] == "container":
+            c = payload[1]
+            for k, v in list(c.arrays.items()):
+                c.arrays[k] = np.asarray(v)
+        else:
+            _tag, codec, plan, state, env = payload
+            c = codec.encode_finish(plan, state, env)
+        if self.frame:
+            c._frame_bytes = c.to_bytes()
+        return c
 
     def compress(self, data: np.ndarray) -> pl.ChunkedResult:
         return self.pipeline.run(np.asarray(data))
@@ -415,8 +506,16 @@ class CompressorStream:
     # -- framed multi-chunk byte format -------------------------------------
 
     @staticmethod
+    def _chunk_blobs(result: pl.ChunkedResult) -> list[bytes]:
+        """Per-chunk wire frames (reusing io-lane frames from ``frame=True``)."""
+        return [
+            getattr(c, "_frame_bytes", None) or c.to_bytes()
+            for c in result.chunks
+        ]
+
+    @staticmethod
     def to_bytes(result: pl.ChunkedResult) -> bytes:
-        blobs = [c.to_bytes() for c in result.chunks]
+        blobs = CompressorStream._chunk_blobs(result)
         offsets = []
         off = 0
         for b in blobs:
@@ -453,21 +552,24 @@ class CompressorStream:
         """
         raw = bytes(raw)
         if len(raw) < 16 or raw[:4] != _STREAM_MAGIC:
-            raise ValueError("not an HPDR chunked stream")
+            raise ContainerError("not an HPDR chunked stream")
         version = int(np.frombuffer(raw[4:8], np.uint32)[0])
         if version != _STREAM_VERSION:
-            raise ValueError(f"unsupported HPDR stream version {version}")
+            raise ContainerError(f"unsupported HPDR stream version {version}")
         hlen = int(np.frombuffer(raw[8:16], np.uint64)[0])
         if len(raw) < 16 + hlen:
-            raise ValueError("truncated HPDR chunked stream")
-        header = json.loads(raw[16 : 16 + hlen].decode())
+            raise ContainerError("truncated HPDR chunked stream")
+        try:
+            header = json.loads(raw[16 : 16 + hlen].decode())
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise ContainerError(f"corrupt HPDR stream header: {e}") from e
         base = 16 + hlen
         ranges = []
         for entry in header["chunks"]:
             lo = base + entry["offset"]
             hi = lo + entry["nbytes"]
             if hi > len(raw):
-                raise ValueError("truncated HPDR chunked stream")
+                raise ContainerError("truncated HPDR chunked stream")
             ranges.append((lo, hi))
         chunks: Sequence = LazyChunks(raw, ranges)
         if not lazy:
@@ -477,6 +579,99 @@ class CompressorStream:
             boundaries=list(header["boundaries"]),
             axis=int(header["axis"]),
             shape=tuple(header["shape"]),
+        )
+
+    # -- aggregated on-disk layout (runtime/io segment directory) -----------
+
+    @staticmethod
+    def to_file(
+        result: pl.ChunkedResult,
+        path,
+        *,
+        align: int = 4096,
+        parallel: bool = True,
+    ) -> dict:
+        """Write a framed stream to ``path`` with aligned, aggregated I/O.
+
+        The layout is the ``to_bytes`` frame with every chunk placed at an
+        ``align``-rounded offset (the header JSON is space-padded so the
+        payload base is aligned too — JSON ignores trailing whitespace),
+        written through :class:`repro.runtime.io.AggregatedWriter`: chunks
+        coalesce into large positional writes flushed on a dedicated
+        thread, and a **segment directory** trailer records every chunk's
+        exact byte range + crc32.  Readers that predate the directory
+        still parse the file with :meth:`from_bytes` — the header's chunk
+        offsets point at the right places and the trailer is ignored.
+
+        Returns the directory dict (``segments``, ``meta``).
+        """
+        from ..runtime.io import AggregatedWriter, align_up
+
+        blobs = CompressorStream._chunk_blobs(result)
+        offsets = []
+        off = 0
+        for b in blobs:
+            offsets.append(off)
+            off = align_up(off + len(b), align)
+        header = {
+            "axis": result.axis,
+            "shape": list(result.shape),
+            "boundaries": list(result.boundaries),
+            "chunks": [
+                {"offset": o, "nbytes": len(b)} for o, b in zip(offsets, blobs)
+            ],
+            "align": align,
+        }
+        hbytes = json.dumps(header).encode()
+        # pad the header so the payload base (16 + len(hbytes)) is aligned:
+        # aligned relative offsets then stay aligned absolutely
+        pad = (-(16 + len(hbytes))) % align
+        hbytes += b" " * pad
+        meta = {k: header[k] for k in ("axis", "shape", "boundaries")}
+        with AggregatedWriter(
+            path, align=align, parallel=parallel, meta=meta
+        ) as writer:
+            writer.write_raw(_STREAM_MAGIC)
+            writer.write_raw(np.uint32(_STREAM_VERSION).tobytes())
+            writer.write_raw(np.uint64(len(hbytes)).tobytes())
+            writer.write_raw(hbytes)
+            for i, b in enumerate(blobs):
+                got = writer.add(f"chunk/{i:05d}", b)
+                assert got == 16 + len(hbytes) + offsets[i]
+            directory = writer.close()
+        return directory
+
+    @staticmethod
+    def from_file(path, lazy: bool = True) -> pl.ChunkedResult:
+        """Open a :meth:`to_file` stream; chunks ``pread`` lazily on access.
+
+        The segment directory locates every chunk, so restoring a prefix
+        (or one chunk) reads exactly those byte ranges — nothing else is
+        touched.  Files without a directory (e.g. raw :meth:`to_bytes`
+        dumps) fall back to an in-memory parse via :meth:`from_bytes`.
+        """
+        from ..runtime import io as rio
+
+        if not rio.has_directory(path):
+            with open(path, "rb") as f:
+                return CompressorStream.from_bytes(f.read(), lazy=lazy)
+        reader = rio.AggregatedReader(path)
+        # numeric sort: the zero-padded names widen past 5 digits on huge
+        # streams, where a lexicographic sort would reorder chunks
+        names = sorted(
+            (n for n in reader.names() if n.startswith("chunk/")),
+            key=lambda n: int(n.rsplit("/", 1)[1]),
+        )
+        chunks: Sequence = FileChunks(reader, names)
+        if not lazy:
+            chunks = list(chunks)
+            reader.close()
+        meta = reader.meta
+        return pl.ChunkedResult(
+            chunks=chunks,
+            boundaries=list(meta["boundaries"]),
+            axis=int(meta["axis"]),
+            shape=tuple(meta["shape"]),
         )
 
 
@@ -506,6 +701,41 @@ class LazyChunks(Sequence):
         if self._cache[i] is None:
             lo, hi = self._ranges[i]
             self._cache[i] = Compressed.from_bytes(self._raw[lo:hi])
+        return self._cache[i]
+
+    @property
+    def materialized(self) -> int:
+        return sum(c is not None for c in self._cache)
+
+
+class FileChunks(Sequence):
+    """Sequence of per-chunk containers backed by segment-file ``pread``s.
+
+    The file-resident sibling of :class:`LazyChunks`: nothing is read at
+    construction beyond the directory the caller already parsed; accessing
+    chunk *i* ``pread``s exactly that chunk's byte range (crc-checked) and
+    caches the parsed container.  ``materialized`` counts parsed chunks
+    and ``reader.preads`` counts actual positional reads — the observables
+    for "decode touches only what it needs" tests.
+    """
+
+    def __init__(self, reader, names: list[str]):
+        self.reader = reader
+        self._names = list(names)
+        self._cache: list[Compressed | None] = [None] * len(names)
+
+    def __len__(self) -> int:
+        return len(self._names)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[j] for j in range(*i.indices(len(self)))]
+        if i < 0:
+            i += len(self)
+        if not 0 <= i < len(self):
+            raise IndexError(i)
+        if self._cache[i] is None:
+            self._cache[i] = Compressed.from_bytes(self.reader.read(self._names[i]))
         return self._cache[i]
 
     @property

@@ -162,6 +162,50 @@ class Codec:
         """Build the persistent plan for ``spec`` (called once per CMM miss)."""
         raise NotImplementedError
 
+    def encode_input(self, plan: ReductionPlan, data: Any) -> dict[str, Any]:
+        """Initial pipeline state for ``data`` (the input-policy hook).
+
+        Codecs whose pipeline consumes a host-side reinterpretation of the
+        input (e.g. the huffman-bytes byte view) override this; everything
+        downstream — serial encode, the engine's stacked path via
+        ``leaf_policy``, and the chunk-pipelined stream — then feeds the
+        pipeline identical bytes.
+        """
+        return {"data": data}
+
+    def encode_begin(
+        self,
+        plan: ReductionPlan,
+        data: Any,
+        *,
+        env: Any = None,
+        profile: dict | None = None,
+        workspace: dict | None = None,
+    ) -> tuple[dict, Any]:
+        """Phase 1 of a two-phase encode: run the forward pipeline only.
+
+        Returns ``(state, env)`` with every array-scale product still
+        device-resident — nothing has been fetched for serialisation yet.
+        The chunk-pipelined scheduler runs this on the compute lane (with a
+        per-slot ``workspace``) while the *previous* chunk's
+        :meth:`encode_finish` runs on the io lane.
+        """
+        if plan.pipeline is None:
+            raise NotImplementedError(
+                f"codec {self.name!r} declares no stage graph; override "
+                "encode() or implement build_stages()"
+            )
+        return plan.pipeline.run(
+            self.encode_input(plan, data), env=env, profile=profile,
+            workspace=workspace,
+        )
+
+    def encode_finish(self, plan: ReductionPlan, state: dict, env: Any) -> Compressed:
+        """Phase 2: fetch the exact-sized sections and build the container."""
+        from ..stages.base import LeafView  # local: codecs ↔ stages layering
+
+        return self.finish_container(plan, env, LeafView(state, None, env))
+
     def encode(
         self,
         plan: ReductionPlan,
@@ -174,16 +218,11 @@ class Codec:
 
         ``env``/``profile`` are the observability hooks ``api.encode_profiled``
         threads through (per-stage wall timings, host↔device transfer bytes).
+        Exactly :meth:`encode_begin` followed by :meth:`encode_finish`, so
+        the pipelined two-phase path is bit-identical by construction.
         """
-        if plan.pipeline is None:
-            raise NotImplementedError(
-                f"codec {self.name!r} declares no stage graph; override "
-                "encode() or implement build_stages()"
-            )
-        state, env = plan.pipeline.run({"data": data}, env=env, profile=profile)
-        from ..stages.base import LeafView  # local: codecs ↔ stages layering
-
-        return self.finish_container(plan, env, LeafView(state, None, env))
+        state, env = self.encode_begin(plan, data, env=env, profile=profile)
+        return self.encode_finish(plan, state, env)
 
     def decode(
         self,
@@ -214,6 +253,17 @@ class Codec:
         self, plan: ReductionPlan, c: Compressed
     ) -> tuple[dict[str, Any], dict[str, Any]] | None:
         """``(inverse state0, env meta)`` for a container, or None."""
+        return None
+
+    def decode_bucket_key(self, c: Compressed) -> Any:
+        """Per-stream decode *geometry* beyond the decode spec (hashable).
+
+        Streams whose compiled-inverse statics differ — e.g. entropy
+        streams packed with different ``chunk_size`` — must not share one
+        stacked dispatch: merging their statics would decode garbage.  The
+        engine groups decode buckets by ``(decode spec, this key)``; the
+        default ``None`` groups purely by spec.
+        """
         return None
 
     def finish_decode(

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -30,17 +31,24 @@ import numpy as np
 from .. import bitstream as bs
 from .. import huffman
 from .. import stages as sg
-from ..container import Compressed
+from ..container import Compressed, ContainerError
 from . import register_codec
 from .base import Codec, ReductionPlan, ReductionSpec
 
-def entropy_tail_stages(num_bins: int | None = None) -> tuple:
-    """The shared entropy tail, with a plan-static alphabet when known."""
+def entropy_tail_stages(
+    num_bins: int | None = None, chunk_size: int = huffman.DEFAULT_CHUNK
+) -> tuple:
+    """The shared entropy tail, with a plan-static alphabet when known.
+
+    ``chunk_size`` sets the self-synchronisation granularity of the packed
+    stream (symbols per independently-decodable chunk) — smaller chunks
+    buy more decode parallelism for more ``chunk_offsets`` overhead.
+    """
     return (
         sg.HuffmanHistogram(num_bins),
-        sg.CodebookBuild(),
+        sg.CodebookBuild(chunk_size),
         sg.HuffmanEntropy(),
-        sg.BitPack(),
+        sg.BitPack(chunk_size),
     )
 
 
@@ -117,13 +125,24 @@ def entropy_decode_state(
     H2D of the compressed bytes, nothing else.  The env metadata carries
     what the decode-direction host prepares consume (length table, chunk
     geometry); old streams without the chunk index return None and decode
-    through the host path.
+    through the host path.  A *present but inconsistent* index is
+    corruption, not age: it raises :class:`ContainerError` instead of
+    silently decoding under the wrong chunk geometry.
     """
     idx = stream_decode_index(c)
     if idx is None:
         return None
-    if int(idx["n_chunks"]) != int(c.arrays["chunk_offsets"].shape[0]):
-        return None  # inconsistent index: fail safe onto the host path
+    expected = {
+        "n_chunks": int(c.arrays["chunk_offsets"].shape[0]),
+        "chunk_size": int(c.meta["chunk_size"]),
+        "n_symbols": int(c.meta["n_symbols"]),
+    }
+    for key, want in expected.items():
+        if key not in idx or int(idx[key]) != want:
+            raise ContainerError(
+                f"corrupt HPDR stream: decode_index {key}={idx.get(key)!r} "
+                f"disagrees with container metadata ({want})"
+            )
     state0 = {
         "words": np.asarray(c.arrays["words"], np.uint32),
         "chunk_offsets": np.asarray(c.arrays["chunk_offsets"], np.int32),
@@ -136,6 +155,17 @@ def entropy_decode_state(
         "total_bits": int(c.meta["total_bits"]),
     }
     return state0, meta
+
+
+def entropy_bucket_key(c: Compressed) -> tuple:
+    """Decode-geometry group key for entropy-tail streams.
+
+    Streams with differing ``chunk_size`` bake different statics into the
+    fused inverse executable, so the engine must not stack them into one
+    dispatch (the old behaviour merged statics by max and decoded the
+    smaller-chunk streams as garbage — ROADMAP mixed-chunk-size item).
+    """
+    return ("chunk_size", int(c.meta["chunk_size"]))
 
 
 def sections_to_encoded(c: Compressed) -> huffman.Encoded:
@@ -158,14 +188,34 @@ plan_decode_tables = huffman.plan_decode_tables
 
 @register_codec("huffman")
 class HuffmanCodec(Codec):
-    """Entropy coding of integer keys (alphabet sized per call)."""
+    """Entropy coding of integer keys (alphabet sized per call).
+
+    ``chunk_size`` is an encode-side spec parameter: the number of symbols
+    per independently-decodable packed chunk.  The default
+    (:data:`repro.core.huffman.DEFAULT_CHUNK`) is canonicalised *out* of
+    the spec key, so default encode specs and the (parameter-free) decode
+    spec keep sharing one CMM plan; a non-default chunk size gets its own
+    plan.  Decode always reads the geometry from the container, so one
+    decode plan serves streams of any chunk size (grouped per geometry on
+    the engine's stacked path).
+    """
 
     spec_defaults = {}
 
+    def make_spec(self, shape, dtype, **kwargs) -> ReductionSpec:
+        import dataclasses
+
+        chunk = int(kwargs.pop("chunk_size", huffman.DEFAULT_CHUNK))
+        spec = super().make_spec(shape, dtype, **kwargs)
+        if chunk != huffman.DEFAULT_CHUNK:
+            spec = dataclasses.replace(spec, params=(("chunk_size", chunk),))
+        return spec
+
     def build_stages(self, spec: ReductionSpec) -> sg.StageGraph:
+        chunk = int(spec.param("chunk_size", huffman.DEFAULT_CHUNK))
         return sg.StageGraph(
             stages=(sg.IntKeys(), sg.AlphabetScan(), sg.AlphabetBind())
-            + entropy_tail_stages(),
+            + entropy_tail_stages(chunk_size=chunk),
             finish_keys=("words", "chunk_offsets"),
             inv_inputs=ENTROPY_INV_INPUTS,
             inv_pads=ENTROPY_INV_PADS,
@@ -185,11 +235,11 @@ class HuffmanCodec(Codec):
         )
         return self._attach_pipeline(plan)
 
-    def encode(self, plan: ReductionPlan, data: jax.Array, **hooks) -> Compressed:
+    def encode_input(self, plan: ReductionPlan, data: Any) -> dict:
         data = jnp.asarray(data)
         if not jnp.issubdtype(data.dtype, jnp.integer):
             raise ValueError("huffman method expects integer keys; use huffman-bytes")
-        return super().encode(plan, data, **hooks)
+        return {"data": data}
 
     def finish_container(self, plan, env, view) -> Compressed:
         spec = plan.spec
@@ -200,6 +250,9 @@ class HuffmanCodec(Codec):
 
     def decode_state(self, plan: ReductionPlan, c: Compressed):
         return entropy_decode_state(plan, c)
+
+    def decode_bucket_key(self, c: Compressed) -> tuple:
+        return entropy_bucket_key(c)
 
     def decode(
         self, plan: ReductionPlan, c: Compressed, *,
@@ -245,19 +298,12 @@ class HuffmanBytesCodec(Codec):
         )
         return self._attach_pipeline(plan)
 
-    def encode(
-        self, plan: ReductionPlan, data: jax.Array, *,
-        env=None, profile: dict | None = None,
-    ) -> Compressed:
+    def encode_input(self, plan: ReductionPlan, data: Any) -> dict:
         # The byte view is a host reinterpretation (no copy for contiguous
         # input); the engine's stacked path arrives here pre-viewed by
-        # leaf_policy, so both shapes feed the pipeline identical bytes.
-        byte_view = np.ascontiguousarray(np.asarray(data)).view(np.uint8)
-        state, env = plan.pipeline.run({"data": byte_view}, env=env,
-                                       profile=profile)
-        return self.finish_container(
-            plan, env, sg.LeafView(state, None, env)
-        )
+        # leaf_policy, so every execution shape — serial, stacked, and the
+        # chunk-pipelined stream — feeds the pipeline identical bytes.
+        return {"data": np.ascontiguousarray(np.asarray(data)).view(np.uint8)}
 
     def finish_container(self, plan, env, view) -> Compressed:
         spec = plan.spec
@@ -266,6 +312,9 @@ class HuffmanBytesCodec(Codec):
             plan, env, view, self.name, spec.shape, spec.dtype,
             n_symbols=n_symbols,
         )
+
+    def decode_bucket_key(self, c: Compressed) -> tuple:
+        return entropy_bucket_key(c)
 
     def decode_state(self, plan: ReductionPlan, c: Compressed):
         # the device-side inverse byte view is a bitcast, only expressible

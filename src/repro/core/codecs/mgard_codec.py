@@ -37,6 +37,7 @@ from .base import Codec, ReductionPlan, ReductionSpec
 from .huffman_codec import (
     ENTROPY_INV_INPUTS,
     ENTROPY_INV_PADS,
+    entropy_bucket_key,
     entropy_container,
     entropy_decode_state,
     entropy_tail_stages,
@@ -147,6 +148,9 @@ class MGARDCodec(Codec):
             bins=np.asarray(env.meta["bins"], np.float64),
         )
         return c
+
+    def decode_bucket_key(self, c: Compressed) -> tuple:
+        return entropy_bucket_key(c)
 
     def decode_state(self, plan: ReductionPlan, c: Compressed):
         prepared = entropy_decode_state(plan, c)

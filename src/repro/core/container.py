@@ -23,8 +23,9 @@ silently corrupt tensors.
 
 v1 (the seed format: sorted sections, implicit offsets, no checksum) is
 still read transparently; ``to_bytes(version=1)`` can still write it for
-compatibility tests.  Unknown versions and truncated streams raise
-``ValueError`` — the version field is never ignored.
+compatibility tests.  Unknown versions, truncated streams, and checksum
+mismatches raise :class:`ContainerError` (a ``ValueError`` subclass) — the
+version field is never ignored, and corruption is never silently decoded.
 """
 
 from __future__ import annotations
@@ -41,6 +42,16 @@ import numpy as np
 MAGIC = b"HPDR"
 CONTAINER_VERSION = 2
 _HEADER_FIXED = 16  # magic + version + header-length words
+
+
+class ContainerError(ValueError):
+    """A malformed, truncated, or corrupt HPDR byte stream.
+
+    Raised by every container/stream parser in the framework — a reader can
+    catch this one type to handle any torn write, bit flip, or version
+    mismatch.  Subclasses :class:`ValueError` so callers of the historical
+    API keep working.
+    """
 
 
 def _jsonable(d: dict) -> dict:
@@ -131,23 +142,23 @@ class Compressed:
     def from_bytes(cls, raw: bytes) -> "Compressed":
         raw = bytes(raw)
         if len(raw) < _HEADER_FIXED:
-            raise ValueError(
+            raise ContainerError(
                 f"truncated HPDR stream: {len(raw)} bytes < {_HEADER_FIXED}-byte header"
             )
         if raw[:4] != MAGIC:
-            raise ValueError("not an HPDR stream")
+            raise ContainerError("not an HPDR stream")
         version = int(np.frombuffer(raw[4:8], np.uint32)[0])
         if version not in (1, 2):
-            raise ValueError(
+            raise ContainerError(
                 f"unsupported HPDR container version {version} (supported: 1, 2)"
             )
         hlen = int(np.frombuffer(raw[8:16], np.uint64)[0])
         if len(raw) < _HEADER_FIXED + hlen:
-            raise ValueError("truncated HPDR stream: incomplete header")
+            raise ContainerError("truncated HPDR stream: incomplete header")
         try:
             header = json.loads(raw[_HEADER_FIXED : _HEADER_FIXED + hlen].decode())
         except (UnicodeDecodeError, json.JSONDecodeError) as e:
-            raise ValueError(f"corrupt HPDR header: {e}") from e
+            raise ContainerError(f"corrupt HPDR header: {e}") from e
         if version == 1:
             return cls._from_bytes_v1(raw, header, _HEADER_FIXED + hlen)
         return cls._from_bytes_v2(raw, header, _HEADER_FIXED + hlen)
@@ -161,7 +172,7 @@ class Compressed:
             count = math.prod(spec["shape"]) if spec["shape"] else 1
             nb = count * dt.itemsize
             if off + nb > len(raw):
-                raise ValueError(
+                raise ContainerError(
                     f"truncated HPDR stream: section {n!r} needs {nb} bytes "
                     f"at offset {off}, stream has {len(raw)}"
                 )
@@ -173,14 +184,14 @@ class Compressed:
     def _from_bytes_v2(cls, raw: bytes, header: dict, base: int) -> "Compressed":
         pbytes = header["payload_bytes"]
         if base + pbytes > len(raw):
-            raise ValueError(
+            raise ContainerError(
                 f"truncated HPDR stream: payload needs {pbytes} bytes, "
                 f"stream has {len(raw) - base} after header"
             )
         payload = raw[base : base + pbytes]
         crc = zlib.crc32(payload) & 0xFFFFFFFF
         if crc != header["crc32"]:
-            raise ValueError(
+            raise ContainerError(
                 f"corrupt HPDR payload: crc32 {crc:#010x} != recorded "
                 f"{header['crc32']:#010x}"
             )
@@ -189,6 +200,6 @@ class Compressed:
             dt = np.dtype(spec["dtype"])
             lo, hi = spec["offset"], spec["offset"] + spec["nbytes"]
             if hi > pbytes:
-                raise ValueError(f"corrupt HPDR stream: section {n!r} out of bounds")
+                raise ContainerError(f"corrupt HPDR stream: section {n!r} out of bounds")
             arrays[n] = np.frombuffer(payload[lo:hi], dt).reshape(spec["shape"])
         return cls(method=header["method"], meta=header["meta"], arrays=arrays)

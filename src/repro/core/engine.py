@@ -268,28 +268,33 @@ class ExecutionEngine:
         metadata-scale decode operands, never a raw-array-sized transfer).
         Streams without a decode chunk index, singleton buckets, and
         codecs without a compiled inverse fall back to per-leaf futures.
+        Buckets group by ``(decode spec, decode geometry)`` — the codec's
+        :meth:`~repro.core.codecs.base.Codec.decode_bucket_key` — so
+        same-shaped streams whose compiled-inverse statics differ (e.g.
+        entropy streams packed with different ``chunk_size``) never share
+        one stacked dispatch.
         """
         import dataclasses as _dc
 
         from . import api
 
-        buckets: dict[ReductionSpec, list] = {}
+        buckets: dict[tuple, list] = {}
         for key, val in comp.items():
             if not isinstance(val, Compressed):
                 continue
-            spec = _dc.replace(
-                get_codec(val.method).decode_spec(val), backend=self.backend
-            )
+            codec = get_codec(val.method)
+            spec = _dc.replace(codec.decode_spec(val), backend=self.backend)
             # per-leaf context resolution, mirroring the encode direction:
             # the first leaf of a bucket builds the decode plan (CMM miss),
             # every further leaf is a real hit
             api.get_plan(spec)
-            buckets.setdefault(spec, []).append((key, val))
+            group = (spec, codec.decode_bucket_key(val))
+            buckets.setdefault(group, []).append((key, val))
 
         results: dict[str, Any] = {}
         pending: list[tuple[str, Submission]] = []
         stacked: list[tuple[list, Submission]] = []
-        for spec, items in buckets.items():
+        for (spec, _geo), items in buckets.items():
             codec = get_codec(spec.method)
             plan = api.get_plan(spec)
             prepared = None

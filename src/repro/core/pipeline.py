@@ -19,13 +19,18 @@ Two execution surfaces:
     task DAG with per-resource issue order (CUDA-stream semantics).  This is
     how Fig. 10/13 overlap numbers are derived on hardware we don't have:
     durations come from measured/modeled Φ and link bandwidths.
-  * :class:`ChunkedPipeline` — real chunked execution through JAX async
-    dispatch with double-buffered ``device_put``/compute/fetch, used by the
-    benchmarks and the compressed-checkpoint writer.
+  * :class:`ChunkedPipeline` — real chunked execution: a double-buffered,
+    lane-overlapped scheduler that drives each chunk through the fused
+    ``CompiledPipeline`` segments on the executor's compute lane while the
+    previous chunk's D2H + serialization runs on the io lane and the next
+    chunk's H2D staging runs on the main thread, bounded at ``window``
+    in-flight chunks.  Used by ``api.CompressorStream``, the benchmarks,
+    and the compressed-checkpoint writer.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
@@ -242,16 +247,28 @@ def simulate_pipeline(
 
 
 # ---------------------------------------------------------------------------
-# Real chunked execution (double-buffered async dispatch)
+# Real chunked execution (lane-overlapped, double-buffered scheduler)
 # ---------------------------------------------------------------------------
 
 
 @dataclass
 class ChunkTiming:
+    """Per-chunk lane timings.
+
+    ``spans`` holds the ``(start, end)`` interval of each lane's work for
+    this chunk, in seconds relative to the run start — the observable the
+    overlap benchmark and the scheduling tests read.  ``h2d``/``compute``/
+    ``serialize`` are the corresponding durations; ``d2h`` mirrors
+    ``serialize`` (the D2H fetch happens inside serialization) for
+    backward compatibility with pre-pipelined readers.
+    """
+
     h2d: float
     compute: float
     d2h: float
     nbytes: int
+    serialize: float = 0.0
+    spans: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -262,6 +279,7 @@ class ChunkedResult:
     shape: tuple[int, ...]
     timings: list[ChunkTiming] = field(default_factory=list)
     wall_time: float = 0.0
+    max_in_flight: int = 0       # peak staged-but-unserialized chunks
 
     def nbytes(self) -> int:
         return sum(c.nbytes() for c in self.chunks)
@@ -276,21 +294,53 @@ class ChunkedResult:
         ).itemsize
         return orig / max(self.nbytes(), 1)
 
+    def lane_seconds(self) -> dict[str, float]:
+        """Summed per-lane busy time across chunks (the serial-sum bound)."""
+        out = {"h2d": 0.0, "compute": 0.0, "serialize": 0.0}
+        for t in self.timings:
+            out["h2d"] += t.h2d
+            out["compute"] += t.compute
+            out["serialize"] += t.serialize
+        return out
+
+    def overlap_efficiency(self) -> float:
+        """Serial sum of lane times / pipelined wall clock (>1 = overlap)."""
+        total = sum(self.lane_seconds().values())
+        return total / self.wall_time if self.wall_time else 1.0
+
 
 class ChunkedPipeline:
-    """Double-buffered chunked compression over the largest dimension.
+    """Lane-overlapped chunked compression over the largest dimension.
 
-    JAX adaptation of the paper's queue machinery: ``device_put`` is the H2D
-    DMA (async), the jitted reduction is the compute engine, and host fetch
-    (``np.asarray``) is the D2H DMA.  Issue order follows Fig. 9: put chunk
-    i+1 before computing chunk i; fetch chunk i−1 after issuing compute i —
-    on a real TPU runtime all three overlap; buffer reuse is bounded at two
-    in-flight device chunks, matching the (X+2)%3 anti-dependency.
+    The JAX adaptation of the paper's Fig. 9 queue machinery, rebuilt on
+    the execution engine's submission surface (PR 5): every chunk flows
+    through three lanes —
+
+      main thread   slice + ``device_put`` staging (the H2D DMA)
+      compute lane  the fused ``CompiledPipeline`` segments (R_i)
+      io lane       D2H fetch + container serialization (O_i, S_i)
+
+    — with per-chunk :class:`~repro.runtime.executor.Submission` futures
+    chaining compute → serialize, so chunk *i*'s compute runs while chunk
+    *i−1* serializes and chunk *i+1* stages.  The in-flight window is
+    bounded at ``window`` chunks (default 2, the paper's two-buffer
+    (X+2)%3 anti-dependency): staging chunk *i* waits for chunk
+    *i−window*'s serialization, which also bounds host+device memory.
+
+    Two-phase codecs pass ``compute_fn(dev_chunk, slot)`` (must block until
+    the device work is done — honest lane timings and real overlap
+    boundaries depend on it) and ``finish_fn(payload, slot)``; the legacy
+    single-phase ``compress_fn`` is still accepted and wrapped.  ``slot``
+    is the chunk's window slot (``idx % window``) — callers keyed per-slot
+    resources (donated workspaces) off it.
+
+    ``window=1`` degrades to the fully serial schedule — the baseline the
+    overlap benchmark and the bit-identity tests compare against.
     """
 
     def __init__(
         self,
-        compress_fn: Callable,   # (jax.Array chunk) -> Compressed-like
+        compress_fn: Callable | None = None,   # (jax.Array chunk) -> Compressed
         mode: str = "adaptive",
         c_init_elems: int = 1 << 20,
         c_fixed_elems: int = 8 << 20,
@@ -298,8 +348,17 @@ class ChunkedPipeline:
         phi: chunk_model.PhiModel | None = None,
         theta: chunk_model.ThetaModel | None = None,
         devices: Sequence | None = None,
+        *,
+        compute_fn: Callable | None = None,
+        finish_fn: Callable | None = None,
+        executor=None,
+        window: int = 2,
     ):
+        if compress_fn is None and compute_fn is None:
+            raise ValueError("need compress_fn or compute_fn/finish_fn")
         self.compress_fn = compress_fn
+        self.compute_fn = compute_fn
+        self.finish_fn = finish_fn
         self.mode = mode
         self.c_init = c_init_elems
         self.c_fixed = c_fixed_elems
@@ -309,6 +368,8 @@ class ChunkedPipeline:
         # Chunk placement ring: chunk i lands on devices[i % n] (the engine's
         # data-axis fan-out); default is the single-device HDEM schedule.
         self.devices = list(devices) if devices else None
+        self.executor = executor
+        self.window = max(1, int(window))
 
     def _schedule(self, total: int) -> list[int]:
         if self.mode == "none":
@@ -319,15 +380,14 @@ class ChunkedPipeline:
             total, self.c_init, self.c_limit, self.phi, self.theta
         )
 
-    def run(self, data: np.ndarray) -> ChunkedResult:
-        axis = int(np.argmax(data.shape))  # paper: LargestDim(u)
+    # -- chunk schedule ------------------------------------------------------
+
+    def _row_schedule(self, data: np.ndarray, axis: int) -> list[int]:
         n = data.shape[axis]
         row_elems = data.size // n
-        sizes_elems = self._schedule(data.size)
-        # convert element counts to row counts along the split axis
         rows: list[int] = []
         acc = 0
-        for s in sizes_elems:
+        for s in self._schedule(data.size):
             r = max(1, int(round(s / row_elems)))
             r = min(r, n - acc)
             if r <= 0:
@@ -336,65 +396,130 @@ class ChunkedPipeline:
             acc += r
         if acc < n:
             rows.append(n - acc)
+        return rows
 
-        boundaries, chunks, timings = [], [], []
-        start = 0
-        t_wall = time.perf_counter()
+    # -- phase wrappers ------------------------------------------------------
+
+    def _legacy_compute(self, chunk, slot: int):
+        del slot
+        comp = self.compress_fn(chunk)
+        jax.block_until_ready(
+            [a for a in getattr(comp, "arrays", {}).values()] or chunk
+        )
+        return comp
+
+    @staticmethod
+    def _legacy_finish(comp, slot: int):
+        del slot
+        # D2H: materialize the compressed payload on host
+        for k, v in list(getattr(comp, "arrays", {}).items()):
+            comp.arrays[k] = np.asarray(v)
+        return comp
+
+    # -- the scheduler -------------------------------------------------------
+
+    def run(self, data: np.ndarray) -> ChunkedResult:
+        from ..runtime import executor as ex_mod  # runtime import: peer layer
+
+        data = np.asarray(data)
+        axis = int(np.argmax(data.shape))  # paper: LargestDim(u)
+        rows = self._row_schedule(data, axis)
         ring = self.devices or [jax.devices()[0]]
-        pending_put = None
-        pending_rows = None
+        compute_fn = self.compute_fn or self._legacy_compute
+        finish_fn = self.finish_fn or self._legacy_finish
 
-        idx = 0
-        while idx < len(rows):
-            r = rows[idx]
-            sl = [slice(None)] * data.ndim
-            sl[axis] = slice(start, start + r)
-            host_chunk = np.ascontiguousarray(data[tuple(sl)])
-
-            t0 = time.perf_counter()
-            if pending_put is None:
-                dev_chunk = jax.device_put(host_chunk, ring[idx % len(ring)])
-            else:
-                dev_chunk = pending_put
-                host_chunk = pending_rows
-            # issue H2D for the NEXT chunk before computing this one (Fig. 9);
-            # the ring rotates chunks across the engine's data-axis devices
-            nxt = idx + 1
-            if nxt < len(rows):
-                sl2 = [slice(None)] * data.ndim
-                sl2[axis] = slice(start + r, start + r + rows[nxt])
-                nxt_host = np.ascontiguousarray(data[tuple(sl2)])
-                pending_put = jax.device_put(nxt_host, ring[nxt % len(ring)])
-                pending_rows = nxt_host
-            else:
-                pending_put = None
-            t1 = time.perf_counter()
-            comp = self.compress_fn(dev_chunk)
-            jax.block_until_ready(
-                [a for a in getattr(comp, "arrays", {}).values()] or dev_chunk
+        ex = self.executor
+        transient = ex is None
+        if transient:
+            # one compute worker per ring device — the HDEM restriction
+            # (§V-B: one reduction kernel at a time per device); chunk
+            # computes overlap the io lane and the main-thread staging,
+            # never each other on one device
+            ex = ex_mod.DeviceExecutor(
+                ring, max_workers=len(ring), io_workers=1
             )
-            t2 = time.perf_counter()
-            # D2H: materialize compressed payload on host
-            for k, v in list(getattr(comp, "arrays", {}).items()):
-                comp.arrays[k] = np.asarray(v)
-            t3 = time.perf_counter()
 
-            boundaries.append(start)
-            chunks.append(comp)
-            timings.append(
-                ChunkTiming(h2d=t1 - t0, compute=t2 - t1, d2h=t3 - t2,
-                            nbytes=host_chunk.nbytes)
-            )
-            start += r
-            idx += 1
+        t_wall = time.perf_counter()
+        now = lambda: time.perf_counter() - t_wall
+        lock = threading.Lock()
+        state = {"inflight": 0, "max": 0}
+        records: list[dict] = [
+            {"nbytes": 0, "spans": {}} for _ in rows
+        ]
 
+        def compute_task(idx: int, dev_chunk):
+            rec = records[idx]
+            t0 = now()
+            payload = compute_fn(dev_chunk, idx % self.window)
+            rec["spans"]["compute"] = (t0, now())
+            return payload
+
+        def serialize_task(idx: int, comp_sub):
+            # Cross-lane wait: the io thread blocks on this chunk's compute
+            # future (a different pool, so no deadlock).  Serialize tasks
+            # are submitted in staging order, which pins the S-engine issue
+            # order of Fig. 9 — S_i never reorders behind S_{i+1} even when
+            # compute completions race.
+            payload = comp_sub.result()
+            rec = records[idx]
+            t0 = now()
+            comp = finish_fn(payload, idx % self.window)
+            rec["spans"]["serialize"] = (t0, now())
+            with lock:
+                state["inflight"] -= 1
+            return comp
+
+        boundaries: list[int] = []
+        subs: list = []
+        start = 0
+        try:
+            for idx, r in enumerate(rows):
+                if idx >= self.window:
+                    # bounded in-flight window: the (X+window)%(window+1)
+                    # anti-dependency — stage chunk i only once chunk
+                    # i−window has fully left the pipeline
+                    subs[idx - self.window].result()
+                sl = [slice(None)] * data.ndim
+                sl[axis] = slice(start, start + r)
+                host_chunk = np.ascontiguousarray(data[tuple(sl)])
+                with lock:
+                    state["inflight"] += 1
+                    state["max"] = max(state["max"], state["inflight"])
+                rec = records[idx]
+                rec["nbytes"] = host_chunk.nbytes
+                dev = ring[idx % len(ring)]
+                t0 = now()
+                dev_chunk = jax.device_put(host_chunk, dev)
+                rec["spans"]["h2d"] = (t0, now())
+                comp_sub = ex.submit(
+                    compute_task, idx, dev_chunk, device=dev
+                )
+                subs.append(ex.submit(
+                    serialize_task, idx, comp_sub, lane=ex_mod.IO
+                ))
+                boundaries.append(start)
+                start += r
+            chunks = [s.result() for s in subs]
+        finally:
+            if transient:
+                ex.shutdown()
+
+        timings = []
+        for rec in records:
+            sp = rec["spans"]
+            dur = lambda k: sp[k][1] - sp[k][0] if k in sp else 0.0
+            timings.append(ChunkTiming(
+                h2d=dur("h2d"), compute=dur("compute"), d2h=dur("serialize"),
+                serialize=dur("serialize"), nbytes=rec["nbytes"], spans=sp,
+            ))
         return ChunkedResult(
             chunks=chunks,
             boundaries=boundaries,
             axis=axis,
             shape=tuple(data.shape),
             timings=timings,
-            wall_time=time.perf_counter() - t_wall,
+            wall_time=now(),
+            max_in_flight=state["max"],
         )
 
 

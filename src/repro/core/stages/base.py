@@ -515,6 +515,7 @@ class CompiledPipeline:
         state0: dict[str, Any],
         env: CallEnv | None = None,
         profile: dict[str, float] | None = None,
+        workspace: dict[str, Any] | None = None,
     ) -> tuple[dict[str, Any], CallEnv]:
         """Execute the encode direction for one leaf.
 
@@ -522,6 +523,13 @@ class CompiledPipeline:
         exactly their declared keys (counted in ``env.transfers``).  When
         ``profile`` is given, per-stage wall times accumulate into it keyed
         by stage name (device results are blocked on for honest timings).
+
+        ``workspace`` overrides the plan's shared workspace buffers with a
+        caller-owned dict — the chunk-pipelined scheduler passes one such
+        dict per in-flight slot, so concurrent chunk encodes on one plan
+        neither contend on ``plan.lock`` nor donate each other's buffers;
+        donated-and-returned buffers are recycled back into the caller's
+        dict (the per-slot analogue of ``ReductionPlan.recycle``).
         """
         plan = self.plan
         env = env or CallEnv(plan)
@@ -536,7 +544,16 @@ class CompiledPipeline:
                 )
                 exe = self.segment_exe(step, env.statics, batched=False)
                 state_vals = tuple(state[k] for k in step.in_keys)
-                if step.workspace_keys:
+                if step.workspace_keys and workspace is not None:
+                    # caller-owned slot workspace: no plan.lock needed —
+                    # the slot is exclusively ours for this run
+                    ws_vals = tuple(
+                        workspace[k] for k in step.workspace_keys
+                    )
+                    outs, ws_out = exe(state_vals, operand_vals, ws_vals)
+                    for k, buf in zip(step.workspace_keys, ws_out):
+                        workspace[k] = buf
+                elif step.workspace_keys:
                     # Read the workspace inside the lock: a concurrent
                     # donating dispatch invalidates and replaces these
                     # buffers under the same lock, so a reference captured

@@ -371,6 +371,15 @@ class CodebookBuild(Stage):
         env.statics["n_symbols"] = int(env.meta["n_symbols"])
 
     def merge_static(self, name: str, values) -> int:
+        # chunk_size is decode *geometry*: a stream packed with 1 KiB
+        # chunks decodes garbage under a 4 KiB grid, so it must agree
+        # across a stacked batch (the engine groups decode buckets by
+        # chunk geometry — see Codec.decode_bucket_key — and the strict
+        # base merge is the backstop).  n_symbols may safely pad to the
+        # widest leaf: each chunk's decoded tail past its own symbol
+        # count is sliced off per leaf.
+        if name == "chunk_size":
+            return super().merge_static(name, values)
         return max(values)
 
     def stage_meta(self, plan) -> dict:

@@ -121,6 +121,54 @@ class DeviceExecutor:
                 self.mesh_submitted += 1
         return Submission(pool.submit(self._run, dev, fn, args, kwargs), dev, lane)
 
+    def submit_after(
+        self,
+        sub: Submission,
+        fn: Callable,
+        /,
+        *args: Any,
+        device: Any = None,
+        lane: str = COMPUTE,
+        **kwargs: Any,
+    ) -> Submission:
+        """Schedule ``fn(sub.result(), *args, **kwargs)`` once ``sub`` resolves.
+
+        The continuation is *submitted* only when the upstream future
+        completes, so it never occupies a pool thread while waiting — the
+        chunk-pipelined scheduler chains each chunk's io-lane serialization
+        off its compute-lane future this way without ever blocking the
+        single io thread on device work.  Upstream failures propagate to
+        the returned :class:`Submission` without running ``fn``.
+        """
+        out: Future = Future()
+
+        def _copy(src: Future) -> None:
+            exc = src.exception()
+            if exc is not None:
+                out.set_exception(exc)
+            else:
+                out.set_result(src.result())
+
+        def _chain(upstream: Future) -> None:
+            exc = upstream.exception()
+            if exc is not None:
+                out.set_exception(exc)
+                return
+            try:
+                inner = self.submit(
+                    fn, upstream.result(), *args,
+                    device=device, lane=lane, **kwargs
+                )
+            except BaseException as e:  # e.g. pool already shut down —
+                # done-callbacks swallow exceptions, so surface it on the
+                # returned Submission instead of hanging its waiters
+                out.set_exception(e)
+                return
+            inner._future.add_done_callback(_copy)
+
+        sub._future.add_done_callback(_chain)
+        return Submission(out, device, lane)
+
     def _run(self, device: Any, fn: Callable, args: tuple, kwargs: dict) -> Any:
         try:
             if device is None:

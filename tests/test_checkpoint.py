@@ -78,3 +78,81 @@ def test_elastic_reshard_restore(tmp_path, rng):
     out, _ = mgr.restore(1, target=tree, shardings=sh)
     assert out["w"].sharding == sh["w"]
     np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# aggregated parallel-I/O layout (PR 5)
+# ---------------------------------------------------------------------------
+
+
+def test_save_writes_one_aggregated_segment_file(tmp_path, rng):
+    """All leaves coalesce into one aligned segment file; the manifest maps
+    keys to segments and records the writer's I/O stats."""
+    from repro.runtime.io import AggregatedReader
+
+    mgr = CheckpointManager(tmp_path, CheckpointPolicy(exact=True))
+    tree = _tree(rng)
+    manifest = mgr.save(1, tree)
+    step_dir = tmp_path / "step_00000001"
+    hpdr_files = [p.name for p in step_dir.glob("*.hpdr")]
+    assert hpdr_files == ["leaves.hpdr"]          # ONE file, not one per leaf
+    assert manifest["io"]["segments"] == len(manifest["leaves"])
+    # coalescing: far fewer pwrites than segments (everything fits one buffer)
+    assert manifest["io"]["writes"] < manifest["io"]["segments"]
+    with AggregatedReader(step_dir / "leaves.hpdr") as r:
+        for key, info in manifest["leaves"].items():
+            assert info["segment"] in r.segments
+            assert len(r.read(info["segment"])) == info["bytes"]
+
+
+def test_partial_restore_preads_only_selected_leaves(tmp_path, rng):
+    """restore(leaves=...) touches exactly the selected byte ranges."""
+    mgr = CheckpointManager(tmp_path, CheckpointPolicy(exact=True))
+    tree = _tree(rng)
+    mgr.save(2, tree)
+    flat, _ = mgr.restore(2, leaves={"w", "step"})
+    assert set(flat) == {"w", "step"}
+    np.testing.assert_array_equal(flat["w"], tree["w"])
+    np.testing.assert_array_equal(flat["step"], tree["step"])
+
+
+def test_restore_reads_pre_aggregation_layout(tmp_path, rng):
+    """Checkpoints written before the aggregated writer (per-leaf files,
+    no "aggregate" manifest key) still restore."""
+    import json
+
+    from repro.core import api as _api
+
+    step_dir = tmp_path / "step_00000004"
+    step_dir.mkdir(parents=True)
+    arr = rng.normal(size=(8, 8)).astype(np.float32)
+    blob = _api.compress_leaf(arr, "huffman-bytes").to_bytes()
+    (step_dir / "w.hpdr").write_bytes(blob)
+    manifest = {"step": 4, "extra": {}, "leaves":
+                {"w": {"file": "w.hpdr", "bytes": len(blob), "raw": arr.nbytes}}}
+    (step_dir / "manifest.json").write_text(json.dumps(manifest))
+    (step_dir / "COMMITTED").write_text("ok")
+    mgr = CheckpointManager(tmp_path)
+    flat, _ = mgr.restore(4)
+    np.testing.assert_array_equal(flat["w"], arr)
+
+
+def test_queued_async_saves_chain_without_blocking(tmp_path, rng):
+    """Back-to-back save_async calls return immediately; the second save
+    chains on the first (io-lane order) and both commit."""
+    import time as _t
+
+    mgr = CheckpointManager(tmp_path, CheckpointPolicy(exact=True))
+    tree = _tree(rng)
+    t0 = _t.perf_counter()
+    first = mgr.save_async(10, tree)
+    second = mgr.save_async(11, tree)   # must not block on the first
+    submit_s = _t.perf_counter() - t0
+    manifest = mgr.wait()
+    assert manifest["step"] == 11
+    assert first.result()["step"] == 10
+    assert submit_s < manifest["save_s"] + first.result()["save_s"]
+    assert mgr.latest_step() == 11
+    for s in (10, 11):
+        out, _ = mgr.restore(s, target=tree)
+        np.testing.assert_array_equal(np.asarray(out["w"]), tree["w"])

@@ -1,0 +1,280 @@
+"""Round-trip conformance suite (ISSUE 5 satellite).
+
+Hardens the codec registry end to end:
+
+  * **round trips** — encode→decode across every registered codec ×
+    representative dtypes × shapes (0-d, 1-element, odd sizes, >4-D) ×
+    the ``xla``/``pallas_interpret`` backends, via the same
+    ``leaf_policy`` entry the checkpoint/serving layers use;
+  * **portability** — streams are byte-identical across backends, and a
+    stream written by either backend decodes on both;
+  * **exactness** — lossless codecs restore bit-exact; lossy codecs stay
+    inside their declared error contract;
+  * **corruption** — truncated, bit-flipped, crc-mismatched, and
+    index-tampered v1/v2 streams raise clean :class:`ContainerError`s
+    from ``from_bytes``/lazy ``LazyChunks``/the aggregated reader — never
+    a crash, never silently decoded garbage.
+
+Designed to run in the ``scripts/check.sh fast`` tier: the case grid is
+small enough to finish with plan-compile time included.
+"""
+
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import api
+from repro.core.codecs import available_methods
+from repro.core.container import Compressed, ContainerError
+from conftest import smooth_field_3d
+
+BACKENDS = ("xla", "pallas_interpret")
+
+# method → (dtype, shape) grid.  Shapes stress the policy edges: 0-d,
+# single element, odd/prime sizes, >4-D (flattened by leaf_policy).
+CASES = [
+    ("mgard", "float32", ()),
+    ("mgard", "float32", (1,)),
+    ("mgard", "float32", (17,)),
+    ("mgard", "float32", (5, 7)),
+    ("mgard", "float64", (2, 3, 4, 5, 2)),   # >4-D: policy flattens
+    ("zfp", "float32", (1,)),
+    ("zfp", "float32", (33,)),               # ragged → padded 4³ blocks
+    ("zfp", "float32", (6, 7, 8)),
+    ("zfp", "float64", (513,)),              # cast + odd size
+    ("huffman", "int32", (1,)),
+    ("huffman", "int32", (2049,)),
+    ("huffman", "uint16", (31, 9)),
+    ("huffman-bytes", "uint8", ()),
+    ("huffman-bytes", "int16", (257,)),
+    ("huffman-bytes", "float32", (5, 11)),
+    ("huffman-bytes", "float64", (129,)),    # 8-byte elems: host fallback
+]
+
+
+def _data(method: str, dtype: str, shape: tuple) -> np.ndarray:
+    rng = np.random.default_rng(hash((method, dtype, shape)) % (1 << 32))
+    dt = np.dtype(dtype)
+    if dt.kind == "f":
+        return (rng.normal(size=shape) * 3).astype(dt)
+    if method == "huffman":
+        # genuine small-alphabet keys (what leaf_policy routes here)
+        return np.minimum(
+            np.abs(rng.normal(0, 9, shape)).astype(np.int64), 120
+        ).astype(dt)
+    return rng.integers(np.iinfo(dt).min, np.iinfo(dt).max, shape).astype(dt)
+
+
+def _roundtrip(arr: np.ndarray, method: str, backend: str,
+               decode_backend: str | None = None) -> tuple[Compressed, np.ndarray]:
+    """Policy-encode on ``backend``, decode on ``decode_backend``."""
+    params = {"error_bound": 1e-2} if method == "mgard" else (
+        {"rate": 24} if method == "zfp" else {})
+    x, pol_method, pol_params = api.leaf_policy(arr, method, params)
+    spec = api.make_spec(x, pol_method, backend=backend, **pol_params)
+    c = api.encode(spec, jnp.asarray(x))
+    api.finish_leaf_meta(c, arr)
+    out = api.restore_leaf(
+        np.asarray(api.decode(c, backend=decode_backend or backend)), c
+    )
+    return c, out
+
+
+def _check_contract(arr: np.ndarray, out: np.ndarray, method: str) -> None:
+    assert out.shape == arr.shape and out.dtype == arr.dtype
+    if method in ("huffman", "huffman-bytes"):
+        np.testing.assert_array_equal(out, arr)     # lossless: bit-exact
+    elif method == "mgard":
+        vrange = float(arr.max() - arr.min()) if arr.size else 0.0
+        if vrange == 0.0:  # constant data: relative-to-range is vacuous
+            vrange = float(np.abs(arr).max(initial=0.0))
+        bound = 1e-2 * vrange + 1e-6
+        assert np.abs(out - arr).max(initial=0.0) <= bound
+    else:  # zfp fixed-rate: high rate on bounded data ⇒ small error
+        scale = max(float(np.abs(arr).max(initial=0.0)), 1e-6)
+        assert np.abs(out - arr).max(initial=0.0) <= 1e-2 * scale
+
+
+def test_all_registered_codecs_covered():
+    """The grid exercises every registered codec (a new codec must join)."""
+    assert set(m for m, _d, _s in CASES) == set(available_methods())
+
+
+@pytest.mark.parametrize("method,dtype,shape", CASES,
+                         ids=[f"{m}-{d}-{'x'.join(map(str, s)) or '0d'}"
+                              for m, d, s in CASES])
+def test_roundtrip_and_backend_byte_identity(method, dtype, shape):
+    """Encode→decode honours the codec contract, streams are byte-identical
+    across backends, and streams cross-decode between backends."""
+    arr = _data(method, dtype, shape)
+    streams, outs = {}, {}
+    for b in BACKENDS:
+        c, out = _roundtrip(arr, method, b)
+        _check_contract(arr, out, method)
+        streams[b], outs[b] = c.to_bytes(), out
+    assert streams["xla"] == streams["pallas_interpret"], (
+        "stream bytes differ across backends"
+    )
+    np.testing.assert_array_equal(outs["xla"], outs["pallas_interpret"])
+    # cross-decode: a stream written under xla decodes under interpret
+    _c, out_cross = _roundtrip(arr, method, "xla",
+                               decode_backend="pallas_interpret")
+    _check_contract(arr, out_cross, method)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    st.sampled_from(["huffman", "huffman-bytes"]),
+    # fixed size menu: plan compiles are the cost driver, data is free —
+    # the property varies content/spread, not the compile cache
+    st.sampled_from([1, 7, 1024, 2999]),
+    st.integers(0, 200),
+)
+def test_lossless_roundtrip_property(method, n, spread):
+    """Property: any int array round-trips bit-exact on both backends with
+    byte-identical streams."""
+    rng = np.random.default_rng(n * 1000 + spread)
+    arr = rng.integers(0, spread + 1, n).astype(np.int32)
+    blobs = []
+    for b in BACKENDS:
+        c, out = _roundtrip(arr, method, b)
+        np.testing.assert_array_equal(out, arr)
+        blobs.append(c.to_bytes())
+    assert blobs[0] == blobs[1]
+
+
+@pytest.mark.slow  # every error bound is a fresh plan compile (~16s total)
+@settings(max_examples=4, deadline=None)
+@given(st.sampled_from([4, 12, 40]), st.floats(1e-4, 1e-1))
+def test_mgard_error_bound_property(n, eb):
+    """Property: MGARD honours any requested relative error bound."""
+    arr = smooth_field_3d(12)[:n].astype(np.float32)
+    spec = api.make_spec(arr, "mgard", error_bound=float(eb), backend="xla")
+    c = api.encode(spec, jnp.asarray(arr))
+    out = np.asarray(api.decode(c))
+    vrange = float(arr.max() - arr.min())
+    assert np.abs(out - arr).max() <= float(eb) * vrange + 1e-7
+
+
+# ---------------------------------------------------------------------------
+# container corruption: loud ContainerErrors, never garbage
+# ---------------------------------------------------------------------------
+
+
+def _sample_container(version: int = 2) -> tuple[Compressed, bytes, np.ndarray]:
+    rng = np.random.default_rng(7)
+    keys = np.minimum(np.abs(rng.normal(0, 9, 4096)).astype(np.int32), 50)
+    c = api.compress(jnp.asarray(keys), "huffman")
+    return c, c.to_bytes(version=version), keys
+
+
+@pytest.mark.parametrize("version", [1, 2])
+def test_truncated_streams_raise(version):
+    _c, blob, _keys = _sample_container(version)
+    # every prefix class: inside magic, header, and payload
+    for cut in (2, 10, 30, len(blob) // 2, len(blob) - 1):
+        with pytest.raises(ContainerError):
+            Compressed.from_bytes(blob[:cut])
+
+
+def test_unknown_version_raises():
+    _c, blob, _keys = _sample_container()
+    bad = blob[:4] + np.uint32(9).tobytes() + blob[8:]
+    with pytest.raises(ContainerError, match="version"):
+        Compressed.from_bytes(bad)
+    with pytest.raises(ContainerError):
+        Compressed.from_bytes(b"NOPE" + blob[4:])
+
+
+def test_payload_bitflip_fails_crc():
+    _c, blob, _keys = _sample_container()
+    flipped = bytearray(blob)
+    flipped[-20] ^= 0x40                       # payload bit flip
+    with pytest.raises(ContainerError, match="crc32"):
+        Compressed.from_bytes(bytes(flipped))
+
+
+def test_header_bitflip_raises_cleanly():
+    _c, blob, _keys = _sample_container()
+    flipped = bytearray(blob)
+    flipped[20] ^= 0xFF                        # inside the header JSON
+    with pytest.raises(ContainerError):
+        Compressed.from_bytes(bytes(flipped))
+
+
+def test_tampered_decode_index_raises_not_garbage():
+    """A decode_index that disagrees with the container metadata is
+    corruption: decoding must raise, not run the fused inverse under the
+    wrong chunk geometry."""
+    c, _blob, keys = _sample_container()
+    for field in ("chunk_size", "n_chunks", "n_symbols"):
+        for tamper in ("bump", "drop"):
+            evil = Compressed.from_bytes(c.to_bytes())
+            for s in evil.meta["stages"]:
+                if s.get("stage") == "bit_pack":
+                    if tamper == "bump":   # any disagreement is corruption
+                        s["decode_index"][field] += 7
+                    else:                  # a gutted index is corruption too
+                        del s["decode_index"][field]
+            with pytest.raises(ContainerError, match="decode_index"):
+                api.decode(evil)
+    # sanity: the untampered stream still decodes exactly
+    np.testing.assert_array_equal(np.asarray(api.decode(c)), keys)
+
+
+def test_chunked_stream_corruption_raises():
+    """Framed HPDS streams: truncation and header corruption raise from
+    from_bytes; a payload flip inside one chunk raises from the lazy
+    LazyChunks access that first touches it."""
+    data = smooth_field_3d(24)
+    stream = api.CompressorStream("zfp", mode="fixed",
+                                  c_fixed_elems=4 * 24 * 24, rate=16)
+    blob = api.CompressorStream.to_bytes(stream.compress(data))
+    with pytest.raises(ContainerError):
+        api.CompressorStream.from_bytes(blob[: len(blob) - 9])
+    with pytest.raises(ContainerError):
+        api.CompressorStream.from_bytes(b"XXXX" + blob[4:])
+    flipped = bytearray(blob)
+    flipped[-30] ^= 0x10                       # last chunk's payload
+    res = api.CompressorStream.from_bytes(bytes(flipped))  # bounds still ok
+    assert res.chunks.materialized == 0
+    with pytest.raises(ContainerError):
+        res.chunks[len(res.chunks) - 1]        # lazy parse hits the flip
+    res.chunks[0]                              # intact chunks still parse
+    assert res.chunks.materialized == 1
+
+
+def test_aggregated_file_corruption_raises(tmp_path):
+    """Segment files: a flipped byte fails the segment crc on pread; a
+    truncated trailer is reported as a missing directory."""
+    from repro.runtime.io import AggregatedReader, AggregatedWriter
+
+    path = tmp_path / "agg.hpdr"
+    with AggregatedWriter(path, align=64) as w:
+        w.add("a", b"alpha" * 100)
+        w.add("b", b"beta" * 100)
+    raw = bytearray(path.read_bytes())
+    raw[10] ^= 0x01                            # inside segment "a"
+    path.write_bytes(bytes(raw))
+    with AggregatedReader(path) as r:
+        with pytest.raises(ContainerError, match="crc32"):
+            r.read("a")
+        assert r.read("b") == b"beta" * 100    # other segments unaffected
+        with pytest.raises(ContainerError, match="segment"):
+            r.read("missing")
+    path.write_bytes(path.read_bytes()[:-4])   # torn trailer
+    with pytest.raises(ContainerError, match="directory"):
+        AggregatedReader(tmp_path / "agg.hpdr")
+
+
+def test_v1_stream_still_reads_and_matches_v2():
+    c, blob_v2, keys = _sample_container()
+    blob_v1 = c.to_bytes(version=1)
+    for blob in (blob_v1, blob_v2):
+        c2 = Compressed.from_bytes(blob)
+        np.testing.assert_array_equal(np.asarray(api.decode(c2)), keys)
+    header = json.loads(blob_v1[16 : 16 + int(np.frombuffer(blob_v1[8:16], np.uint64)[0])])
+    assert "crc32" not in header               # v1 really is the old layout

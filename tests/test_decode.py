@@ -263,6 +263,7 @@ def test_batched_workspace_donation_recycles_stacks(rng, monkeypatch):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.subprocess
 def test_stacked_decode_multidevice_subprocess():
     if jax.device_count() >= 2:
         pytest.skip("in-process mesh already multi-device; covered inline")
@@ -344,3 +345,49 @@ def test_stacked_decode_multidevice_subprocess():
     assert report["decode_h2d"] < report["raw_bytes"]
     assert report["decode_h2d"] >= report["stream_bytes"] // 2
     assert report["exact"] and report["serial_ok"]
+
+
+# ---------------------------------------------------------------------------
+# mixed chunk geometry (ROADMAP item): group, don't merge-by-max
+# ---------------------------------------------------------------------------
+
+
+def test_stacked_decode_groups_mixed_chunk_sizes(rng):
+    """Same-spec streams packed with different chunk_size must decode in
+    separate stacked dispatches — merging their statics by max used to
+    decode the smaller-chunk streams as garbage."""
+    itree = {f"k{i}": np.minimum(
+        np.abs(rng.normal(0, 20, 4096)).astype(np.int32), 300)
+        for i in range(4)}
+    sel = lambda k, a: ("huffman",
+                        {"chunk_size": 512 if k in ("k1", "k3") else 4096})
+    eng = ExecutionEngine(backend="xla")
+    try:
+        comp, _ = eng.compress_pytree(itree, select=sel)
+        assert {comp[k].meta["chunk_size"] for k in itree} == {512, 4096}
+        # decode specs are identical (chunk_size is encode-side only) …
+        specs = {get_codec(c.method).decode_spec(c).key() for c in comp.values()}
+        assert len(specs) == 1
+        before = eng.stats()["sharded_decoded_leaves"]
+        smap0 = eng.stats()["shard_map_calls"]
+        out = eng.decompress_pytree(comp, itree)
+        # … yet both geometry groups ran stacked, one dispatch each
+        assert eng.stats()["sharded_decoded_leaves"] == before + 4
+        assert eng.stats()["shard_map_calls"] == smap0 + 2
+        for k in itree:
+            np.testing.assert_array_equal(np.asarray(out[k]), itree[k])
+            serial = api.decompress_leaf(comp[k])
+            np.testing.assert_array_equal(np.asarray(out[k]), serial)
+    finally:
+        eng.close()
+
+
+def test_mixed_chunk_size_merge_is_rejected_at_stage_level(rng):
+    """Defence in depth: if mixed geometries ever reach one stacked batch,
+    the strict chunk_size merge refuses instead of decoding garbage."""
+    from repro.core.stages.library import CodebookBuild
+
+    st = CodebookBuild()
+    assert st.merge_static("n_symbols", [4096, 1024]) == 4096  # pad: safe
+    with pytest.raises(ValueError, match="chunk_size"):
+        st.merge_static("chunk_size", [4096, 512])

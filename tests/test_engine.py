@@ -268,6 +268,7 @@ def test_engine_submit_result_futures(rng):
     eng.close()
 
 
+@pytest.mark.subprocess
 def test_engine_fanout_multidevice_subprocess(tmp_path):
     """Acceptance: on a ≥2-device mesh, compress_pytree shards leaves over
     the data axis with one plan build per bucket (CMM counters).
@@ -357,7 +358,7 @@ def test_checkpoint_save_async_runs_on_engine(tmp_path, rng):
 
 
 def test_checkpoint_colliding_leaf_keys_get_distinct_files(tmp_path, rng):
-    """Keys that sanitize to the same filename must not share a shard."""
+    """Keys that sanitize to the same segment name must not share one."""
     from repro.checkpoint import CheckpointManager, CheckpointPolicy
 
     tree = {
@@ -366,7 +367,7 @@ def test_checkpoint_colliding_leaf_keys_get_distinct_files(tmp_path, rng):
     }
     mgr = CheckpointManager(tmp_path, CheckpointPolicy(exact=True))
     manifest = mgr.save(1, tree)
-    files = [info["file"] for info in manifest["leaves"].values()]
+    files = [info["segment"] for info in manifest["leaves"].values()]
     assert len(files) == len(set(files))
     out, _ = mgr.restore(1, target=tree)
     for k in tree:

@@ -10,6 +10,8 @@ from repro.models import build_model
 from repro.models import encdec as ed
 from repro.models.layers import apply_mrope, apply_rope
 
+pytestmark = pytest.mark.slow  # model forward passes; excluded from check.sh fast
+
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 32
 

@@ -3,11 +3,14 @@
 import dataclasses
 
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import moe as moe_mod
+
+pytestmark = pytest.mark.slow  # model forward passes; excluded from check.sh fast
 
 KEY = jax.random.PRNGKey(0)
 

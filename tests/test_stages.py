@@ -256,6 +256,7 @@ def test_engine_huffman_bucket_mixed_alphabets(rng):
     eng.close()
 
 
+@pytest.mark.subprocess
 def test_engine_stacked_multidevice_subprocess():
     """Acceptance: on a ≥2-device mesh, MGARD and Huffman buckets execute
     via the stacked shard_map path — one executor submission per bucket

@@ -10,6 +10,8 @@ from repro.checkpoint import CheckpointManager, CheckpointPolicy
 from repro.launch.train import train_loop
 from repro.runtime import fault
 
+pytestmark = pytest.mark.slow  # model forward passes; excluded from check.sh fast
+
 
 def test_loss_decreases(tmp_path):
     out = train_loop("qwen2.5-3b", steps=25, batch=4, seq=64, log_every=100)
