@@ -17,6 +17,10 @@
 #                                   serial wall clock, per-lane timings,
 #                                   bit-identity check
 #                                   -> BENCH_pipeline.json
+#   scripts/check.sh bench serving  reduction-service concurrency: latency
+#                                   p50/p99 + goodput at >=3 offered loads,
+#                                   batch fill ratio vs batch window
+#                                   -> BENCH_serving.json
 #   scripts/check.sh docs           execute every fenced ```python block in
 #                                   docs/*.md against the current API
 set -euo pipefail
@@ -50,6 +54,12 @@ if [[ "${1:-}" == "bench" ]]; then
     shift
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
       python -m benchmarks.fig10_13_pipeline --smoke --out BENCH_pipeline.json "$@"
+    exit 0
+  fi
+  if [[ "${1:-}" == "serving" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+      python -m benchmarks.serving_load --smoke --out BENCH_serving.json "$@"
     exit 0
   fi
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -63,15 +63,24 @@ class ContextCache:
         capacity: int = 64,
         capacity_bytes: int | None = None,
         on_evict: Callable[[ReductionContext], None] | None = None,
+        group_fn: Callable[[Hashable], Any] | None = None,
     ):
         self.capacity = capacity
         self.capacity_bytes = capacity_bytes
         self.on_evict = on_evict
+        # Tenant-scoped accounting: ``group_fn(key)`` names the group a
+        # context's bytes are charged to; groups with a quota set via
+        # ``set_group_capacity`` get their own LRU eviction pass, so one
+        # tenant's parked sessions can never displace another tenant's
+        # budget (the serving layer's per-tenant CMM quota).
+        self.group_fn = group_fn
+        self._group_capacity: dict[Any, int] = {}
         self._lock = threading.Lock()
         self._entries: OrderedDict[Hashable, ReductionContext] = OrderedDict()
         self.hit_count = 0
         self.miss_count = 0
         self.evict_count = 0
+        self.group_evict_count: dict[Any, int] = {}
 
     def _evict_over_capacity(self) -> list[ReductionContext]:
         """Pop LRU entries past either capacity bound (lock held).
@@ -96,7 +105,71 @@ class ContextCache:
                 total -= ctx.nbytes()
                 evicted.append(ctx)
                 self.evict_count += 1
+        if self.group_fn is not None and self._group_capacity:
+            evicted.extend(self._evict_over_group_quotas())
         return evicted
+
+    def _evict_over_group_quotas(self) -> list[ReductionContext]:
+        """Evict LRU entries of any group over its byte quota (lock held).
+
+        The most recently used entry overall is exempt, matching the global
+        byte policy: the context just touched stays resident even when it
+        alone exceeds its group's quota.
+        """
+        evicted: list[ReductionContext] = []
+        totals: dict[Any, int] = {}
+        for key, ctx in self._entries.items():
+            group = self.group_fn(key)
+            if group in self._group_capacity:
+                totals[group] = totals.get(group, 0) + ctx.nbytes()
+        newest = next(reversed(self._entries)) if self._entries else None
+        for group, cap in self._group_capacity.items():
+            total = totals.get(group, 0)
+            if total <= cap:
+                continue
+            for key in [
+                k for k in self._entries if self.group_fn(k) == group
+            ]:
+                if total <= cap:
+                    break
+                if key == newest:
+                    continue
+                ctx = self._entries.pop(key)
+                total -= ctx.nbytes()
+                evicted.append(ctx)
+                self.evict_count += 1
+                self.group_evict_count[group] = (
+                    self.group_evict_count.get(group, 0) + 1
+                )
+        return evicted
+
+    def set_group_capacity(self, group: Any, capacity_bytes: int | None) -> None:
+        """Set (or clear, with ``None``) one group's byte quota.
+
+        Takes effect on the next insert; an already-over-quota group is
+        trimmed then, not here (callers wanting immediate enforcement can
+        touch the cache with any insert).
+        """
+        with self._lock:
+            if capacity_bytes is None:
+                self._group_capacity.pop(group, None)
+            else:
+                self._group_capacity[group] = int(capacity_bytes)
+
+    def group_capacity(self, group: Any) -> int | None:
+        with self._lock:
+            return self._group_capacity.get(group)
+
+    def nbytes_by_group(self) -> dict[Any, int]:
+        """Tracked bytes per group (every group, quota'd or not)."""
+        if self.group_fn is None:
+            return {}
+        with self._lock:
+            totals: dict[Any, int] = {}
+            for key, ctx in self._entries.items():
+                group = self.group_fn(key)
+                totals[group] = totals.get(group, 0) + ctx.nbytes()
+            return totals
 
     def get_or_create(
         self, key: Hashable, builder: Callable[[], ReductionContext]

@@ -160,22 +160,29 @@ class ExecutionEngine:
     def decode(self, c: Compressed) -> jax.Array:
         return self.submit_decode(c).result()
 
-    # -------------------------------------------------------- pytree fan-out
+    # ------------------------------------------------- bucket job surface
+    #
+    # The pytree entry points below and the serving layer's request
+    # coalescer share these helpers: leaf-job construction (policy + spec +
+    # per-leaf CMM resolution), bucketing by post-policy spec, and one
+    # whole-mesh submission per stackable bucket.  The serving layer merges
+    # jobs from *different requests* into one bucket — bit-identity holds
+    # because stacked and per-leaf execution agree byte-for-byte.
 
-    def compress_pytree(
+    def encode_leaf_jobs(
         self,
         tree: Any,
         select: Callable[[str, np.ndarray], tuple[str, dict] | None] | None = None,
         *,
         sep: str = "/",
-    ) -> tuple[dict[str, Any], dict]:
-        """Sharded-parallel :func:`repro.core.api.compress_pytree`.
+    ) -> tuple[list[str], dict[str, np.ndarray], list[tuple], dict]:
+        """Flatten ``tree`` into encode jobs: ``(order, raw, jobs, stats)``.
 
-        Leaves are bucketed by post-policy spec (shape, dtype, method,
-        params, backend); each bucket builds one plan — further leaves are
-        CMM hits — and buckets execute across the ``data``-axis devices:
-        stacked under one ``shard_map`` where the codec's encode chain is
-        fully jittable, as per-leaf executor futures otherwise.
+        Each job is ``(key, arr, x, spec)`` — original leaf, post-policy
+        array, and the engine-bound spec.  Plan resolution happens here,
+        per leaf: the first leaf of a bucket builds the plan (CMM miss),
+        every further leaf is a real CMM hit — the observable the
+        scalability benchmark counts.
         """
         from . import api
 
@@ -203,44 +210,159 @@ class ExecutionEngine:
             # a per-leaf backend in the policy overrides the engine default
             backend = pol_params.pop("backend", None) or self.backend
             spec = api.make_spec(x, pol_method, backend=backend, **pol_params)
-            # per-leaf context resolution: first leaf of a bucket builds the
-            # plan (CMM miss), every further leaf is a real CMM hit — the
-            # observable the scalability benchmark counts
             api.get_plan(spec)
             jobs.append((key, arr, x, spec))
+        return order, raw_leaves, jobs, stats
 
+    @staticmethod
+    def bucket_encode_jobs(jobs: list[tuple]) -> dict[ReductionSpec, list]:
+        """Group encode jobs by their post-policy spec (insertion-ordered)."""
         buckets: dict[ReductionSpec, list] = {}
         for job in jobs:
             buckets.setdefault(job[3], []).append(job)
+        return buckets
+
+    def encode_bucket_stackable(self, spec: ReductionSpec, items: list) -> bool:
+        """Whether a bucket rides the stacked whole-mesh ``shard_map`` path."""
+        from . import api
+
+        codec = get_codec(spec.method)
+        return (
+            codec.supports_batched_encode
+            and len(items) > 1
+            and api.get_plan(spec).pipeline is not None
+        )
+
+    def submit_encode_bucket(self, spec: ReductionSpec, items: list) -> Submission:
+        """One whole-mesh submission for a stackable bucket.
+
+        Resolves to the per-item containers (leaf meta finished), aligned
+        with ``items``.  Stacked buckets overlap each other's host barriers
+        (codebook builds) on the compute pool.
+        """
+        from . import api
+
+        codec = get_codec(spec.method)
+
+        def run() -> list:
+            out = self._encode_bucket_sharded(codec, spec, items)
+            for (_key, arr, _x, _s), c in zip(items, out):
+                api.finish_leaf_meta(c, arr)
+            with self._lock:
+                self.sharded_leaves += len(items)
+            return out
+
+        return self.executor.submit(run, device=MESH)
+
+    def submit_encode_job(self, job: tuple) -> Submission:
+        """Per-leaf fallback submission; resolves to one finished container."""
+        key, arr, x, spec = job
+        del key
+        return self.executor.submit(self._encode_leaf, spec, x, arr)
+
+    def decode_leaf_groups(
+        self, comp: dict[str, Any]
+    ) -> dict[tuple, list[tuple[str, Compressed]]]:
+        """Group a flat compressed mapping into decode buckets.
+
+        Keys group by ``(decode spec, decode geometry)`` — the codec's
+        :meth:`~repro.core.codecs.base.Codec.decode_bucket_key` — with
+        per-leaf plan resolution (CMM hit accounting) exactly mirroring the
+        encode direction.  Raw (non-``Compressed``) entries are skipped.
+        """
+        import dataclasses as _dc
+
+        from . import api
+
+        buckets: dict[tuple, list] = {}
+        for key, val in comp.items():
+            if not isinstance(val, Compressed):
+                continue
+            codec = get_codec(val.method)
+            spec = _dc.replace(codec.decode_spec(val), backend=self.backend)
+            api.get_plan(spec)
+            group = (spec, codec.decode_bucket_key(val))
+            buckets.setdefault(group, []).append((key, val))
+        return buckets
+
+    def decode_bucket_prepared(
+        self, spec: ReductionSpec, items: list
+    ) -> list | None:
+        """Per-item inverse-pipeline states, or ``None`` → per-leaf path."""
+        from . import api
+
+        codec = get_codec(spec.method)
+        plan = api.get_plan(spec)
+        if not (
+            codec.supports_batched_decode
+            and len(items) > 1
+            and plan.pipeline is not None
+            and plan.pipeline.invertible
+        ):
+            return None
+        prepared = [codec.decode_state(plan, c) for _k, c in items]
+        if any(p is None for p in prepared):
+            return None  # old streams in the bucket: host path
+        return prepared
+
+    def submit_decode_bucket(
+        self, spec: ReductionSpec, items: list, prepared: list
+    ) -> Submission:
+        """One whole-mesh submission for a stacked decode bucket.
+
+        Resolves to the restored per-item leaves (original dtype/shape),
+        aligned with ``items``.
+        """
+        codec = get_codec(spec.method)
+
+        def run() -> list:
+            out = self._decode_bucket_sharded(codec, spec, items, prepared)
+            with self._lock:
+                self.sharded_decoded_leaves += len(items)
+            return out
+
+        return self.executor.submit(run, device=MESH)
+
+    def submit_decode_job(self, spec: ReductionSpec, c: Compressed) -> Submission:
+        """Per-leaf decode fallback; resolves to the restored leaf."""
+        return self.executor.submit(self._decode_leaf, spec, c)
+
+    # -------------------------------------------------------- pytree fan-out
+
+    def compress_pytree(
+        self,
+        tree: Any,
+        select: Callable[[str, np.ndarray], tuple[str, dict] | None] | None = None,
+        *,
+        sep: str = "/",
+    ) -> tuple[dict[str, Any], dict]:
+        """Sharded-parallel :func:`repro.core.api.compress_pytree`.
+
+        Leaves are bucketed by post-policy spec (shape, dtype, method,
+        params, backend); each bucket builds one plan — further leaves are
+        CMM hits — and buckets execute across the ``data``-axis devices:
+        stacked under one ``shard_map`` where the codec's encode chain is
+        fully jittable, as per-leaf executor futures otherwise.
+        """
+        order, raw_leaves, jobs, stats = self.encode_leaf_jobs(tree, select, sep=sep)
+
+        buckets = self.bucket_encode_jobs(jobs)
         stats["buckets"] = len(buckets)
 
         results: dict[str, Compressed] = {}
         pending: list[tuple[str, Submission]] = []
         stacked: list[tuple[list, Submission]] = []
         for spec, items in buckets.items():
-            codec = get_codec(spec.method)
-            if (
-                codec.supports_batched_encode
-                and len(items) > 1
-                and api.get_plan(spec).pipeline is not None
-            ):
-                # whole-mesh task: stacked buckets overlap each other's host
-                # barriers (codebook builds) on the compute pool
-                stacked.append((items, self.executor.submit(
-                    self._encode_bucket_sharded, codec, spec, items,
-                    device=MESH,
-                )))
+            if self.encode_bucket_stackable(spec, items):
+                stacked.append((items, self.submit_encode_bucket(spec, items)))
             else:
                 for key, arr, x, spec_i in items:
                     pending.append(
                         (key, self.executor.submit(self._encode_leaf, spec_i, x, arr))
                     )
         for items, sub in stacked:
-            for (key, arr, _x, _s), c in zip(items, sub.result()):
-                api.finish_leaf_meta(c, arr)
+            for (key, _arr, _x, _s), c in zip(items, sub.result()):
                 results[key] = c
-            with self._lock:
-                self.sharded_leaves += len(items)
             stats["sharded_leaves"] += len(items)
         for key, sub in pending:
             results[key] = sub.result()
@@ -274,54 +396,25 @@ class ExecutionEngine:
         entropy streams packed with different ``chunk_size``) never share
         one stacked dispatch.
         """
-        import dataclasses as _dc
-
         from . import api
 
-        buckets: dict[tuple, list] = {}
-        for key, val in comp.items():
-            if not isinstance(val, Compressed):
-                continue
-            codec = get_codec(val.method)
-            spec = _dc.replace(codec.decode_spec(val), backend=self.backend)
-            # per-leaf context resolution, mirroring the encode direction:
-            # the first leaf of a bucket builds the decode plan (CMM miss),
-            # every further leaf is a real hit
-            api.get_plan(spec)
-            group = (spec, codec.decode_bucket_key(val))
-            buckets.setdefault(group, []).append((key, val))
+        buckets = self.decode_leaf_groups(comp)
 
         results: dict[str, Any] = {}
         pending: list[tuple[str, Submission]] = []
         stacked: list[tuple[list, Submission]] = []
         for (spec, _geo), items in buckets.items():
-            codec = get_codec(spec.method)
-            plan = api.get_plan(spec)
-            prepared = None
-            if (
-                codec.supports_batched_decode
-                and len(items) > 1
-                and plan.pipeline is not None
-                and plan.pipeline.invertible
-            ):
-                prepared = [codec.decode_state(plan, c) for _k, c in items]
-                if any(p is None for p in prepared):
-                    prepared = None  # old streams in the bucket: host path
+            prepared = self.decode_bucket_prepared(spec, items)
             if prepared is not None:
-                stacked.append((items, self.executor.submit(
-                    self._decode_bucket_sharded, codec, spec, items, prepared,
-                    device=MESH,
-                )))
+                stacked.append(
+                    (items, self.submit_decode_bucket(spec, items, prepared))
+                )
             else:
                 for key, c in items:
-                    pending.append(
-                        (key, self.executor.submit(self._decode_leaf, spec, c))
-                    )
+                    pending.append((key, self.submit_decode_job(spec, c)))
         for items, sub in stacked:
             for (key, _c), out in zip(items, sub.result()):
                 results[key] = out
-            with self._lock:
-                self.sharded_decoded_leaves += len(items)
         for key, sub in pending:
             results[key] = sub.result()
 

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Sequence
 
@@ -57,6 +58,15 @@ class Submission:
     def exception(self, timeout: float | None = None):
         return self._future.exception(timeout)
 
+    def add_done_callback(self, fn: Callable[["Submission"], None]) -> None:
+        """Invoke ``fn(self)`` when the submission resolves (any outcome).
+
+        The serving layer's request demultiplexer rides this: a coalesced
+        bucket submission fans its per-leaf results back out to every
+        participating request without a thread parked on ``result()``.
+        """
+        self._future.add_done_callback(lambda _f: fn(self))
+
 
 class DeviceExecutor:
     """Round-robin device-aware async executor.
@@ -83,9 +93,18 @@ class DeviceExecutor:
         )
         self._rr = itertools.count()
         self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._closed = False
         self.submitted = 0
         self.completed = 0
         self.mesh_submitted = 0  # whole-mesh (device=MESH) tasks
+        # per-lane service metrics: queue depth (submitted - started) and
+        # cumulative time tasks spent waiting for a pool thread — the
+        # executor-level half of the serving layer's ServiceStats surface
+        self._lane_submitted = {COMPUTE: 0, IO: 0}
+        self._lane_started = {COMPUTE: 0, IO: 0}
+        self._lane_completed = {COMPUTE: 0, IO: 0}
+        self._lane_wait_s = {COMPUTE: 0.0, IO: 0.0}
 
     # ------------------------------------------------------------ submission
 
@@ -115,11 +134,32 @@ class DeviceExecutor:
             pool, dev = self._pool, None
         else:
             pool, dev = self._pool, (device if device is not None else self.next_device())
+        lane_key = IO if lane == IO else COMPUTE
         with self._lock:
+            if self._closed:
+                raise RuntimeError(
+                    "DeviceExecutor is shut down: submit after close"
+                )
             self.submitted += 1
+            self._lane_submitted[lane_key] += 1
             if device is MESH:
                 self.mesh_submitted += 1
-        return Submission(pool.submit(self._run, dev, fn, args, kwargs), dev, lane)
+        t_sub = time.perf_counter()
+        try:
+            future = pool.submit(self._run, dev, lane_key, t_sub, fn, args, kwargs)
+        except RuntimeError as e:
+            # lost the race with a concurrent shutdown(): undo the counters
+            # so drain() still converges, and surface a clear error instead
+            # of the pool's (or, worse, a hang on a never-run future)
+            with self._lock:
+                self.submitted -= 1
+                self._lane_submitted[lane_key] -= 1
+                if device is MESH:
+                    self.mesh_submitted -= 1
+            raise RuntimeError(
+                "DeviceExecutor is shut down: submit after close"
+            ) from e
+        return Submission(future, dev, lane)
 
     def submit_after(
         self,
@@ -169,7 +209,14 @@ class DeviceExecutor:
         sub._future.add_done_callback(_chain)
         return Submission(out, device, lane)
 
-    def _run(self, device: Any, fn: Callable, args: tuple, kwargs: dict) -> Any:
+    def _run(
+        self, device: Any, lane: str, t_sub: float,
+        fn: Callable, args: tuple, kwargs: dict,
+    ) -> Any:
+        t_start = time.perf_counter()
+        with self._lock:
+            self._lane_started[lane] += 1
+            self._lane_wait_s[lane] += t_start - t_sub
         try:
             if device is None:
                 return fn(*args, **kwargs)
@@ -178,6 +225,8 @@ class DeviceExecutor:
         finally:
             with self._lock:
                 self.completed += 1
+                self._lane_completed[lane] += 1
+                self._idle.notify_all()
 
     def map(self, fn: Callable, items: Sequence[Any]) -> list[Any]:
         """Fan ``fn`` over ``items`` across the device ring; ordered results."""
@@ -194,6 +243,69 @@ class DeviceExecutor:
                 "mesh_submitted": self.mesh_submitted,
             }
 
+    def lane_stats(self) -> dict[str, dict[str, float]]:
+        """Per-lane service counters: depth, in-flight and cumulative wait.
+
+        ``depth`` is tasks submitted but not yet started (queued for a pool
+        thread); ``wait_s`` is the total time started tasks spent in that
+        queue.  The serving layer snapshots this into ``ServiceStats`` so
+        operators can see which lane is the bottleneck under load.
+        """
+        with self._lock:
+            return {
+                lane: {
+                    "submitted": self._lane_submitted[lane],
+                    "started": self._lane_started[lane],
+                    "completed": self._lane_completed[lane],
+                    "depth": self._lane_submitted[lane] - self._lane_started[lane],
+                    "inflight": self._lane_started[lane] - self._lane_completed[lane],
+                    "wait_s": self._lane_wait_s[lane],
+                }
+                for lane in (COMPUTE, IO)
+            }
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Block until every submitted task has completed; True on quiesce.
+
+        Safe to call concurrently with ``submit`` (tasks submitted while
+        draining extend the wait) and idempotent.  Chained continuations
+        (``submit_after``) count once their upstream resolves and the
+        continuation is actually submitted; callers who need a full chain
+        drained should hold the chain's final :class:`Submission` and
+        ``result()`` it — drain is the pool-level quiesce, not a dataflow
+        barrier.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._idle:
+            while self.completed < self.submitted:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return False
+                self._idle.wait(remaining)
+        return True
+
     def shutdown(self, wait: bool = True) -> None:
+        """Stop accepting work and (optionally) wait for in-flight tasks.
+
+        Idempotent: repeated calls are no-ops.  Submissions racing a
+        shutdown either run to completion or raise the clear
+        ``RuntimeError`` from :meth:`submit` — they never hang.
+        """
+        with self._lock:
+            already = self._closed
+            self._closed = True
+        if already:
+            if wait:
+                # second caller still honours wait=True semantics
+                self._pool.shutdown(wait=True)
+                self._io_pool.shutdown(wait=True)
+            return
         self._pool.shutdown(wait=wait)
         self._io_pool.shutdown(wait=wait)

@@ -1,7 +1,14 @@
 from .engine import (  # noqa: F401
+    KVPageStore,
     Request,
     ServingEngine,
     compress_kv_cache,
     decompress_kv_cache,
     park_kv_cache_async,
+)
+from .service import (  # noqa: F401
+    OVERLOAD_POLICIES,
+    ReductionService,
+    ServiceOverloaded,
+    ServiceStats,
 )

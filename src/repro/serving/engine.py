@@ -24,6 +24,7 @@ import json
 import tempfile
 import threading
 import time
+from concurrent.futures import Future
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Callable
@@ -228,6 +229,9 @@ def _load_flat(raw: bytes) -> dict[str, Any]:
     return flat
 
 
+_DEFAULT_TENANT = "default"
+
+
 class KVPageStore:
     """Parked serving sessions behind the CMM's byte-budget LRU.
 
@@ -239,6 +243,15 @@ class KVPageStore:
     ``on_evict`` hook, which *spills their containers to disk*.  A later
     ``fetch``/``restore`` of an evicted session re-materialises it from the
     spill transparently (observable as ``load_count``).
+
+    Sessions are **tenant-scoped**: every entry is keyed by
+    ``(tenant, session_id)``, and :meth:`set_tenant_quota` bounds one
+    tenant's resident bytes independently of the global budget — over
+    quota, that tenant's own LRU sessions spill first, so a heavy tenant
+    cannot displace a light one (the serving layer's per-tenant CMM
+    quota).  :meth:`park_async` registers its in-flight submission so a
+    concurrent ``fetch``/``restore``/``release`` of the same session waits
+    for the park to land instead of observing a half-written view.
     """
 
     def __init__(
@@ -247,6 +260,7 @@ class KVPageStore:
         spill_dir: str | Path | None = None,
         rate: int = 12,
         engine: engine_mod.ExecutionEngine | None = None,
+        tenant_quota_bytes: dict[str, int] | None = None,
     ):
         self.rate = rate
         self.engine = engine
@@ -259,89 +273,159 @@ class KVPageStore:
             capacity=1 << 30,  # bounded by bytes, not entry count
             capacity_bytes=capacity_bytes,
             on_evict=self._spill,
+            group_fn=lambda key: key[1],  # ("kv_page", tenant, session)
         )
+        for tenant, quota in (tenant_quota_bytes or {}).items():
+            self.cache.set_group_capacity(str(tenant), quota)
         # Store-level mutation lock (reentrant: an insert may trigger an
         # eviction spill while the lock is held).  Serialises park / fetch /
         # release against in-flight LRU spills, so releasing a session
         # cannot interleave with its own eviction and resurrect it from a
         # spill written after the release.
         self._lock = threading.RLock()
+        # session key -> in-flight async park (a concurrent.futures.Future
+        # registered *before* the submission exists, so fetch can never
+        # slip between submit and registration)
+        self._inflight: dict[tuple, Future] = {}
         self.spill_count = 0
         self.load_count = 0
 
     # -- internals -----------------------------------------------------------
 
     @staticmethod
-    def _key(session_id: str) -> tuple:
-        return ("kv_page", str(session_id))
+    def _key(session_id: str, tenant: str = _DEFAULT_TENANT) -> tuple:
+        return ("kv_page", str(tenant), str(session_id))
 
-    def _path(self, session_id: str) -> Path:
+    def _path(self, session_id: str, tenant: str = _DEFAULT_TENANT) -> Path:
         # digest suffix: sanitization alone could collide distinct session
         # ids ("user:1" vs "user_1") onto one spill file — and silently
-        # serve one session's KV state for another after re-materialising
-        sid = str(session_id)
+        # serve one session's KV state for another after re-materialising.
+        # The digest covers the tenant too, so same-named sessions of
+        # different tenants never share a spill.
+        sid, tid = str(session_id), str(tenant)
         safe = "".join(c if c.isalnum() or c in "-_." else "_" for c in sid)
-        digest = hashlib.sha1(sid.encode()).hexdigest()[:8]
+        digest = hashlib.sha1(f"{tid}\x00{sid}".encode()).hexdigest()[:8]
         return self.spill_dir / f"{safe[:80]}-{digest}.hpkv"
 
     def _spill(self, ctx) -> None:
-        session_id = ctx.key[1]
-        self._path(session_id).write_bytes(_dump_flat(ctx.buffers))
+        _tag, tenant, session_id = ctx.key
+        self._path(session_id, tenant).write_bytes(_dump_flat(ctx.buffers))
         with self._lock:
             self.spill_count += 1
 
+    def _wait_inflight(self, session_id: str, tenant: str) -> None:
+        """Block until any in-flight async park of this session lands.
+
+        A park *failure* is swallowed here — it surfaces on the
+        ``park_async`` submission; the waiter then simply sees whatever
+        state preceded the failed park (usually ``KeyError``).
+        """
+        with self._lock:
+            fut = self._inflight.get(self._key(session_id, tenant))
+        if fut is not None:
+            try:
+                fut.result()
+            except Exception:
+                pass
+
     # -- public API ----------------------------------------------------------
 
-    def park(self, session_id: str, cache: Any) -> dict:
+    def set_tenant_quota(self, tenant: str, capacity_bytes: int | None) -> None:
+        """Bound one tenant's resident parked bytes (``None`` clears)."""
+        self.cache.set_group_capacity(str(tenant), capacity_bytes)
+
+    def park(
+        self, session_id: str, cache: Any, *, tenant: str = _DEFAULT_TENANT
+    ) -> dict:
         """Compress + track one session; returns the compression stats."""
         snapshot = jax.tree.map(np.asarray, cache)
         flat, stats = compress_kv_cache(snapshot, rate=self.rate,
                                         engine=self.engine)
-        key = self._key(session_id)
+        key = self._key(session_id, tenant)
         with self._lock:
             self.cache.discard(key)  # re-park replaces the tracked entry
             ctx = ReductionContext(key=key, plan=None, buffers=flat)
             self.cache.get_or_create(key, lambda: ctx)
         return stats
 
-    def park_async(self, session_id: str, cache: Any) -> Submission:
-        """Background park on the engine's io lane (decode keeps stepping)."""
+    def park_async(
+        self, session_id: str, cache: Any, *, tenant: str = _DEFAULT_TENANT
+    ) -> Submission:
+        """Background park on the engine's io lane (decode keeps stepping).
+
+        The in-flight park is registered under the session key before the
+        io-lane submission exists, so a concurrent :meth:`fetch` /
+        :meth:`release` of the same session waits for it to land — it can
+        never observe the store mid-park.
+        """
         eng = self.engine if self.engine is not None else engine_mod.default_engine()
         snapshot = jax.tree.map(np.asarray, cache)
-        return eng.submit(self.park, session_id, snapshot, lane="io")
+        key = self._key(session_id, tenant)
+        done: Future = Future()
+        with self._lock:
+            self._inflight[key] = done
 
-    def fetch(self, session_id: str) -> dict[str, Any]:
+        def _do() -> dict:
+            try:
+                out = self.park(session_id, snapshot, tenant=tenant)
+            except BaseException as e:
+                done.set_exception(e)
+                raise
+            else:
+                done.set_result(out)
+                return out
+            finally:
+                with self._lock:
+                    if self._inflight.get(key) is done:
+                        del self._inflight[key]
+
+        return eng.submit(_do, lane="io")
+
+    def fetch(
+        self, session_id: str, *, tenant: str = _DEFAULT_TENANT
+    ) -> dict[str, Any]:
         """The session's compressed containers; re-materialises a spilled
-        session from disk transparently."""
+        session from disk transparently and waits on an in-flight async
+        park of the same session."""
+        self._wait_inflight(session_id, tenant)
 
         def rematerialize():
-            path = self._path(session_id)
+            path = self._path(session_id, tenant)
             if not path.exists():
                 raise KeyError(f"unknown parked session {session_id!r}")
             flat = _load_flat(path.read_bytes())
             self.load_count += 1
-            return ReductionContext(key=self._key(session_id), plan=None,
-                                    buffers=flat)
+            return ReductionContext(key=self._key(session_id, tenant),
+                                    plan=None, buffers=flat)
 
         with self._lock:
             return self.cache.get_or_create(
-                self._key(session_id), rematerialize
+                self._key(session_id, tenant), rematerialize
             ).buffers
 
-    def restore(self, session_id: str, like: Any) -> Any:
+    def restore(
+        self, session_id: str, like: Any, *, tenant: str = _DEFAULT_TENANT
+    ) -> Any:
         """Decompress a parked session back into ``like``'s structure."""
-        return decompress_kv_cache(self.fetch(session_id), like,
-                                   engine=self.engine)
+        return decompress_kv_cache(self.fetch(session_id, tenant=tenant),
+                                   like, engine=self.engine)
 
-    def release(self, session_id: str) -> None:
+    def release(
+        self, session_id: str, *, tenant: str = _DEFAULT_TENANT
+    ) -> None:
         """Forget a session entirely (cache entry + spill file)."""
+        self._wait_inflight(session_id, tenant)
         with self._lock:
-            self.cache.discard(self._key(session_id))
-            path = self._path(session_id)
+            self.cache.discard(self._key(session_id, tenant))
+            path = self._path(session_id, tenant)
             if path.exists():
                 path.unlink()
 
-    def stats(self) -> dict[str, int]:
+    def tenant_bytes(self) -> dict[str, int]:
+        """Resident parked bytes per tenant (the ServiceStats surface)."""
+        return self.cache.nbytes_by_group()
+
+    def stats(self) -> dict[str, Any]:
         with self._lock:
             return {
                 "sessions": len(self.cache),
@@ -350,4 +434,6 @@ class KVPageStore:
                 "spills": self.spill_count,
                 "loads": self.load_count,
                 "evictions": self.cache.evict_count,
+                "tenant_bytes": self.cache.nbytes_by_group(),
+                "tenant_evictions": dict(self.cache.group_evict_count),
             }

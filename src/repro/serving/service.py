@@ -1,0 +1,663 @@
+"""Multi-tenant reduction service — admission, coalescing, backpressure.
+
+The engine's headline throughput comes from *aggregated* dispatch: stacked
+``shard_map`` buckets that keep every data-axis device saturated, one plan
+per spec with every further leaf a CMM hit.  Direct library calls leave
+that aggregation to the caller; under heavy concurrent traffic each client
+request would dispatch its own (often singleton) buckets and the substrate
+degenerates to per-request launches.  :class:`ReductionService` is the
+request layer that restores aggregation *across* clients:
+
+  * **Admission queue** — a bounded queue in front of the dispatcher; the
+    ``overload`` policy decides what happens when it fills: ``"block"``
+    (backpressure on the producer, optionally bounded by a timeout),
+    ``"reject"`` (fail fast with :class:`ServiceOverloaded`), or
+    ``"shed"`` (drop the *oldest* queued request — freshest-first under
+    overload, the classic load-shedding rule).
+  * **Request coalescing** — the dispatcher drains whatever arrives within
+    a short ``batch_window`` and merges same-``(spec, shape, dtype)`` leaf
+    jobs *from different requests* into ONE stacked bucket submission on
+    the engine's existing ``shard_map`` path.  Responses stay bit-identical
+    to the direct API because stacked and per-leaf execution agree
+    byte-for-byte; when a bucket can't fill (singleton) or specs are
+    heterogeneous, jobs degrade gracefully to per-leaf dispatch.
+  * **Per-tenant quotas** — parked KV sessions ride a tenant-scoped
+    :class:`~repro.serving.engine.KVPageStore`: each tenant's resident
+    bytes are bounded independently (LRU spill within the tenant), so one
+    heavy tenant cannot displace another's sessions.
+  * **Service metrics** — :meth:`ReductionService.stats` snapshots a
+    :class:`ServiceStats`: queue depth, admission wait times, batch fill
+    ratio, coalesce hits, shed/reject counts, per-tenant bytes, and the
+    executor's per-lane queue-depth/wait-time counters.
+
+Typical use::
+
+    svc = ReductionService(max_queue=64, overload="reject",
+                           batch_window=0.002)
+    flat, stats = svc.compress(tree, tenant="team-a")   # many client threads
+    restored = svc.decompress(flat, tree, tenant="team-a")
+    snap = svc.stats()
+    svc.close()
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core import api
+from ..core import engine as engine_mod
+from ..runtime.executor import Submission
+from .engine import KVPageStore
+
+_DEFAULT_TENANT = "default"
+
+OVERLOAD_POLICIES = ("block", "reject", "shed")
+
+
+class ServiceOverloaded(RuntimeError):
+    """Raised when the admission queue is full (``reject``), an admission
+    wait times out (``block`` with timeout), or a queued request is dropped
+    to make room for a newer one (``shed``)."""
+
+
+@dataclass
+class _Request:
+    """One admitted client request, resolved through ``future``."""
+
+    kind: str                      # "compress" | "decompress" | "park_kv"
+    tenant: str
+    future: Future
+    t_enqueue: float
+    # payload (by kind)
+    tree: Any = None
+    select: Callable | None = None
+    comp: dict | None = None
+    like: Any = None
+    session_id: str | None = None
+    sep: str = "/"
+    # dispatcher bookkeeping
+    order: list = field(default_factory=list)
+    raw: dict = field(default_factory=dict)
+    stats: dict = field(default_factory=dict)
+    results: dict = field(default_factory=dict)
+    remaining: int = 0
+    failed: bool = False
+    coalesced: bool = False
+    lock: threading.Lock = field(default_factory=threading.Lock)
+
+
+@dataclass
+class ServiceStats:
+    """One consistent snapshot of the service's observable state."""
+
+    queue_depth: int
+    max_queue: int
+    inflight_requests: int
+    admitted: int
+    completed: int
+    failed: int
+    rejected: int
+    shed: int
+    dispatch_cycles: int
+    wait_s_mean: float
+    wait_s_max: float
+    stacked_buckets: int
+    stacked_leaves: int
+    coalesced_buckets: int
+    coalesced_requests: int
+    fallback_leaves: int
+    batch_fill_ratio: float        # leaves per stacked bucket
+    requests_per_bucket: float     # distinct requests per stacked bucket
+    decode_stacked_buckets: int
+    decode_stacked_leaves: int
+    decode_fallback_leaves: int
+    per_tenant: dict[str, dict[str, Any]]
+    executor_lanes: dict[str, dict[str, float]]
+    kv: dict[str, Any]
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ReductionService:
+    """Thread-safe multi-tenant front-end over one execution engine.
+
+    Client threads call :meth:`compress` / :meth:`decompress` /
+    :meth:`park_kv` (or their ``submit_*`` async forms); a single
+    dispatcher thread admits, batches, and coalesces the work onto the
+    engine, and per-leaf results fan back out to each request's future on
+    the executor's completion threads — no client thread ever blocks
+    another's progress except through the admission queue itself.
+
+    Parameters
+    ----------
+    engine:
+        The :class:`~repro.core.engine.ExecutionEngine` to run on
+        (default: the process-wide engine).  The service never closes it.
+    max_queue:
+        Admission queue bound (requests).
+    overload:
+        ``"block"`` | ``"reject"`` | ``"shed"`` — what a full queue does.
+    batch_window:
+        Seconds the dispatcher lingers collecting more requests to coalesce
+        after the first arrives.  ``0`` still coalesces whatever is already
+        queued (burst batching) without adding latency.
+    max_batch_requests:
+        Upper bound on requests merged into one dispatch cycle.
+    kv_store:
+        A pre-built tenant-scoped :class:`KVPageStore`; by default one is
+        created with ``kv_capacity_bytes`` / ``tenant_quota_bytes``.
+    """
+
+    def __init__(
+        self,
+        engine: engine_mod.ExecutionEngine | None = None,
+        *,
+        max_queue: int = 64,
+        overload: str = "block",
+        batch_window: float = 0.002,
+        max_batch_requests: int = 32,
+        kv_store: KVPageStore | None = None,
+        kv_capacity_bytes: int = 256 << 20,
+        kv_rate: int = 12,
+        tenant_quota_bytes: dict[str, int] | None = None,
+        spill_dir: Any = None,
+    ):
+        if overload not in OVERLOAD_POLICIES:
+            raise ValueError(
+                f"overload must be one of {OVERLOAD_POLICIES}, got {overload!r}"
+            )
+        self.engine = engine if engine is not None else engine_mod.default_engine()
+        self.max_queue = int(max_queue)
+        self.overload = overload
+        self.batch_window = float(batch_window)
+        self.max_batch_requests = int(max_batch_requests)
+        self.kv = kv_store if kv_store is not None else KVPageStore(
+            capacity_bytes=kv_capacity_bytes,
+            spill_dir=spill_dir,
+            rate=kv_rate,
+            engine=self.engine,
+            tenant_quota_bytes=tenant_quota_bytes,
+        )
+        self._queue: deque[_Request] = deque()
+        self._cond = threading.Condition()
+        self._closing = False
+        self._inflight = 0
+        # metrics (all under _mlock)
+        self._mlock = threading.Lock()
+        self._m = {
+            "admitted": 0, "completed": 0, "failed": 0, "rejected": 0,
+            "shed": 0, "dispatch_cycles": 0, "wait_s_total": 0.0,
+            "wait_count": 0, "wait_s_max": 0.0, "stacked_buckets": 0,
+            "stacked_leaves": 0, "coalesced_buckets": 0,
+            "coalesced_requests": 0, "fallback_leaves": 0,
+            "bucket_requests_sum": 0, "decode_stacked_buckets": 0,
+            "decode_stacked_leaves": 0, "decode_fallback_leaves": 0,
+        }
+        self._tenants: dict[str, dict[str, Any]] = {}
+        self._thread = threading.Thread(
+            target=self._loop, name="hpdr-service-dispatch", daemon=True
+        )
+        self._thread.start()
+
+    # ------------------------------------------------------------- admission
+
+    def _admit(self, req: _Request, timeout: float | None) -> None:
+        with self._cond:
+            if self._closing:
+                raise RuntimeError("ReductionService is closed")
+            deadline = None if timeout is None else time.monotonic() + timeout
+            while len(self._queue) >= self.max_queue:
+                if self.overload == "reject":
+                    with self._mlock:
+                        self._m["rejected"] += 1
+                    raise ServiceOverloaded(
+                        f"admission queue full ({self.max_queue} requests)"
+                    )
+                if self.overload == "shed":
+                    victim = self._queue.popleft()
+                    with self._mlock:
+                        self._m["shed"] += 1
+                    # resolve outside _cond?  set_exception is lock-free and
+                    # never calls back into the service — safe to fail here
+                    self._fail(victim, ServiceOverloaded(
+                        "request shed: queue overflow, newer work preferred"
+                    ), counted="shed")
+                    break
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        with self._mlock:
+                            self._m["rejected"] += 1
+                        raise ServiceOverloaded(
+                            f"admission wait exceeded {timeout}s"
+                        )
+                self._cond.wait(remaining)
+                if self._closing:
+                    raise RuntimeError("ReductionService is closed")
+            self._queue.append(req)
+            self._inflight += 1
+            with self._mlock:
+                self._m["admitted"] += 1
+                t = self._tenants.setdefault(
+                    req.tenant, {"requests": 0, "raw_bytes": 0}
+                )
+                t["requests"] += 1
+            self._cond.notify_all()
+
+    def _submit(self, req: _Request, timeout: float | None) -> Submission:
+        self._admit(req, timeout)
+        return Submission(req.future, device=None, lane="service")
+
+    # ------------------------------------------------------------ client API
+
+    def submit_compress(
+        self,
+        tree: Any,
+        select: Callable | None = None,
+        *,
+        tenant: str = _DEFAULT_TENANT,
+        sep: str = "/",
+        timeout: float | None = None,
+    ) -> Submission:
+        """Admit a compress request; future resolves to ``(flat, stats)``.
+
+        Bit-identical to :func:`repro.core.api.compress_pytree` on the same
+        engine — including leaves served from a coalesced cross-request
+        bucket and leaves that took the per-leaf fallback.
+        """
+        req = _Request(
+            kind="compress", tenant=str(tenant), future=Future(),
+            t_enqueue=time.monotonic(), tree=tree, select=select, sep=sep,
+        )
+        return self._submit(req, timeout)
+
+    def compress(self, tree, select=None, *, tenant=_DEFAULT_TENANT,
+                 sep="/", timeout=None):
+        return self.submit_compress(
+            tree, select, tenant=tenant, sep=sep, timeout=timeout
+        ).result()
+
+    def submit_decompress(
+        self,
+        comp: dict[str, Any],
+        like: Any,
+        *,
+        tenant: str = _DEFAULT_TENANT,
+        sep: str = "/",
+        timeout: float | None = None,
+    ) -> Submission:
+        """Admit a decompress request; future resolves to the restored tree."""
+        req = _Request(
+            kind="decompress", tenant=str(tenant), future=Future(),
+            t_enqueue=time.monotonic(), comp=comp, like=like, sep=sep,
+        )
+        return self._submit(req, timeout)
+
+    def decompress(self, comp, like, *, tenant=_DEFAULT_TENANT, sep="/",
+                   timeout=None):
+        return self.submit_decompress(
+            comp, like, tenant=tenant, sep=sep, timeout=timeout
+        ).result()
+
+    def submit_park_kv(
+        self,
+        session_id: str,
+        cache: Any,
+        *,
+        tenant: str = _DEFAULT_TENANT,
+        timeout: float | None = None,
+    ) -> Submission:
+        """Admit a KV-park request; future resolves to the park stats."""
+        req = _Request(
+            kind="park_kv", tenant=str(tenant), future=Future(),
+            t_enqueue=time.monotonic(), session_id=str(session_id),
+            tree=cache,
+        )
+        return self._submit(req, timeout)
+
+    def park_kv(self, session_id, cache, *, tenant=_DEFAULT_TENANT,
+                timeout=None):
+        return self.submit_park_kv(
+            session_id, cache, tenant=tenant, timeout=timeout
+        ).result()
+
+    # KV reads bypass admission: they are metadata-scale (or a single
+    # spill pread) and must stay responsive under compute overload.
+
+    def fetch_kv(self, session_id, *, tenant=_DEFAULT_TENANT):
+        return self.kv.fetch(session_id, tenant=tenant)
+
+    def restore_kv(self, session_id, like, *, tenant=_DEFAULT_TENANT):
+        return self.kv.restore(session_id, like, tenant=tenant)
+
+    def release_kv(self, session_id, *, tenant=_DEFAULT_TENANT):
+        self.kv.release(session_id, tenant=tenant)
+
+    def set_tenant_quota(self, tenant: str, capacity_bytes: int | None) -> None:
+        self.kv.set_tenant_quota(tenant, capacity_bytes)
+
+    # ------------------------------------------------------------ dispatcher
+
+    def _loop(self) -> None:
+        while True:
+            batch = self._collect()
+            if batch is None:
+                return
+            if batch:
+                self._dispatch(batch)
+
+    def _collect(self) -> list[_Request] | None:
+        """Block for the first request, then linger ``batch_window`` for more."""
+        with self._cond:
+            while not self._queue and not self._closing:
+                self._cond.wait()
+            if not self._queue and self._closing:
+                return None
+            batch = [self._queue.popleft()]
+            self._cond.notify_all()  # space freed: wake blocked producers
+        deadline = time.monotonic() + self.batch_window
+        while len(batch) < self.max_batch_requests:
+            with self._cond:
+                if self._queue:
+                    batch.append(self._queue.popleft())
+                    self._cond.notify_all()
+                    continue
+                if self._closing:
+                    break
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cond.wait(remaining)
+                if not self._queue and time.monotonic() >= deadline:
+                    break
+        return batch
+
+    def _dispatch(self, batch: list[_Request]) -> None:
+        """Split the batch into leaf jobs, coalesce by spec, submit."""
+        now = time.monotonic()
+        with self._mlock:
+            self._m["dispatch_cycles"] += 1
+            for req in batch:
+                wait = now - req.t_enqueue
+                self._m["wait_s_total"] += wait
+                self._m["wait_count"] += 1
+                self._m["wait_s_max"] = max(self._m["wait_s_max"], wait)
+
+        encode_groups: dict[Any, list[tuple[_Request, tuple]]] = {}
+        decode_groups: dict[tuple, list[tuple[_Request, str, Any]]] = {}
+        for req in batch:
+            try:
+                if req.kind == "compress":
+                    order, raw, jobs, stats = self.engine.encode_leaf_jobs(
+                        req.tree, req.select, sep=req.sep
+                    )
+                    req.order, req.raw, req.stats = order, raw, stats
+                    req.stats["buckets"] = len({j[3] for j in jobs})
+                    req.remaining = len(jobs)
+                    with self._mlock:
+                        self._tenants[req.tenant]["raw_bytes"] += stats["raw"]
+                    if not jobs:
+                        self._resolve_compress(req)
+                        continue
+                    for job in jobs:
+                        encode_groups.setdefault(job[3], []).append((req, job))
+                elif req.kind == "decompress":
+                    groups = self.engine.decode_leaf_groups(req.comp)
+                    req.remaining = sum(len(v) for v in groups.values())
+                    if req.remaining == 0:
+                        self._resolve_decompress(req)
+                        continue
+                    for group, items in groups.items():
+                        decode_groups.setdefault(group, []).extend(
+                            (req, key, c) for key, c in items
+                        )
+                else:  # park_kv
+                    sub = self.kv.park_async(
+                        req.session_id, req.tree, tenant=req.tenant
+                    )
+                    sub.add_done_callback(
+                        lambda s, r=req: self._resolve_from_submission(r, s)
+                    )
+            except Exception as e:
+                self._fail(req, e)
+
+        for spec, entries in encode_groups.items():
+            items = [job for (_r, job) in entries]
+            reqs = {id(r): r for r, _ in entries}
+            if self.engine.encode_bucket_stackable(spec, items):
+                self._note_stacked(len(items), reqs.values(), encode=True)
+                sub = self.engine.submit_encode_bucket(spec, items)
+                sub.add_done_callback(
+                    lambda s, es=entries: self._on_encode_bucket(es, s)
+                )
+            else:
+                with self._mlock:
+                    self._m["fallback_leaves"] += len(items)
+                for req, job in entries:
+                    sub = self.engine.submit_encode_job(job)
+                    sub.add_done_callback(
+                        lambda s, r=req, k=job[0]: self._on_leaf(r, k, s)
+                    )
+
+        for (spec, _geo), entries in decode_groups.items():
+            items = [(key, c) for (_r, key, c) in entries]
+            reqs = {id(r): r for r, _k, _c in entries}
+            prepared = self.engine.decode_bucket_prepared(spec, items)
+            if prepared is not None:
+                self._note_stacked(len(items), reqs.values(), encode=False)
+                sub = self.engine.submit_decode_bucket(spec, items, prepared)
+                sub.add_done_callback(
+                    lambda s, es=entries: self._on_decode_bucket(es, s)
+                )
+            else:
+                with self._mlock:
+                    self._m["decode_fallback_leaves"] += len(items)
+                for req, key, c in entries:
+                    sub = self.engine.submit_decode_job(spec, c)
+                    sub.add_done_callback(
+                        lambda s, r=req, k=key: self._on_leaf(r, k, s)
+                    )
+
+    def _note_stacked(self, n_leaves: int, reqs, *, encode: bool) -> None:
+        reqs = list(reqs)
+        with self._mlock:
+            if encode:
+                self._m["stacked_buckets"] += 1
+                self._m["stacked_leaves"] += n_leaves
+                self._m["bucket_requests_sum"] += len(reqs)
+                if len(reqs) > 1:
+                    self._m["coalesced_buckets"] += 1
+            else:
+                self._m["decode_stacked_buckets"] += 1
+                self._m["decode_stacked_leaves"] += n_leaves
+            if len(reqs) > 1:
+                for req in reqs:
+                    if not req.coalesced:
+                        req.coalesced = True
+                        self._m["coalesced_requests"] += 1
+
+    # ------------------------------------------------------------ completion
+
+    def _on_encode_bucket(self, entries, sub: Submission) -> None:
+        exc = sub.exception()
+        if exc is not None:
+            for req, _job in entries:
+                self._fail(req, exc)
+            return
+        for (req, job), c in zip(entries, sub.result()):
+            self._deliver(req, job[0], c)
+
+    def _on_decode_bucket(self, entries, sub: Submission) -> None:
+        exc = sub.exception()
+        if exc is not None:
+            for req, _key, _c in entries:
+                self._fail(req, exc)
+            return
+        for (req, key, _c), out in zip(entries, sub.result()):
+            self._deliver(req, key, out)
+
+    def _on_leaf(self, req: _Request, key: str, sub: Submission) -> None:
+        exc = sub.exception()
+        if exc is not None:
+            self._fail(req, exc)
+            return
+        self._deliver(req, key, sub.result())
+
+    def _deliver(self, req: _Request, key: str, value: Any) -> None:
+        with req.lock:
+            if req.failed:
+                return
+            req.results[key] = value
+            req.remaining -= 1
+            finished = req.remaining == 0
+        if finished:
+            try:
+                if req.kind == "compress":
+                    self._resolve_compress(req)
+                else:
+                    self._resolve_decompress(req)
+            except Exception as e:
+                self._fail(req, e)
+
+    def _resolve_compress(self, req: _Request) -> None:
+        stats = req.stats
+        flat: dict[str, Any] = {}
+        for key in req.order:
+            if key in req.raw:
+                flat[key] = req.raw[key]
+                continue
+            c = req.results[key]
+            flat[key] = c
+            stats["compressed"] += c.nbytes()
+            stats["compressed_leaves"] += 1
+        stats["ratio"] = stats["raw"] / max(stats["compressed"], 1)
+        stats["coalesced"] = req.coalesced
+        self._resolve(req, (flat, stats))
+
+    def _resolve_decompress(self, req: _Request) -> None:
+        flat = {
+            key: req.results[key] if key in req.results else val
+            for key, val in req.comp.items()
+        }
+        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(req.like)
+        out = [
+            jnp.asarray(flat[api._path_key(p, req.sep)])
+            for p, _leaf in leaves_with_path
+        ]
+        self._resolve(req, jax.tree_util.tree_unflatten(treedef, out))
+
+    def _resolve_from_submission(self, req: _Request, sub: Submission) -> None:
+        exc = sub.exception()
+        if exc is not None:
+            self._fail(req, exc)
+        else:
+            self._resolve(req, sub.result())
+
+    def _resolve(self, req: _Request, value: Any) -> None:
+        req.future.set_result(value)
+        with self._mlock:
+            self._m["completed"] += 1
+        self._request_done()
+
+    def _fail(self, req: _Request, exc: BaseException,
+              counted: str = "failed") -> None:
+        with req.lock:
+            if req.failed or req.future.done():
+                return
+            req.failed = True
+        req.future.set_exception(exc)
+        if counted == "failed":
+            with self._mlock:
+                self._m["failed"] += 1
+        self._request_done()
+
+    def _request_done(self) -> None:
+        with self._cond:
+            self._inflight -= 1
+            self._cond.notify_all()
+
+    # --------------------------------------------------------------- metrics
+
+    def stats(self) -> ServiceStats:
+        with self._cond:
+            depth = len(self._queue)
+            inflight = self._inflight
+        lanes = self.engine.executor.lane_stats()
+        kv_stats = self.kv.stats()
+        with self._mlock:
+            m = dict(self._m)
+            tenants = {t: dict(v) for t, v in self._tenants.items()}
+        parked = kv_stats.get("tenant_bytes", {})
+        for tenant, nbytes in parked.items():
+            tenants.setdefault(tenant, {"requests": 0, "raw_bytes": 0})
+        for tenant in tenants:
+            tenants[tenant]["parked_bytes"] = parked.get(tenant, 0)
+        return ServiceStats(
+            queue_depth=depth,
+            max_queue=self.max_queue,
+            inflight_requests=inflight,
+            admitted=m["admitted"],
+            completed=m["completed"],
+            failed=m["failed"],
+            rejected=m["rejected"],
+            shed=m["shed"],
+            dispatch_cycles=m["dispatch_cycles"],
+            wait_s_mean=m["wait_s_total"] / max(m["wait_count"], 1),
+            wait_s_max=m["wait_s_max"],
+            stacked_buckets=m["stacked_buckets"],
+            stacked_leaves=m["stacked_leaves"],
+            coalesced_buckets=m["coalesced_buckets"],
+            coalesced_requests=m["coalesced_requests"],
+            fallback_leaves=m["fallback_leaves"],
+            batch_fill_ratio=(
+                m["stacked_leaves"] / max(m["stacked_buckets"], 1)
+            ),
+            requests_per_bucket=(
+                m["bucket_requests_sum"] / max(m["stacked_buckets"], 1)
+            ),
+            decode_stacked_buckets=m["decode_stacked_buckets"],
+            decode_stacked_leaves=m["decode_stacked_leaves"],
+            decode_fallback_leaves=m["decode_fallback_leaves"],
+            per_tenant=tenants,
+            executor_lanes=lanes,
+            kv=kv_stats,
+        )
+
+    # ------------------------------------------------------------- lifecycle
+
+    def close(self, timeout: float | None = None) -> None:
+        """Drain queued + in-flight requests, then stop the dispatcher.
+
+        Idempotent.  New submissions during/after close raise
+        ``RuntimeError``; already-admitted requests complete normally.
+        """
+        with self._cond:
+            self._closing = True
+            self._cond.notify_all()
+        self._thread.join(timeout)
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self._inflight > 0:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                self._cond.wait(remaining)
+
+    def __enter__(self) -> "ReductionService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -429,3 +429,129 @@ def test_stream_lazy_bounds_validated_eagerly():
     blob = api.CompressorStream.to_bytes(stream.compress(data))
     with pytest.raises(ValueError, match="truncated"):
         api.CompressorStream.from_bytes(blob[: len(blob) - 7])
+
+
+# ---------------------------------------------------------------------------
+# executor lifecycle: idempotent shutdown, drain, lane metrics, chaining
+# ---------------------------------------------------------------------------
+
+
+def test_executor_shutdown_idempotent_and_submit_after_close():
+    from repro.runtime.executor import DeviceExecutor
+
+    ex = DeviceExecutor(jax.devices())
+    assert ex.submit(lambda: 41 + 1).result() == 42
+    ex.shutdown()
+    assert ex.closed
+    ex.shutdown()  # second shutdown: no-op, no hang, no error
+    ex.shutdown(wait=False)
+    with pytest.raises(RuntimeError, match="shut down"):
+        ex.submit(lambda: 0)
+    with pytest.raises(RuntimeError, match="shut down"):
+        ex.submit(lambda: 0, lane="io")
+
+
+def test_executor_shutdown_safe_under_concurrent_submit():
+    import threading
+
+    from repro.runtime.executor import DeviceExecutor
+
+    ex = DeviceExecutor(jax.devices())
+    stop = threading.Event()
+    outcomes = {"ok": 0, "refused": 0, "other": []}
+
+    def spammer():
+        while not stop.is_set():
+            try:
+                ex.submit(lambda: 1).result()
+                outcomes["ok"] += 1
+            except RuntimeError as e:
+                if "shut down" in str(e):
+                    outcomes["refused"] += 1
+                    return
+                outcomes["other"].append(e)  # pragma: no cover
+                return
+
+    threads = [threading.Thread(target=spammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    import time as _time
+
+    _time.sleep(0.05)
+    ex.shutdown()  # races against in-flight submits
+    stop.set()
+    for t in threads:
+        t.join(30)
+    assert not any(t.is_alive() for t in threads)
+    # every spammer either succeeded or got the clear refusal — nothing hung
+    assert not outcomes["other"]
+    st = ex.lane_stats()
+    total = sum(v["submitted"] for v in st.values())
+    assert total == sum(v["completed"] for v in st.values())
+
+
+def test_executor_drain_and_lane_stats():
+    import threading
+    import time as _time
+
+    from repro.runtime.executor import DeviceExecutor
+
+    ex = DeviceExecutor(jax.devices())
+    gate = threading.Event()
+    subs = [ex.submit(gate.wait, 30) for _ in range(3)]
+    subs.append(ex.submit(gate.wait, 30, lane="io"))
+    assert not ex.drain(timeout=0.1)  # gated work: drain times out False
+    st = ex.lane_stats()
+    assert st["compute"]["submitted"] == 3 and st["io"]["submitted"] == 1
+    assert st["compute"]["depth"] + st["compute"]["inflight"] > 0
+    gate.set()
+    assert ex.drain(timeout=30)  # all lanes idle
+    for s in subs:
+        s.result()
+    st = ex.lane_stats()
+    for lane in ("compute", "io"):
+        assert st[lane]["completed"] == st[lane]["submitted"]
+        assert st[lane]["depth"] == 0 and st[lane]["inflight"] == 0
+        assert st[lane]["wait_s"] >= 0.0
+    t0 = _time.monotonic()
+    assert ex.drain(timeout=5)  # idle drain returns immediately
+    assert _time.monotonic() - t0 < 1.0
+    ex.shutdown()
+
+
+def test_executor_submit_after_propagates_upstream_failure():
+    from repro.runtime.executor import DeviceExecutor
+
+    ex = DeviceExecutor(jax.devices())
+
+    def boom():
+        raise ValueError("upstream boom")
+
+    first = ex.submit(boom)
+    chained = ex.submit_after(first, lambda r: r + 1)
+    with pytest.raises(ValueError, match="upstream boom"):
+        chained.result(timeout=30)
+    # a healthy chain on the same executor still works afterwards
+    ok = ex.submit_after(ex.submit(lambda: 2), lambda r: r + 3)
+    assert ok.result(timeout=30) == 5
+    ex.shutdown()
+
+
+def test_executor_done_callback_fires_with_submission():
+    import threading
+
+    from repro.runtime.executor import DeviceExecutor
+
+    ex = DeviceExecutor(jax.devices())
+    seen = []
+    done = threading.Event()
+    sub = ex.submit(lambda: "payload")
+
+    def cb(s):
+        seen.append(s.result())
+        done.set()
+
+    sub.add_done_callback(cb)
+    assert done.wait(30)
+    assert seen == ["payload"]
+    ex.shutdown()

@@ -1,6 +1,11 @@
-"""Serving engine: batched generation + KV-cache compression roundtrip."""
+"""Serving layer: batched generation, KV parking, and the multi-tenant
+reduction service (admission, coalescing, quotas, backpressure)."""
+
+import threading
+import time
 
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
 
@@ -124,7 +129,7 @@ def test_kv_page_store_async_and_unknown_session(tmp_path):
     sub = store.park_async("bg", _session_cache(7))
     stats = sub.result()
     assert stats["compressed_leaves"] == 2
-    assert "bg" in str(sorted(k[1] for k in store.cache._entries))
+    assert "bg" in str(sorted(k[2] for k in store.cache._entries))
     with pytest.raises(KeyError, match="unknown parked session"):
         store.fetch("never-parked")
 
@@ -137,10 +142,384 @@ def test_kv_page_store_colliding_session_ids_get_distinct_spills(tmp_path):
     a, b = _session_cache(1), _session_cache(2)
     store.park("user:1", a)
     store.park("user_1", b)
-    store.cache.evict(("kv_page", "user:1"))  # force both to spill
-    store.cache.evict(("kv_page", "user_1"))
+    store.cache.evict(("kv_page", "default", "user:1"))  # force both to spill
+    store.cache.evict(("kv_page", "default", "user_1"))
     ra = store.restore("user:1", a)
     rb = store.restore("user_1", b)
     assert not np.allclose(np.asarray(ra["k"]), np.asarray(rb["k"]))
     err = np.abs(np.asarray(ra["k"]) - a["k"]).max()
     assert err < 1e-2 * np.abs(a["k"]).max()
+
+
+# ---------------------------------------------------------------------------
+# per-tenant quotas: one tenant's pressure never displaces another tenant
+# ---------------------------------------------------------------------------
+
+
+def test_two_tenant_quota_eviction_ordering(tmp_path):
+    from repro.serving.engine import KVPageStore
+
+    store = KVPageStore(capacity_bytes=64 << 20, spill_dir=tmp_path, rate=16,
+                        tenant_quota_bytes={"heavy": 450_000})
+    # park in a known order: heavy a0 (oldest) .. a3, light b0
+    for i in range(4):
+        store.park(f"a{i}", _session_cache(i), tenant="heavy")
+    store.park("b0", _session_cache(9), tenant="light")
+
+    st = store.stats()
+    # the heavy tenant was trimmed to its quota, LRU-first
+    assert st["tenant_bytes"]["heavy"] <= 450_000
+    assert st["tenant_evictions"]["heavy"] >= 1
+    resident = {k[2] for k in store.cache._entries if k[1] == "heavy"}
+    evicted = {f"a{i}" for i in range(4)} - resident
+    # eviction ordering: every evicted session is older than every resident
+    assert max(int(s[1]) for s in evicted) < min(int(s[1]) for s in resident)
+    for sid in evicted:
+        assert store._path(sid, "heavy").exists()  # spilled, not lost
+    # the light tenant was untouched by the heavy tenant's pressure
+    assert "light" not in st["tenant_evictions"]
+    loads = store.stats()["loads"]
+    store.restore("b0", _session_cache(9), tenant="light")
+    assert store.stats()["loads"] == loads  # still resident: no disk load
+    # evicted heavy sessions re-materialise transparently
+    sid = sorted(evicted)[0]
+    restored = store.restore(sid, _session_cache(int(sid[1])), tenant="heavy")
+    err = np.abs(np.asarray(restored["k"]) - _session_cache(int(sid[1]))["k"]).max()
+    assert err < 1e-2 * np.abs(_session_cache(int(sid[1]))["k"]).max()
+    assert store.stats()["loads"] == loads + 1
+
+
+def test_same_session_id_isolated_across_tenants(tmp_path):
+    from repro.serving.engine import KVPageStore
+
+    store = KVPageStore(capacity_bytes=64 << 20, spill_dir=tmp_path, rate=16)
+    a, b = _session_cache(1), _session_cache(2)
+    store.park("shared", a, tenant="t1")
+    store.park("shared", b, tenant="t2")
+    assert store._path("shared", "t1") != store._path("shared", "t2")
+    ra = store.restore("shared", a, tenant="t1")
+    rb = store.restore("shared", b, tenant="t2")
+    assert not np.allclose(np.asarray(ra["k"]), np.asarray(rb["k"]))
+
+
+# ---------------------------------------------------------------------------
+# park_async / fetch race: readers wait on the in-flight park
+# ---------------------------------------------------------------------------
+
+
+class _GatedIOExecutor:
+    """Instrumented executor: io-lane bodies stall until ``gate`` is set."""
+
+    def __init__(self, inner, gate):
+        self._inner = inner
+        self.gate = gate
+
+    def submit(self, fn, /, *args, lane="compute", **kwargs):
+        if lane == "io":
+            gate = self.gate
+
+            def gated(*a, **k):
+                gate.wait(30)
+                return fn(*a, **k)
+
+            return self._inner.submit(gated, *args, lane=lane, **kwargs)
+        return self._inner.submit(fn, *args, lane=lane, **kwargs)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def test_park_async_fetch_waits_for_inflight_park(tmp_path):
+    from repro.core.engine import ExecutionEngine
+    from repro.serving.engine import KVPageStore
+
+    gate = threading.Event()
+    with ExecutionEngine(backend="xla") as eng:
+        eng.executor = _GatedIOExecutor(eng.executor, gate)
+        store = KVPageStore(capacity_bytes=64 << 20, spill_dir=tmp_path,
+                            rate=16, engine=eng)
+        cache = _session_cache(3)
+        sub = store.park_async("s", cache)
+        got = {}
+
+        def fetcher():
+            got["flat"] = store.fetch("s")
+
+        t = threading.Thread(target=fetcher)
+        t.start()
+        time.sleep(0.15)
+        # the park is gated in flight: fetch must wait, not raise KeyError
+        assert t.is_alive() and "flat" not in got
+        gate.set()
+        t.join(30)
+        assert not t.is_alive()
+        assert sub.result()["compressed_leaves"] == 2
+        restored = store.restore("s", cache)
+        err = np.abs(np.asarray(restored["k"]) - cache["k"]).max()
+        assert err < 1e-2 * np.abs(cache["k"]).max()
+
+
+def test_park_async_release_waits_for_inflight_park(tmp_path):
+    from repro.core.engine import ExecutionEngine
+    from repro.serving.engine import KVPageStore
+
+    gate = threading.Event()
+    with ExecutionEngine(backend="xla") as eng:
+        eng.executor = _GatedIOExecutor(eng.executor, gate)
+        store = KVPageStore(capacity_bytes=64 << 20, spill_dir=tmp_path,
+                            rate=16, engine=eng)
+        sub = store.park_async("s", _session_cache(4))
+        released = threading.Event()
+
+        def releaser():
+            store.release("s")
+            released.set()
+
+        t = threading.Thread(target=releaser)
+        t.start()
+        time.sleep(0.15)
+        assert not released.is_set()  # release waits for the park to land
+        gate.set()
+        t.join(30)
+        sub.result()
+        # the release observed the *parked* state and removed it entirely
+        with pytest.raises(KeyError):
+            store.fetch("s")
+
+
+# ---------------------------------------------------------------------------
+# ReductionService: admission, coalescing, backpressure, metrics
+# ---------------------------------------------------------------------------
+
+
+def _zfp_select(key, arr):
+    del key, arr
+    return "zfp", {"rate": 16}
+
+
+def test_service_coalesces_across_requests_with_cmm_hits():
+    from repro.core.context import GLOBAL_CMM
+    from repro.core.engine import ExecutionEngine
+    from repro.serving import ReductionService
+
+    rng = np.random.default_rng(0)
+    # a shape this test owns: plan build below is the only CMM miss for it
+    trees = [{"w": rng.normal(size=(37, 53)).astype(np.float32)}
+             for _ in range(5)]
+    with ExecutionEngine(backend="xla") as eng:
+        with ReductionService(eng, batch_window=0.05, max_queue=16) as svc:
+            misses0 = GLOBAL_CMM.miss_count
+            hits0 = GLOBAL_CMM.hit_count
+            outs = [None] * len(trees)
+
+            def worker(i):
+                outs[i] = svc.compress(trees[i], _zfp_select)
+
+            threads = [threading.Thread(target=worker, args=(i,))
+                       for i in range(len(trees))]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            snap = svc.stats()
+        # coalescing engaged: >1 request per stacked bucket, every leaf
+        # after the first a real CMM hit (one plan build for the bucket)
+        assert snap.stacked_buckets >= 1
+        assert snap.batch_fill_ratio > 1.0
+        assert snap.coalesced_requests >= 2
+        assert GLOBAL_CMM.miss_count - misses0 == 1
+        assert GLOBAL_CMM.hit_count - hits0 >= len(trees) - 1
+        assert all(o is not None for o in outs)
+        assert snap.completed == len(trees)
+        assert snap.wait_s_mean >= 0.0
+
+
+def test_service_overload_reject_and_block_timeout():
+    from repro.core.engine import ExecutionEngine
+    from repro.serving import ReductionService, ServiceOverloaded
+
+    rng = np.random.default_rng(0)
+    tree = {"w": rng.normal(size=(32, 32)).astype(np.float32)}
+    gate = threading.Event()
+
+    def stalling_select(key, arr):
+        gate.wait(30)  # runs in the dispatcher: deterministically stalls it
+        return _zfp_select(key, arr)
+
+    with ExecutionEngine(backend="xla") as eng:
+        svc = ReductionService(eng, max_queue=1, overload="reject",
+                               batch_window=0.0)
+        stalled = svc.submit_compress(tree, stalling_select)
+        time.sleep(0.1)  # dispatcher pops `stalled`, stalls inside select
+        queued = svc.submit_compress(tree, _zfp_select)  # fills the queue
+        with pytest.raises(ServiceOverloaded):
+            svc.submit_compress(tree, _zfp_select)
+        assert svc.stats().rejected == 1
+        gate.set()
+        stalled.result()
+        queued.result()
+        svc.close()
+
+        # block policy with a timeout: admission raises instead of hanging
+        gate.clear()
+        svc = ReductionService(eng, max_queue=1, overload="block",
+                               batch_window=0.0)
+        stalled = svc.submit_compress(tree, stalling_select)
+        time.sleep(0.1)
+        queued = svc.submit_compress(tree, _zfp_select)
+        t0 = time.monotonic()
+        with pytest.raises(ServiceOverloaded):
+            svc.submit_compress(tree, _zfp_select, timeout=0.2)
+        assert time.monotonic() - t0 >= 0.2
+        gate.set()
+        stalled.result()
+        queued.result()
+        svc.close()
+
+
+def test_service_overload_shed_drops_oldest():
+    from repro.core.engine import ExecutionEngine
+    from repro.serving import ReductionService, ServiceOverloaded
+
+    rng = np.random.default_rng(0)
+    tree = {"w": rng.normal(size=(32, 32)).astype(np.float32)}
+    gate = threading.Event()
+
+    def stalling_select(key, arr):
+        gate.wait(30)
+        return _zfp_select(key, arr)
+
+    with ExecutionEngine(backend="xla") as eng:
+        svc = ReductionService(eng, max_queue=2, overload="shed",
+                               batch_window=0.0)
+        stalled = svc.submit_compress(tree, stalling_select)
+        time.sleep(0.1)
+        old = svc.submit_compress(tree, _zfp_select)
+        mid = svc.submit_compress(tree, _zfp_select)
+        new = svc.submit_compress(tree, _zfp_select)  # sheds `old`
+        with pytest.raises(ServiceOverloaded, match="shed"):
+            old.result(timeout=5)
+        gate.set()
+        stalled.result()
+        mid.result()
+        new.result()  # the newest request survived at the oldest's expense
+        assert svc.stats().shed == 1
+        svc.close()
+
+
+def test_service_submit_after_close_raises():
+    from repro.core.engine import ExecutionEngine
+    from repro.serving import ReductionService
+
+    with ExecutionEngine(backend="xla") as eng:
+        svc = ReductionService(eng)
+        svc.close()
+        svc.close()  # idempotent
+        with pytest.raises(RuntimeError, match="closed"):
+            svc.submit_compress({"w": np.zeros((8, 8), np.float32)},
+                                _zfp_select)
+
+
+def test_service_bad_request_fails_future_only():
+    from repro.core.engine import ExecutionEngine
+    from repro.serving import ReductionService
+
+    rng = np.random.default_rng(0)
+    with ExecutionEngine(backend="xla") as eng:
+        with ReductionService(eng, batch_window=0.0) as svc:
+            def broken_select(key, arr):
+                raise ValueError("select blew up")
+
+            bad = svc.submit_compress(
+                {"w": rng.normal(size=(16, 16)).astype(np.float32)},
+                broken_select,
+            )
+            good = svc.submit_compress(
+                {"w": rng.normal(size=(16, 16)).astype(np.float32)},
+                _zfp_select,
+            )
+            with pytest.raises(ValueError, match="select blew up"):
+                bad.result(timeout=30)
+            flat, stats = good.result(timeout=30)
+            assert stats["compressed_leaves"] == 1
+            assert svc.stats().failed == 1
+
+
+@pytest.mark.slow
+def test_service_soak_bit_identity_with_direct_api():
+    """N client threads, mixed codecs + a per-thread unique-shape leaf:
+    every response byte-identical to the direct API, coalesced and
+    fallback paths both exercised, decompress round-trips exactly."""
+    from repro.core import api
+    from repro.core.engine import ExecutionEngine
+    from repro.serving import ReductionService
+
+    rng = np.random.default_rng(7)
+    n_threads, n_rounds = 6, 3
+
+    def make_tree(i, r):
+        return {
+            # shared shapes across threads: coalesce into stacked buckets
+            "shared_zfp": rng.normal(size=(40, 48)).astype(np.float32),
+            "shared_mgard": rng.normal(size=(24, 24)).astype(np.float32),
+            # unique shape per (thread, round): mgard keeps the geometry, so
+            # each is a singleton spec → exercises the per-leaf fallback
+            "unique": rng.normal(size=(8 + i, 9 + r)).astype(np.float32),
+            "raw": np.arange(4, dtype=np.int32),  # passthrough
+        }
+
+    def select(key, arr):
+        if key in ("shared_mgard", "unique"):
+            return "mgard", {"error_bound": 1e-2}
+        if arr.dtype.kind == "f":
+            return "zfp", {"rate": 16}
+        return None
+
+    trees = {(i, r): make_tree(i, r)
+             for i in range(n_threads) for r in range(n_rounds)}
+    with ExecutionEngine(backend="xla") as eng:
+        with ReductionService(eng, batch_window=0.02, max_queue=64) as svc:
+            outs = {}
+            errs = []
+
+            def worker(i):
+                try:
+                    for r in range(n_rounds):
+                        outs[(i, r)] = svc.compress(trees[(i, r)], select)
+                except Exception as e:  # pragma: no cover - surfaced below
+                    errs.append(e)
+
+            threads = [threading.Thread(target=worker, args=(i,))
+                       for i in range(n_threads)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not errs
+            snap = svc.stats()
+
+            # bit-identity: every container equals the direct API's bytes,
+            # coalesced buckets and per-leaf fallbacks alike
+            for (i, r), (flat, _stats) in outs.items():
+                direct, _ = api.compress_pytree(trees[(i, r)], select,
+                                                engine=eng)
+                for key, val in direct.items():
+                    if isinstance(val, api.Compressed):
+                        assert flat[key].to_bytes() == val.to_bytes(), (
+                            i, r, key)
+                    else:
+                        np.testing.assert_array_equal(flat[key], val)
+
+            # decompress through the service matches the direct inverse
+            i_r = (0, 0)
+            flat, _ = outs[i_r]
+            via_svc = svc.decompress(flat, trees[i_r])
+            via_api = api.decompress_pytree(flat, trees[i_r], engine=eng)
+            for a, b in zip(jax.tree.leaves(via_svc), jax.tree.leaves(via_api)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # both execution shapes ran
+        assert snap.stacked_leaves > 0
+        assert snap.fallback_leaves > 0
+        assert snap.completed == n_threads * n_rounds  # snapshot pre-decompress
+        assert snap.batch_fill_ratio > 1.0  # coalescing demonstrably engaged
