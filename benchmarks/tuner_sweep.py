@@ -1,0 +1,204 @@
+"""Auto-tuner validation sweep (PR 7) — emits BENCH_tuner.json.
+
+For each codec the sweep measures every fixed (chunk-count, window)
+configuration on the grid, then runs the auto-tuned stream
+(``chunk_size="auto", window="auto"``) and scores it:
+
+  * ``auto_vs_best_fixed``  — auto wall / best fixed wall (target ≤1.10:
+    the tuner must land within 10% of the best fixed config);
+  * ``auto_vs_worst_fixed`` — how much a bad fixed choice would cost;
+  * ``auto_vs_serial``      — auto wall / measured window=1 wall at the
+    tuner's OWN chunk size (target ≤1.05: the overlap decision never
+    loses to the serial schedule);
+  * ``prediction_error``    — |predicted makespan − measured wall| /
+    measured wall (target <0.10), where the prediction is taken AFTER
+    the tuner's online residual has converged (the warm-up run feeds its
+    measured wall back via ``tuner.observe``).
+
+The first auto run calibrates the machine if no persisted store exists
+(one-time; subsequent runs load the JSON with zero sweeps).
+
+Usage:  python -m benchmarks.tuner_sweep --smoke --out BENCH_tuner.json
+        (wired as ``scripts/check.sh bench tuner``)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import Row, nyx_like
+from repro.core import api
+
+SMOKE_GRID = {"n_chunks": (2, 4, 8, 16), "windows": (1, 2)}
+FULL_GRID = {"n_chunks": (2, 4, 8, 12, 16, 24), "windows": (1, 2, 3)}
+
+
+def _fixed_wall(method: str, data: np.ndarray, window: int,
+                c_fixed_elems: int, repeat: int, **params) -> float:
+    def run():
+        stream = api.CompressorStream(
+            method, mode="fixed", c_fixed_elems=c_fixed_elems,
+            window=window, backend="xla", frame=True, **params)
+        return stream.compress(data)
+
+    run()  # warm plans
+    return min(run().wall_time for _ in range(repeat))
+
+
+def _auto_result(method: str, data: np.ndarray, repeat: int, **params):
+    from repro.core import tuner
+
+    def run():
+        stream = api.CompressorStream(
+            method, chunk_size="auto", window="auto", backend="xla",
+            frame=True, **params)
+        return stream.compress(data)
+
+    run()  # warm plans + calibrate on first-ever use
+    # enough runs for the tuner's candidate race to explore and settle,
+    # plus ``repeat`` exploitation runs of the measured winner
+    n_runs = repeat + tuner._EXPLORE_K * tuner._EXPLORE_RUNS
+    return min((run() for _ in range(n_runs)), key=lambda r: r.wall_time)
+
+
+def sweep_codec(method: str, params: dict, data: np.ndarray,
+                grid: dict, repeat: int) -> dict:
+    fixed = {}
+    serial_walls = []
+    for k in grid["n_chunks"]:
+        c = max(1, data.size // k)
+        for w in grid["windows"]:
+            wall = _fixed_wall(method, data, w, c, repeat, **params)
+            fixed[f"chunks={k},window={w}"] = wall
+            if w == 1:
+                serial_walls.append(wall)
+    best_key = min(fixed, key=fixed.get)
+    worst_key = max(fixed, key=fixed.get)
+
+    from repro.core import tuner
+
+    res = _auto_result(method, data, repeat, **params)
+
+    # the race is settled by now (enough runs above) — one more auto run
+    # reports the pinned winner's config
+    auto_stream = api.CompressorStream(
+        method, chunk_size="auto", window="auto", backend="xla",
+        frame=True, **params)
+    settled = auto_stream.compress(data)
+    tuned = settled.tuned or {}
+    chunk_elems = int(tuned.get("chunk_elems") or max(1, data.size // 8))
+
+    # The grid above only *finds* the best/worst fixed configs; the
+    # scored ratios are measured here with auto / best-fixed / serial
+    # runs interleaved — walls drift with machine load across a sweep,
+    # and interleaving keeps that drift symmetric:
+    #   * serial baseline at the tuner's OWN chunking scores the overlap
+    #     decision, independent of the chunk-size decision;
+    #   * the grid-best config scores the whole (chunk, window) choice.
+    k_best, w_best = (int(s.split("=")[1])
+                      for s in best_key.split(","))
+    best_stream = api.CompressorStream(
+        method, mode="fixed", c_fixed_elems=max(1, data.size // k_best),
+        window=w_best, backend="xla", frame=True, **params)
+    serial_stream = api.CompressorStream(
+        method, mode="fixed", c_fixed_elems=chunk_elems, window=1,
+        backend="xla", frame=True, **params)
+    auto_walls, best_pair_walls, serial_pair_walls = [], [], []
+    for _ in range(repeat + 6):
+        auto_walls.append(auto_stream.compress(data).wall_time)
+        best_pair_walls.append(best_stream.compress(data).wall_time)
+        serial_pair_walls.append(serial_stream.compress(data).wall_time)
+    auto_wall = min(auto_walls)
+    best_fixed_wall = min(best_pair_walls)
+    serial_same_chunk = min(serial_pair_walls)
+
+    # post-convergence prediction: every auto run fed its measured wall
+    # back via tuner.observe, so re-planning now yields the settled
+    # (empirical) estimate for this spec
+    final = tuner.plan_stream(
+        data.size, data.dtype.itemsize, method=method,
+        dtype=str(data.dtype), backend="xla", params=params)
+    pred = final.predicted_s if final.source == "calibrated" else None
+    best_auto = min(res.wall_time, settled.wall_time, auto_wall)
+    err = abs(pred - best_auto) / best_auto if pred else None
+
+    report = {
+        "raw_mb": data.nbytes / 1e6,
+        "fixed_walls_s": fixed,
+        "best_fixed": {"config": best_key, "wall_s": best_fixed_wall,
+                       "grid_wall_s": fixed[best_key]},
+        "worst_fixed": {"config": worst_key, "wall_s": fixed[worst_key]},
+        "serial_grid_best_s": min(serial_walls),
+        "serial_same_chunk_s": serial_same_chunk,
+        "auto": {
+            "chunk_elems": tuned.get("chunk_elems"),
+            "window": settled.window,
+            "chunks": len(settled.chunks),
+            "source": tuned.get("source", "unknown"),
+            "wall_s": auto_wall,
+            "predicted_s": pred,
+        },
+        "auto_vs_best_fixed": auto_wall / best_fixed_wall,
+        "auto_vs_worst_fixed": auto_wall / fixed[worst_key],
+        "auto_vs_serial": auto_wall / serial_same_chunk,
+        "prediction_error": err,
+    }
+    pe = f"{err:.1%}" if err is not None else "n/a"
+    Row(
+        f"tuner.{method}",
+        auto_wall * 1e6,
+        f"auto_vs_best={report['auto_vs_best_fixed']:.2f}x "
+        f"auto_vs_serial={report['auto_vs_serial']:.2f}x pred_err={pe} "
+        f"window={settled.window} chunks={len(settled.chunks)}",
+    ).emit()
+    return report
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small grid + CPU-sized data (CI)")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="write BENCH_tuner.json here")
+    args = ap.parse_args(argv)
+
+    grid = SMOKE_GRID if args.smoke else FULL_GRID
+    repeat = 3
+    n = 48 if args.smoke else 96
+    smooth = nyx_like(n)
+    noise = np.random.default_rng(0).normal(size=smooth.shape).astype(np.float32)
+
+    report = {"grid": {k: list(v) for k, v in grid.items()}, "codecs": {}}
+    for method, params, data in (
+        ("zfp", {"rate": 16}, smooth),
+        ("mgard", {"error_bound": 1e-2}, smooth),
+        ("huffman-bytes", {}, noise),
+    ):
+        report["codecs"][method] = sweep_codec(method, params, data, grid, repeat)
+
+    errs = [r["prediction_error"] for r in report["codecs"].values()
+            if r["prediction_error"] is not None]
+    report["summary"] = {
+        "auto_within_10pct_of_best": all(
+            r["auto_vs_best_fixed"] <= 1.10 for r in report["codecs"].values()
+        ),
+        "auto_never_worse_than_serial": all(
+            r["auto_vs_serial"] <= 1.05 for r in report["codecs"].values()
+        ),
+        "max_auto_vs_best_fixed": max(
+            r["auto_vs_best_fixed"] for r in report["codecs"].values()
+        ),
+        "max_prediction_error": max(errs) if errs else None,
+        "prediction_error_under_10pct": bool(errs) and max(errs) < 0.10,
+    }
+    if args.out:
+        args.out.write_text(json.dumps(report, indent=1))
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,10 @@
 #                                   p50/p99 + goodput at >=3 offered loads,
 #                                   batch fill ratio vs batch window
 #                                   -> BENCH_serving.json
+#   scripts/check.sh bench tuner    auto-tuner validation: auto vs best/worst
+#                                   fixed (chunk, window) configs per codec +
+#                                   predicted-vs-measured makespan error
+#                                   -> BENCH_tuner.json
 #   scripts/check.sh docs           execute every fenced ```python block in
 #                                   docs/*.md against the current API
 set -euo pipefail
@@ -39,6 +43,7 @@ if [[ "${1:-}" == "fast" ]]; then
     python -m pytest -x -q -m "not slow and not subprocess" \
       tests/test_conformance.py tests/test_pipeline.py tests/test_bitstream.py \
       tests/test_cmm.py tests/test_abstractions.py tests/test_api_portability.py \
+      tests/test_tuner.py \
       "$@"
   exit 0
 fi
@@ -60,6 +65,12 @@ if [[ "${1:-}" == "bench" ]]; then
     shift
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
       python -m benchmarks.serving_load --smoke --out BENCH_serving.json "$@"
+    exit 0
+  fi
+  if [[ "${1:-}" == "tuner" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+      python -m benchmarks.tuner_sweep --smoke --out BENCH_tuner.json "$@"
     exit 0
   fi
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -58,6 +58,11 @@ class CheckpointPolicy:
     mgard_eb: float = 1e-6
     lossless_small: int = 16384      # tensors below this many elems: lossless
     exact: bool = False              # force lossless everywhere
+    # float leaves at/above this many bytes go through the auto-tuned
+    # chunked CompressorStream (chunk_size="auto", window="auto"): the
+    # calibrated machine cost model picks the chunking/overlap per leaf,
+    # and the leaf's segment becomes a framed HPDS stream.  None disables.
+    stream_threshold: int | None = 8 << 20
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -83,6 +88,32 @@ def _method_for(arr: np.ndarray, policy: CheckpointPolicy) -> tuple[str, dict]:
 def _compress_leaf(arr: np.ndarray, policy: CheckpointPolicy) -> bytes:
     method, kw = _method_for(arr, policy)
     return api.compress_leaf(arr, method, **kw).to_bytes()
+
+
+def _should_stream(arr: np.ndarray, policy: CheckpointPolicy) -> bool:
+    if policy.stream_threshold is None or policy.exact:
+        return False
+    return arr.dtype.kind == "f" and arr.nbytes >= policy.stream_threshold
+
+
+def _stream_leaf(arr: np.ndarray, policy: CheckpointPolicy) -> tuple[bytes, dict]:
+    """Compress one large leaf through the auto-tuned chunked stream.
+
+    Runs *inline on the caller's thread* with a standalone (engine-free)
+    CompressorStream: ``save_async`` executes ``save`` on the engine's
+    single io worker, and a stream whose staging loop occupies an engine
+    lane while waiting on that same lane's serialize futures would
+    deadlock.  The standalone stream brings its own transient executor.
+    """
+    method, kw = _method_for(arr, policy)
+    stream = api.CompressorStream(
+        method, chunk_size="auto", window="auto", frame=True, **kw
+    )
+    res = stream.compress(arr)
+    info = {"window": res.window}
+    if res.tuned is not None:
+        info["tuned"] = res.tuned
+    return stream.to_bytes(res), info
 
 
 def _decompress_leaf(raw: bytes) -> np.ndarray:
@@ -122,8 +153,19 @@ class CheckpointManager:
         # large aligned positional writes flushed on the writer's own flush
         # thread, so leaf i+1's compression overlaps leaf i's disk write.
         # Restore preads exactly the segments it needs via the directory.
+        # Large float leaves bypass the one-shot path and go through the
+        # auto-tuned chunked stream *inline on this thread* (see
+        # ``_stream_leaf`` for why they must not occupy an engine lane);
+        # everything else fans out across the engine as before, so small
+        # leaves still compress while a streamed leaf is in flight.
         subs = [
-            (key, arr, self.engine.submit(_compress_leaf, arr, self.policy))
+            (
+                key,
+                arr,
+                None
+                if _should_stream(arr, self.policy)
+                else self.engine.submit(_compress_leaf, arr, self.policy),
+            )
             for key, arr in flat.items()
         ]
         used: set[str] = set()
@@ -131,7 +173,11 @@ class CheckpointManager:
             step_dir / _AGGREGATE_FILE, meta={"step": step}
         ) as writer:
             for key, arr, sub in subs:
-                blob = sub.result()
+                stream_info = None
+                if sub is None:
+                    blob, stream_info = _stream_leaf(arr, self.policy)
+                else:
+                    blob = sub.result()
                 # sanitize separators and dedupe: distinct keys must never
                 # share a segment — restore reads the key->segment mapping
                 # from the manifest, so any injective name works
@@ -142,9 +188,12 @@ class CheckpointManager:
                     i += 1
                 used.add(name)
                 writer.add(name, blob)
-                manifest["leaves"][key] = {"segment": name,
-                                           "bytes": len(blob),
-                                           "raw": arr.nbytes}
+                entry = {"segment": name, "bytes": len(blob),
+                         "raw": arr.nbytes}
+                if stream_info is not None:
+                    entry["stream"] = True
+                    entry.update(stream_info)
+                manifest["leaves"][key] = entry
                 raw_total += arr.nbytes
                 comp_total += len(blob)
         io_stats = dict(writer.stats)  # after close(): counts the final flush
@@ -238,7 +287,14 @@ class CheckpointManager:
                     raw = reader.read(info["segment"])
                 else:  # pre-aggregation layout: one file per leaf
                     raw = (step_dir / info["file"]).read_bytes()
-                flat[key] = _decompress_leaf(raw)
+                if info.get("stream"):
+                    flat[key] = np.asarray(
+                        api.CompressorStream.decompress(
+                            api.CompressorStream.from_bytes(raw)
+                        )
+                    )
+                else:
+                    flat[key] = _decompress_leaf(raw)
         finally:
             if reader is not None:
                 reader.close()

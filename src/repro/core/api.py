@@ -381,6 +381,17 @@ class CompressorStream:
     exactly the chunks it needs.  Passing ``engine=`` schedules chunks
     round-robin across the engine's ``data``-axis devices and runs the
     lanes on the engine's executor.
+
+    ``chunk_size="auto"`` and/or ``window="auto"`` hand the decision to
+    the auto-tuner (``core/tuner.py``): per payload, the calibrated
+    machine cost model picks the (chunk, window) with the smallest
+    predicted makespan — degrading to ``window=1`` whenever pipelining
+    can't pay for its staging overhead.  The resolved values feed the
+    exact same schedule/spec path as explicit settings, so auto streams
+    are bit-identical to explicitly configured ones and share their CMM
+    plans; the decision is observable at ``result.tuned``.  An explicit
+    integer ``chunk_size`` (elements) is shorthand for ``mode="fixed",
+    c_fixed_elems=chunk_size``.
     """
 
     def __init__(
@@ -395,7 +406,8 @@ class CompressorStream:
         theta=None,
         engine: Any = None,
         backend: str | None = None,
-        window: int = 2,
+        window: int | str = 2,
+        chunk_size: int | str | None = None,
         frame: bool = False,
         **params: Any,
     ):
@@ -404,13 +416,14 @@ class CompressorStream:
         if backend is None and engine is not None:
             backend = engine.backend
         self.backend = backend or adapters.AUTO
-        self.window = max(1, int(window))
+        self.window = window if window == "auto" else max(1, int(window))
         # frame=True moves wire serialization (container v2 framing + crc32)
         # onto the io lane too: each chunk's byte frame is produced while
         # the next chunk computes, and to_bytes/to_file reuse it
         self.frame = bool(frame)
         self._slot_ws: dict[tuple, tuple] = {}
         self._slot_lock = threading.Lock()
+        auto = chunk_size == "auto" or window == "auto"
         self.pipeline = pl.ChunkedPipeline(
             mode=mode,
             c_init_elems=c_init_elems,
@@ -422,7 +435,21 @@ class CompressorStream:
             compute_fn=self._compute_chunk,
             finish_fn=self._finish_chunk,
             executor=engine.executor if engine is not None else None,
-            window=self.window,
+            window=window,
+            chunk_size=chunk_size,
+            tuner=self._tuned_plan if auto else None,
+        )
+
+    def _tuned_plan(self, total_elems: int, itemsize: int, dtype: str,
+                    chunk_elems: int | None):
+        """Tuner binding: this stream's codec/backend/params, the payload's
+        size/dtype.  Called by the pipeline when resolving ``auto``."""
+        from . import tuner as tuner_mod
+
+        return tuner_mod.plan_stream(
+            total_elems, itemsize, method=self.method, dtype=dtype,
+            backend=self.backend, chunk_elems=chunk_elems,
+            params=self.params,
         )
 
     # -- two-phase chunk encode ---------------------------------------------
@@ -462,7 +489,7 @@ class CompressorStream:
             # Evicting an entry an in-flight chunk still holds is safe:
             # the chunk owns its dict reference exclusively; a later chunk
             # simply rebuilds a fresh copy.
-            while len(self._slot_ws) >= 4 * self.window:
+            while len(self._slot_ws) >= 4 * max(1, self.pipeline.window):
                 self._slot_ws.pop(next(iter(self._slot_ws)))
             self._slot_ws[cache_key] = (plan, ws)
         return ws

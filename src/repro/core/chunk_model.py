@@ -49,11 +49,34 @@ class PhiModel:
 def fit_phi(
     chunk_sizes: np.ndarray, throughputs: np.ndarray, f: float = 0.1
 ) -> PhiModel:
-    """Fit Φ from profile points (paper §V-C fitting procedure)."""
-    order = np.argsort(chunk_sizes)
-    c = np.asarray(chunk_sizes, np.float64)[order]
-    p = np.asarray(throughputs, np.float64)[order]
+    """Fit Φ from profile points (paper §V-C fitting procedure).
+
+    Degenerate sweeps fit gracefully instead of raising: a single point or
+    an all-saturated (flat) profile yields the constant model Φ ≡ γ; a
+    noisy profile whose least-squares slope comes out non-positive is
+    likewise treated as saturated (the linear segment carries no signal).
+    An all-unsaturated (still-rising) profile fits the linear segment over
+    every point and places ``c_threshold`` at the largest observed chunk.
+    Empty or non-finite/non-positive profiles raise ``ValueError``.
+    """
+    c = np.atleast_1d(np.asarray(chunk_sizes, np.float64))
+    p = np.atleast_1d(np.asarray(throughputs, np.float64))
+    if c.size == 0:
+        raise ValueError("fit_phi: need at least one (chunk_size, throughput) "
+                         "profile point, got an empty sweep")
+    if c.size != p.size:
+        raise ValueError(f"fit_phi: {c.size} chunk sizes vs {p.size} "
+                         "throughputs — profile arrays must align")
+    if not (np.all(np.isfinite(c)) and np.all(np.isfinite(p))):
+        raise ValueError("fit_phi: profile points must be finite")
+    if np.any(c <= 0) or np.any(p <= 0):
+        raise ValueError("fit_phi: chunk sizes and throughputs must be > 0")
+    order = np.argsort(c)
+    c, p = c[order], p[order]
     gamma = float(p[-1])
+    if c.size == 1:
+        return PhiModel(alpha=0.0, beta0=gamma, gamma=gamma,
+                        c_threshold=float(c[0]))
     # walk down from the largest chunk until throughput < f·gamma
     cut = 0
     for i in range(len(c) - 1, -1, -1):
@@ -65,13 +88,46 @@ def fit_phi(
         alpha, beta0 = np.polyfit(lin_c, lin_p, 1)
     else:  # degenerate profile: flat model
         alpha, beta0 = 0.0, gamma
-    if alpha > 0:
-        c_threshold = (gamma - beta0) / alpha
-    else:
-        c_threshold = float(c[0])
-    c_threshold = float(np.clip(c_threshold, c[0], c[-1]))
+    if not np.isfinite(alpha) or alpha <= 0:
+        # saturated everywhere (or noise-dominated slope): constant Φ ≡ γ
+        return PhiModel(alpha=0.0, beta0=gamma, gamma=gamma,
+                        c_threshold=float(c[0]))
+    c_threshold = float(np.clip((gamma - beta0) / alpha, c[0], c[-1]))
     return PhiModel(alpha=float(alpha), beta0=float(beta0), gamma=gamma,
                     c_threshold=c_threshold)
+
+
+@dataclass(frozen=True)
+class AffineCost:
+    """Affine stage-cost model t(C) = t₀ + C/bps.
+
+    The fixed term t₀ captures per-call latency (dispatch, syscall, GIL
+    handoff) that dominates tiny chunks — exactly the regime where the
+    auto-tuner must notice that pipelining cannot pay for itself.
+    """
+
+    t0: float    # fixed seconds per call
+    bps: float   # marginal throughput, bytes/s
+
+    def time_for(self, nbytes: float) -> float:
+        return self.t0 + float(nbytes) / self.bps
+
+
+def fit_affine(sizes_bytes: np.ndarray, times_s: np.ndarray) -> AffineCost:
+    """Least-squares fit of t = t₀ + C/bps over measured (C, t) points."""
+    c = np.atleast_1d(np.asarray(sizes_bytes, np.float64))
+    t = np.atleast_1d(np.asarray(times_s, np.float64))
+    if c.size == 0 or c.size != t.size:
+        raise ValueError("fit_affine: need matched, non-empty size/time arrays")
+    if np.any(c <= 0) or np.any(t <= 0) or not np.all(np.isfinite(t)):
+        raise ValueError("fit_affine: sizes and times must be finite and > 0")
+    if c.size == 1 or np.ptp(c) == 0:
+        return AffineCost(t0=0.0, bps=float(c[0] / t[0]))
+    slope, t0 = np.polyfit(c, t, 1)
+    if not np.isfinite(slope) or slope <= 0:
+        # noise-dominated: fall back to the largest point's secant rate
+        return AffineCost(t0=0.0, bps=float(c[-1] / t[-1]))
+    return AffineCost(t0=float(max(t0, 0.0)), bps=float(1.0 / slope))
 
 
 @dataclass(frozen=True)

@@ -146,6 +146,23 @@ class ExecutionEngine:
 
         return self.executor.submit(lambda: api.decode(c), device=device)
 
+    def stream(self, method: str = "zfp", **kwargs: Any):
+        """A :class:`~repro.core.api.CompressorStream` bound to this engine.
+
+        The stream's chunks fan out round-robin over the engine's
+        ``data``-axis devices on the engine's executor lanes.  Defaults to
+        the auto-tuned schedule (``chunk_size="auto", window="auto"`` —
+        the calibrated machine cost model picks both); pass explicit
+        values to override.  NB: build streams from caller threads, not
+        from inside engine lane tasks — the stream's staging loop must not
+        occupy the lane its own chunks need.
+        """
+        from . import api  # runtime import: api ↔ engine are peer layers
+
+        kwargs.setdefault("chunk_size", "auto")
+        kwargs.setdefault("window", "auto")
+        return api.CompressorStream(method, engine=self, **kwargs)
+
     def submit(self, fn: Callable, /, *args: Any, **kwargs: Any) -> Submission:
         """Raw task submission (``lane="io"`` for orchestration work)."""
         return self.executor.submit(fn, *args, **kwargs)

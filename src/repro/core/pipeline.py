@@ -129,11 +129,21 @@ def build_reduction_dag(
     d2h_time: Callable[[int], float],
     serialize_time: Callable[[int], float],
     two_buffer_dep: bool = True,
+    window: int | None = None,
 ) -> list[Task]:
-    """Reduction pipeline DAG of paper Fig. 9 (top)."""
+    """Reduction pipeline DAG of paper Fig. 9 (top).
+
+    ``window`` generalizes the two-buffer anti-dependency to an arbitrary
+    in-flight bound: ``I_i`` waits for ``S_{i-window}`` (``window=2`` is
+    the paper's (X+2)%3 rule, ``window=1`` the fully serial schedule).
+    ``None`` keeps the legacy ``two_buffer_dep`` behaviour.
+    """
+    if window is None:
+        window = 2 if two_buffer_dep else 0
+    window = int(window)
     tasks: list[Task] = []
     for i, c in enumerate(chunk_sizes):
-        deps_i = (f"S{i-2}",) if (two_buffer_dep and i >= 2) else ()
+        deps_i = (f"S{i-window}",) if (window > 0 and i >= window) else ()
         tasks.append(Task(f"I{i}", H2D, h2d_time(c), deps_i))
         tasks.append(Task(f"R{i}", COMPUTE, compute_time(c), (f"I{i}",)))
         tasks.append(Task(f"O{i}", D2H, d2h_time(c), (f"R{i}",)))
@@ -280,6 +290,8 @@ class ChunkedResult:
     timings: list[ChunkTiming] = field(default_factory=list)
     wall_time: float = 0.0
     max_in_flight: int = 0       # peak staged-but-unserialized chunks
+    window: int = 0              # resolved in-flight window of this run
+    tuned: dict | None = None    # TunedPlan.to_dict() when auto-resolved
 
     def nbytes(self) -> int:
         return sum(c.nbytes() for c in self.chunks)
@@ -336,6 +348,17 @@ class ChunkedPipeline:
 
     ``window=1`` degrades to the fully serial schedule — the baseline the
     overlap benchmark and the bit-identity tests compare against.
+
+    ``chunk_size="auto"`` / ``window="auto"`` defer the decision to the
+    auto-tuner (``core/tuner.py``): resolution happens at :meth:`run`
+    time (it needs the payload size and dtype), through the injected
+    ``tuner`` callable — ``tuner(total_elems, itemsize, dtype_str,
+    chunk_elems_or_None) -> TunedPlan`` — or the calibration-free
+    heuristic when none is given.  Auto resolution only picks *values*;
+    the schedule, specs, and bytes are identical to passing the resolved
+    numbers explicitly.  Regardless of the tuner's answer, an auto window
+    degrades to 1 whenever the run has ≤ 2 chunks (pipelining cannot
+    amortize its staging overhead — the small-payload guard).
     """
 
     def __init__(
@@ -352,7 +375,9 @@ class ChunkedPipeline:
         compute_fn: Callable | None = None,
         finish_fn: Callable | None = None,
         executor=None,
-        window: int = 2,
+        window: int | str = 2,
+        chunk_size: int | str | None = None,
+        tuner: Callable | None = None,
     ):
         if compress_fn is None and compute_fn is None:
             raise ValueError("need compress_fn or compute_fn/finish_fn")
@@ -369,7 +394,46 @@ class ChunkedPipeline:
         # data-axis fan-out); default is the single-device HDEM schedule.
         self.devices = list(devices) if devices else None
         self.executor = executor
-        self.window = max(1, int(window))
+        self.auto_chunk = chunk_size == "auto"
+        if chunk_size is not None and not self.auto_chunk:
+            self.mode = "fixed"
+            self.c_fixed = int(chunk_size)
+        self.auto_window = window == "auto"
+        self.window = 2 if self.auto_window else max(1, int(window))
+        self.tuner = tuner
+        self.tuned = None  # TunedPlan of the most recent auto resolution
+
+    # -- auto (tuner) resolution --------------------------------------------
+
+    def _resolve_auto(self, data: np.ndarray) -> None:
+        """Resolve ``auto`` chunk/window for this payload via the tuner."""
+        from . import tuner as tuner_mod
+
+        fixed_elems = (
+            None if self.auto_chunk
+            else (int(self.c_fixed) if self.mode == "fixed" else None)
+        )
+        plan = None
+        if self.tuner is not None:
+            try:
+                plan = self.tuner(
+                    int(data.size), int(data.dtype.itemsize),
+                    str(data.dtype), fixed_elems,
+                )
+            except Exception:
+                plan = None
+        if plan is None:
+            plan = tuner_mod.heuristic_plan(
+                int(data.size), int(data.dtype.itemsize),
+                chunk_elems=fixed_elems, c_limit_elems=self.c_limit,
+                default_window=self.window, dtype=str(data.dtype),
+            )
+        if self.auto_chunk:
+            self.mode = "fixed"
+            self.c_fixed = int(plan.chunk_elems)
+        if self.auto_window:
+            self.window = max(1, int(plan.window))
+        self.tuned = plan
 
     def _schedule(self, total: int) -> list[int]:
         if self.mode == "none":
@@ -423,7 +487,16 @@ class ChunkedPipeline:
 
         data = np.asarray(data)
         axis = int(np.argmax(data.shape))  # paper: LargestDim(u)
+        if self.auto_chunk or self.auto_window:
+            self._resolve_auto(data)
         rows = self._row_schedule(data, axis)
+        if self.auto_window and len(rows) <= 2 and (
+                self.tuned is None or self.tuned.source != "calibrated"):
+            # heuristic small-payload guard: without a calibration, assume
+            # ≤2 chunks cannot amortize pipelining.  A calibrated plan has
+            # already priced the fixed stream/chunk costs (and may be
+            # racing window=2 at 2 chunks), so it decides for itself.
+            self.window = 1
         ring = self.devices or [jax.devices()[0]]
         compute_fn = self.compute_fn or self._legacy_compute
         finish_fn = self.finish_fn or self._legacy_finish
@@ -512,14 +585,28 @@ class ChunkedPipeline:
                 h2d=dur("h2d"), compute=dur("compute"), d2h=dur("serialize"),
                 serialize=dur("serialize"), nbytes=rec["nbytes"], spans=sp,
             ))
+        wall = now()
+        if self.tuned is not None:
+            # feed the measured wall back into the tuner's residual so the
+            # next prediction for this stream spec starts from reality
+            try:
+                from . import tuner as tuner_mod
+
+                tuner_mod.observe(
+                    self.tuned, int(data.size), int(data.dtype.itemsize), wall
+                )
+            except Exception:
+                pass
         return ChunkedResult(
             chunks=chunks,
             boundaries=boundaries,
             axis=axis,
             shape=tuple(data.shape),
             timings=timings,
-            wall_time=now(),
+            wall_time=wall,
             max_in_flight=state["max"],
+            window=self.window,
+            tuned=self.tuned.to_dict() if self.tuned is not None else None,
         )
 
 

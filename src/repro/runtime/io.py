@@ -350,3 +350,37 @@ def has_directory(path: str | Path) -> bool:
             return f.read(len(TRAILER_MAGIC)) == TRAILER_MAGIC
     except OSError:
         return False
+
+
+def serialization_probe(
+    nbytes: int,
+    *,
+    repeat: int = 3,
+    clock=None,
+) -> float:
+    """Measure the host serialization cost the writer pays per segment.
+
+    Times exactly the per-``add`` host work of :class:`AggregatedWriter` —
+    a crc32 pass plus a copy into the (aligned) coalescing buffer — over a
+    ``nbytes`` payload, best-of-``repeat``.  The calibration layer
+    (``runtime/calibrate.py``) uses this to separate wire-framing cost
+    from codec D2H cost when fitting the io-lane model.
+
+    ``clock`` defaults to ``time.perf_counter``; tests inject a stub.
+    Returns seconds (≥ 1 ns to keep downstream throughput fits finite).
+    """
+    import time as _time
+
+    clock = clock or _time.perf_counter
+    payload = np.random.default_rng(0).integers(
+        0, 256, size=max(int(nbytes), 1), dtype=np.uint8
+    ).tobytes()
+    buf = bytearray(align_up(len(payload), DEFAULT_ALIGN))
+    best = float("inf")
+    for _ in range(max(1, int(repeat))):
+        t0 = clock()
+        zlib.crc32(payload)
+        buf[: len(payload)] = payload
+        t1 = clock()
+        best = min(best, t1 - t0)
+    return max(best, 1e-9)

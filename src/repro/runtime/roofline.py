@@ -10,6 +10,15 @@ per-chip rates directly; the brief's "/(chips × rate)" form is equivalent.
 
 MODEL_FLOPS uses 6·N·D (dense train), 6·N_active·D (MoE), and matching
 analytic forms for prefill/decode (incl. attention and KV-read bytes).
+
+The measured-machine section at the bottom (:func:`simulate_stream`,
+:func:`stream_lane_seconds`) replaces these *datasheet* constants with
+*calibrated* per-stage cost functions from ``runtime/calibrate.py``: it
+replays the lane-overlapped ``ChunkedPipeline`` schedule (main-thread H2D
+staging, compute lane, io lane, in-flight ``window`` anti-dependency)
+through the event-driven ``TimelineSimulator`` to predict a stream's
+makespan for a candidate (chunk size, window) — the solver substrate of
+``core/tuner.py``.
 """
 
 from __future__ import annotations
@@ -170,6 +179,61 @@ def analytic_memory_bytes(
     active_frac = active_params(cfg, counts) / n_total
     state = _decode_state_bytes(cfg, b, s) / chips
     return p_local * active_frac + 2.0 * state
+
+
+# ---------------------------------------------------------------------------
+# measured-machine stream model (HPDR §V-C auto-tuner substrate)
+# ---------------------------------------------------------------------------
+
+
+def simulate_stream(
+    chunk_sizes,
+    h2d_time,
+    compute_time,
+    serialize_time,
+    window: int,
+    window_overhead_s: float = 0.0,
+):
+    """Predict the lane-overlapped ``ChunkedPipeline`` makespan.
+
+    Mirrors the *real* scheduler exactly (three lanes, not the Fig. 9
+    four-task form): chunk *i* is ``I_i`` (main-thread slice +
+    ``device_put``) → ``R_i`` (compute lane) → ``S_i`` (io lane: D2H fetch
+    + container serialization), with the bounded-window anti-dependency
+    ``I_i ← S_{i-window}``.  ``window=1`` therefore reproduces the fully
+    serial schedule.  ``window_overhead_s`` is the calibrated per-chunk
+    staging/scheduling cost the pipelined schedule pays over serial
+    (thread handoff, future chaining); it is charged on the staging task
+    only when ``window > 1``.
+
+    ``h2d_time``/``compute_time``/``serialize_time`` map chunk bytes →
+    seconds (e.g. ``AffineCost.time_for`` / ``PhiModel.time_for``).
+    Returns ``(makespan_seconds, schedule_dict)``.
+    """
+    from ..core import pipeline as pl  # lazy: keep layering acyclic
+
+    window = max(1, int(window))
+    ov = float(window_overhead_s) if window > 1 else 0.0
+    tasks = []
+    for i, c in enumerate(chunk_sizes):
+        deps = (f"S{i - window}",) if i >= window else ()
+        tasks.append(pl.Task(f"I{i}", pl.H2D, h2d_time(c) + ov, deps))
+        tasks.append(pl.Task(f"R{i}", pl.COMPUTE, compute_time(c), (f"I{i}",)))
+        tasks.append(pl.Task(f"S{i}", pl.D2H, serialize_time(c), (f"R{i}",)))
+    sched = pl.TimelineSimulator().run(tasks)
+    return pl.TimelineSimulator.makespan(sched), sched
+
+
+def stream_lane_seconds(
+    chunk_sizes, h2d_time, compute_time, serialize_time
+) -> dict:
+    """Per-lane serial-sum seconds for a chunk schedule (the no-overlap
+    bound the measured ``ChunkedResult.lane_seconds()`` is compared to)."""
+    return {
+        "h2d": sum(h2d_time(c) for c in chunk_sizes),
+        "compute": sum(compute_time(c) for c in chunk_sizes),
+        "serialize": sum(serialize_time(c) for c in chunk_sizes),
+    }
 
 
 def _decode_state_bytes(cfg: ModelConfig, batch: int, s: int) -> float:

@@ -21,6 +21,12 @@ request layer that restores aggregation *across* clients:
     to the direct API because stacked and per-leaf execution agree
     byte-for-byte; when a bucket can't fill (singleton) or specs are
     heterogeneous, jobs degrade gracefully to per-leaf dispatch.
+  * **Auto-tuned streams** — :meth:`ReductionService.compress_stream`
+    routes one large array through the chunked ``CompressorStream`` with
+    ``chunk_size="auto", window="auto"``: the dispatch path consults the
+    calibrated chunk/window tuner (``core/tuner.py``) per payload, and the
+    chunks ride the engine's compute/io lanes while staging runs on a
+    dedicated stream pool.
   * **Per-tenant quotas** — parked KV sessions ride a tenant-scoped
     :class:`~repro.serving.engine.KVPageStore`: each tenant's resident
     bytes are bounded independently (LRU spill within the tenant), so one
@@ -46,12 +52,13 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from concurrent.futures import Future
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import api
 from ..core import engine as engine_mod
@@ -73,7 +80,7 @@ class ServiceOverloaded(RuntimeError):
 class _Request:
     """One admitted client request, resolved through ``future``."""
 
-    kind: str                      # "compress" | "decompress" | "park_kv"
+    kind: str              # "compress" | "decompress" | "park_kv" | "stream"
     tenant: str
     future: Future
     t_enqueue: float
@@ -84,6 +91,8 @@ class _Request:
     like: Any = None
     session_id: str | None = None
     sep: str = "/"
+    method: str | None = None      # stream: codec name
+    stream_kwargs: dict = field(default_factory=dict)
     # dispatcher bookkeeping
     order: list = field(default_factory=list)
     raw: dict = field(default_factory=dict)
@@ -120,6 +129,8 @@ class ServiceStats:
     decode_stacked_buckets: int
     decode_stacked_leaves: int
     decode_fallback_leaves: int
+    stream_requests: int
+    stream_serial_degrades: int    # auto-tuned streams degraded to window=1
     per_tenant: dict[str, dict[str, Any]]
     executor_lanes: dict[str, dict[str, float]]
     kv: dict[str, Any]
@@ -202,8 +213,16 @@ class ReductionService:
             "coalesced_requests": 0, "fallback_leaves": 0,
             "bucket_requests_sum": 0, "decode_stacked_buckets": 0,
             "decode_stacked_leaves": 0, "decode_fallback_leaves": 0,
+            "stream_requests": 0, "stream_serial_degrades": 0,
         }
         self._tenants: dict[str, dict[str, Any]] = {}
+        # chunked single-array streams run on their own small pool: each
+        # stream's staging loop lives on a pool thread while its chunk
+        # compute/serialize tasks ride the engine's lanes — staging must
+        # never occupy a lane its own chunks are queued behind
+        self._stream_pool = ThreadPoolExecutor(
+            max_workers=2, thread_name_prefix="hpdr-service-stream"
+        )
         self._thread = threading.Thread(
             target=self._loop, name="hpdr-service-dispatch", daemon=True
         )
@@ -308,6 +327,46 @@ class ReductionService:
                    timeout=None):
         return self.submit_decompress(
             comp, like, tenant=tenant, sep=sep, timeout=timeout
+        ).result()
+
+    def submit_compress_stream(
+        self,
+        data: Any,
+        method: str = "zfp",
+        *,
+        tenant: str = _DEFAULT_TENANT,
+        chunk_size: int | str = "auto",
+        window: int | str = "auto",
+        timeout: float | None = None,
+        **params: Any,
+    ) -> Submission:
+        """Admit a chunked-stream compress of one large array.
+
+        The dispatch path consults the auto-tuner: with the default
+        ``chunk_size="auto", window="auto"`` the calibrated machine cost
+        model picks the chunking and in-flight window per payload
+        (degrading to the serial schedule when overlap can't pay), and the
+        chunks ride the engine's compute/io lanes.  The future resolves to
+        ``(stream_bytes, info)`` — a framed ``HPDS`` stream (decode with
+        :meth:`repro.core.api.CompressorStream.from_bytes`) plus the
+        tuner's decision and measured wall/ratio.  Bit-identical to an
+        explicitly configured :class:`CompressorStream` with the same
+        resolved settings.
+        """
+        req = _Request(
+            kind="stream", tenant=str(tenant), future=Future(),
+            t_enqueue=time.monotonic(), tree=data, method=str(method),
+            stream_kwargs={"chunk_size": chunk_size, "window": window,
+                           **params},
+        )
+        return self._submit(req, timeout)
+
+    def compress_stream(self, data, method="zfp", *, tenant=_DEFAULT_TENANT,
+                        chunk_size="auto", window="auto", timeout=None,
+                        **params):
+        return self.submit_compress_stream(
+            data, method, tenant=tenant, chunk_size=chunk_size,
+            window=window, timeout=timeout, **params,
         ).result()
 
     def submit_park_kv(
@@ -422,6 +481,10 @@ class ReductionService:
                         decode_groups.setdefault(group, []).extend(
                             (req, key, c) for key, c in items
                         )
+                elif req.kind == "stream":
+                    # off the dispatcher thread: the stream's staging loop
+                    # blocks on its in-flight window
+                    self._stream_pool.submit(self._run_stream, req)
                 else:  # park_kv
                     sub = self.kv.park_async(
                         req.session_id, req.tree, tenant=req.tenant
@@ -468,6 +531,34 @@ class ReductionService:
                     sub.add_done_callback(
                         lambda s, r=req, k=key: self._on_leaf(r, k, s)
                     )
+
+    def _run_stream(self, req: _Request) -> None:
+        """One auto-tuned CompressorStream run on a stream-pool thread."""
+        try:
+            data = np.asarray(req.tree)
+            stream = api.CompressorStream(
+                req.method, engine=self.engine, frame=True,
+                **req.stream_kwargs,
+            )
+            res = stream.compress(data)
+            blob = api.CompressorStream.to_bytes(res)
+            info = {
+                "tuned": res.tuned,
+                "window": res.window,
+                "chunks": len(res.chunks),
+                "wall_s": res.wall_time,
+                "raw_bytes": int(data.nbytes),
+                "stream_bytes": len(blob),
+                "ratio": data.nbytes / max(len(blob), 1),
+            }
+            with self._mlock:
+                self._m["stream_requests"] += 1
+                if res.tuned is not None and res.window == 1:
+                    self._m["stream_serial_degrades"] += 1
+                self._tenants[req.tenant]["raw_bytes"] += int(data.nbytes)
+            self._resolve(req, (blob, info))
+        except Exception as e:
+            self._fail(req, e)
 
     def _note_stacked(self, n_leaves: int, reqs, *, encode: bool) -> None:
         reqs = list(reqs)
@@ -629,6 +720,8 @@ class ReductionService:
             decode_stacked_buckets=m["decode_stacked_buckets"],
             decode_stacked_leaves=m["decode_stacked_leaves"],
             decode_fallback_leaves=m["decode_fallback_leaves"],
+            stream_requests=m["stream_requests"],
+            stream_serial_degrades=m["stream_serial_degrades"],
             per_tenant=tenants,
             executor_lanes=lanes,
             kv=kv_stats,
@@ -655,6 +748,7 @@ class ReductionService:
                     if remaining <= 0:
                         break
                 self._cond.wait(remaining)
+        self._stream_pool.shutdown(wait=True)
 
     def __enter__(self) -> "ReductionService":
         return self

@@ -1,0 +1,565 @@
+"""Auto-tuner tests: cost-model fits, calibration persistence, tuning.
+
+Covers the PR-7 acceptance criteria:
+
+  * ``fit_phi`` / ``fit_affine`` edge cases (degenerate sweeps, noise,
+    saturated/unsaturated profiles, invalid inputs);
+  * stub-clock calibration on the fast tier (deterministic, sub-second)
+    with in-process and cross-process (``@subprocess``) persistence —
+    a warm store performs ZERO measurement sweeps (``SWEEPS_RUN``);
+  * tuner decisions against synthetic calibrations (overlap wins on big
+    streams, serial degrade on small/overhead-dominated ones);
+  * ``simulate_stream`` invariants (window=1 == serial lane sum);
+  * CMM plan-key canonicalisation: ``chunk_size="auto"`` resolving to N
+    hits the SAME cached plans as an explicit ``chunk_size=N``;
+  * the small-payload regression: tiny streams auto-degrade to window=1
+    and never lose to the serial schedule;
+  * auto/explicit bit-identity end-to-end (stream, service, checkpoint).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import api, chunk_model as cm, tuner
+from repro.core.context import GLOBAL_CMM
+from repro.runtime import calibrate, roofline
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def cal_dir(tmp_path):
+    """Isolate calibration persistence in a per-test directory."""
+    calibrate.set_calibration_dir(tmp_path)
+    yield tmp_path
+    calibrate.set_calibration_dir(None)
+
+
+def _synthetic_cal(method="zfp", dtype="float32", *, gamma=2e9,
+                   h2d_t0=1e-5, ser_t0=2e-5) -> calibrate.MethodCalibration:
+    phi = cm.PhiModel(alpha=gamma / (1 << 20), beta0=gamma * 0.05,
+                      gamma=gamma, c_threshold=1 << 20)
+    return calibrate.MethodCalibration(
+        method=method, dtype=dtype, phi=phi,
+        h2d=cm.AffineCost(t0=h2d_t0, bps=5e9),
+        serialize=cm.AffineCost(t0=ser_t0, bps=3e9),
+        output_fraction=0.5,
+    )
+
+
+def _seed_store(method="zfp", dtype="float32", **kw):
+    """Inject a synthetic calibration so no measurement sweep ever runs."""
+    store = calibrate.load_store(None)
+    mc = _synthetic_cal(method, dtype, **kw)
+    store.methods[calibrate.method_key(method, dtype)] = mc
+    if store.window_overhead_s is None:
+        store.window_overhead_s = 1e-5
+    if store.host_frame_bps is None:
+        store.host_frame_bps = 1e9
+    return mc
+
+
+# ---------------------------------------------------------------------------
+# fit_phi edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_fit_phi_empty_raises():
+    with pytest.raises(ValueError, match="empty sweep"):
+        cm.fit_phi(np.array([]), np.array([]))
+
+
+def test_fit_phi_mismatched_raises():
+    with pytest.raises(ValueError, match="must align"):
+        cm.fit_phi(np.array([1.0, 2.0]), np.array([1.0]))
+
+
+def test_fit_phi_nonfinite_and_nonpositive_raise():
+    with pytest.raises(ValueError, match="finite"):
+        cm.fit_phi(np.array([1.0, np.nan]), np.array([1.0, 2.0]))
+    with pytest.raises(ValueError, match="> 0"):
+        cm.fit_phi(np.array([1.0, 2.0]), np.array([1.0, -2.0]))
+
+
+def test_fit_phi_single_point_flat_model():
+    phi = cm.fit_phi(np.array([4096.0]), np.array([1e8]))
+    assert phi.alpha == 0.0 and phi.gamma == 1e8
+    assert phi(1) == pytest.approx(1e8)
+    assert phi(1 << 30) == pytest.approx(1e8)
+
+
+def test_fit_phi_two_points_fits_line():
+    phi = cm.fit_phi(np.array([1e3, 2e3]), np.array([1e6, 2e6]))
+    assert phi.alpha > 0
+    assert phi(1.5e3) == pytest.approx(1.5e6, rel=1e-6)
+
+
+def test_fit_phi_all_saturated_profile():
+    c = np.array([1e4, 1e5, 1e6, 1e7])
+    p = np.full(4, 3e9)
+    phi = cm.fit_phi(c, p)
+    assert phi.alpha == 0.0
+    for x in (1e3, 1e6, 1e9):
+        assert phi(x) == pytest.approx(3e9)
+
+
+def test_fit_phi_all_unsaturated_profile():
+    # still rising at the largest chunk: knee placed at the sweep edge
+    c = np.array([1e4, 1e5, 1e6, 1e7])
+    p = 10.0 * c + 1e5
+    phi = cm.fit_phi(c, p)
+    assert phi.alpha == pytest.approx(10.0, rel=1e-3)
+    assert phi.c_threshold == pytest.approx(1e7)
+
+
+def test_fit_phi_noisy_nonmonotone_still_valid():
+    rng = np.random.default_rng(7)
+    c = np.array([1e4, 3e4, 1e5, 3e5, 1e6])
+    p = np.abs(1e9 + 5e8 * rng.standard_normal(5)) + 1.0
+    phi = cm.fit_phi(c, p)
+    assert np.isfinite(phi.gamma) and phi.gamma > 0
+    assert np.all(np.isfinite(phi(c))) and np.all(phi(c) > 0)
+    assert phi.time_for(1e6) > 0
+
+
+# ---------------------------------------------------------------------------
+# fit_affine
+# ---------------------------------------------------------------------------
+
+
+def test_fit_affine_recovers_exact_model():
+    truth = cm.AffineCost(t0=2e-4, bps=1e9)
+    c = np.array([1e4, 1e5, 1e6, 1e7])
+    t = np.array([truth.time_for(x) for x in c])
+    fit = cm.fit_affine(c, t)
+    assert fit.t0 == pytest.approx(2e-4, rel=1e-6)
+    assert fit.bps == pytest.approx(1e9, rel=1e-6)
+
+
+def test_fit_affine_single_point_secant():
+    fit = cm.fit_affine(np.array([1e6]), np.array([1e-3]))
+    assert fit.t0 == 0.0 and fit.bps == pytest.approx(1e9)
+
+
+def test_fit_affine_negative_slope_falls_back():
+    fit = cm.fit_affine(np.array([1e4, 1e6]), np.array([2e-3, 1e-3]))
+    assert fit.t0 == 0.0 and fit.bps == pytest.approx(1e9)
+
+
+def test_fit_affine_invalid_raises():
+    with pytest.raises(ValueError):
+        cm.fit_affine(np.array([]), np.array([]))
+    with pytest.raises(ValueError):
+        cm.fit_affine(np.array([1.0]), np.array([-1.0]))
+
+
+# ---------------------------------------------------------------------------
+# simulate_stream invariants
+# ---------------------------------------------------------------------------
+
+
+def _linear(bps):
+    return lambda c: c / bps
+
+
+def test_simulate_stream_window1_equals_serial_sum():
+    sizes = [1000, 2000, 3000]
+    mk, _ = roofline.simulate_stream(
+        sizes, _linear(1e6), _linear(2e6), _linear(3e6), window=1)
+    expect = sum(c / 1e6 + c / 2e6 + c / 3e6 for c in sizes)
+    assert mk == pytest.approx(expect, rel=1e-9)
+
+
+def test_simulate_stream_overlap_never_slower_without_overhead():
+    sizes = [4096] * 8
+    mk1, _ = roofline.simulate_stream(
+        sizes, _linear(1e6), _linear(1e6), _linear(1e6), window=1)
+    mk2, _ = roofline.simulate_stream(
+        sizes, _linear(1e6), _linear(1e6), _linear(1e6), window=2)
+    assert mk2 <= mk1 + 1e-12
+    # balanced lanes, deep stream: overlap should win decisively
+    assert mk2 < 0.6 * mk1
+
+
+def test_simulate_stream_window_overhead_charged_only_when_pipelined():
+    sizes = [4096] * 4
+    base, _ = roofline.simulate_stream(
+        sizes, _linear(1e6), _linear(1e6), _linear(1e6), window=1,
+        window_overhead_s=1.0)
+    nofee, _ = roofline.simulate_stream(
+        sizes, _linear(1e6), _linear(1e6), _linear(1e6), window=1)
+    assert base == pytest.approx(nofee)  # serial pays no pipelining fee
+    fee, _ = roofline.simulate_stream(
+        sizes, _linear(1e6), _linear(1e6), _linear(1e6), window=2,
+        window_overhead_s=1.0)
+    assert fee > nofee  # huge fee makes window=2 strictly worse
+
+
+# ---------------------------------------------------------------------------
+# tuner decisions on synthetic calibrations
+# ---------------------------------------------------------------------------
+
+
+def test_plan_stream_overlap_wins_on_deep_stream():
+    cal = _synthetic_cal()
+    plan = tuner.plan_stream(
+        1 << 22, 4, method="zfp", calibration=cal, window_overhead_s=0.0)
+    assert plan.source == "calibrated"
+    assert plan.window > 1
+    assert plan.n_chunks > tuner.SERIAL_CHUNK_FLOOR
+    assert plan.predicted_s <= plan.predicted_serial_s
+
+
+def test_plan_stream_small_payload_degrades_to_serial():
+    cal = _synthetic_cal()
+    plan = tuner.plan_stream(
+        1024, 4, method="zfp", calibration=cal, window_overhead_s=0.0)
+    # payload fits in <= SERIAL_CHUNK_FLOOR chunks at the minimum chunk
+    # size: pipelining is pinned off
+    assert plan.window == 1
+
+
+def test_plan_stream_huge_overhead_degrades_to_serial():
+    cal = _synthetic_cal()
+    plan = tuner.plan_stream(
+        1 << 22, 4, method="zfp", calibration=cal, window_overhead_s=10.0)
+    assert plan.window == 1
+    assert plan.predicted_s == pytest.approx(plan.predicted_serial_s)
+
+
+def test_plan_stream_pinned_chunk_respected():
+    cal = _synthetic_cal()
+    plan = tuner.plan_stream(
+        1 << 20, 4, method="zfp", calibration=cal,
+        chunk_elems=1 << 16, window_overhead_s=0.0)
+    assert plan.chunk_elems == 1 << 16
+
+
+def test_plan_stream_heuristic_fallback_without_method(cal_dir):
+    plan = tuner.plan_stream(1 << 20, 4, method=None)
+    assert plan.source == "heuristic"
+    assert plan.n_chunks >= 1
+    tiny = tuner.plan_stream(256, 4, method=None)
+    assert tiny.window == 1
+
+
+def test_plan_stream_deterministic():
+    cal = _synthetic_cal()
+    plans = {
+        tuner.plan_stream(3_000_000, 4, method="zfp", calibration=cal,
+                          window_overhead_s=1e-5)
+        for _ in range(5)
+    }
+    assert len(plans) == 1
+
+
+def test_candidate_race_converges_on_measured_winner(cal_dir):
+    """Store-backed full-auto specs race top-K candidates, then pin the
+    measured winner — even when the model mis-ranked them."""
+    _seed_store("zfp")
+    total, itemsize = 1 << 20, 4
+
+    def solve():
+        return tuner.plan_stream(total, itemsize, method="zfp",
+                                 dtype="float32")
+
+    first = solve()
+    assert first.source == "calibrated"
+    # without feedback the plan is stable: always the model's argmin
+    assert solve().to_dict() == first.to_dict()
+
+    # drive the race: report every explored candidate as slow EXCEPT one
+    # the model did NOT rank first — the race must pin that one
+    seen = []
+    winner = None
+    for _ in range(tuner._EXPLORE_K * tuner._EXPLORE_RUNS):
+        plan = solve()
+        cand = (plan.chunk_elems, plan.window)
+        if cand not in seen:
+            seen.append(cand)
+        fake_wall = plan.predicted_raw_s * (0.5 if len(seen) >= 2 and
+                                            cand == seen[1] else 2.0)
+        if len(seen) >= 2 and cand == seen[1]:
+            winner = cand
+        tuner.observe(plan, total, itemsize, fake_wall)
+    assert len(seen) >= 2  # it really explored distinct candidates
+    settled = solve()
+    assert (settled.chunk_elems, settled.window) == winner
+    # the exploit plan's prediction is the winner's best-achieved wall
+    follow = solve()
+    assert follow.predicted_s == settled.predicted_s
+    # a better observation un-pins the cache and re-ranks
+    tuner.observe(settled, total, itemsize, settled.predicted_s * 0.5)
+    assert solve().predicted_s == pytest.approx(settled.predicted_s * 0.5)
+
+
+# ---------------------------------------------------------------------------
+# calibration: stub-clock measurement + persistence
+# ---------------------------------------------------------------------------
+
+
+class _StubClock:
+    """Deterministic monotone clock: every call advances 1 ms."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1e-3
+        return self.t
+
+
+def test_stub_clock_calibration_fast_and_persisted(cal_dir):
+    sweeps0 = calibrate.SWEEPS_RUN
+    mc = calibrate.get_method_calibration(
+        "zfp", "float32", params={"rate": 16}, clock=_StubClock(),
+        best_of=1, sweep_elems=(2 << 10, 4 << 10),
+    )
+    assert mc is not None
+    assert calibrate.SWEEPS_RUN > sweeps0  # this process really measured
+    assert np.isfinite(mc.phi.gamma) and mc.phi.gamma > 0
+    assert mc.h2d.bps > 0 and mc.serialize.bps > 0
+    assert 0 < mc.output_fraction < 4
+    path = calibrate.calibration_path()
+    assert path.exists()
+    d = json.loads(path.read_text())
+    assert d["version"] == calibrate.CALIBRATION_VERSION
+    assert d["machine"] == calibrate.machine_key()
+    assert calibrate.method_key("zfp", "float32") in d["methods"]
+
+    # same-process reload from disk: zero additional sweeps
+    calibrate.set_calibration_dir(cal_dir)  # clears the in-proc store cache
+    sweeps1 = calibrate.SWEEPS_RUN
+    mc2 = calibrate.get_method_calibration("zfp", "float32")
+    assert calibrate.SWEEPS_RUN == sweeps1
+    assert mc2 is not None and mc2.phi.gamma == pytest.approx(mc.phi.gamma)
+    assert calibrate.load_store().loaded_from_disk
+
+
+def test_calibration_invalidated_on_version_mismatch(cal_dir):
+    _seed_store()
+    calibrate.load_store().save()
+    path = calibrate.calibration_path()
+    d = json.loads(path.read_text())
+    d["version"] = calibrate.CALIBRATION_VERSION + 1
+    path.write_text(json.dumps(d))
+    calibrate.set_calibration_dir(cal_dir)
+    mc = calibrate.get_method_calibration("zfp", "float32", measure=False)
+    assert mc is None  # stale version ignored, nothing measured
+
+
+def test_calibration_invalidated_on_machine_mismatch(cal_dir):
+    _seed_store()
+    calibrate.load_store().save()
+    path = calibrate.calibration_path()
+    d = json.loads(path.read_text())
+    d["machine"] = "someone_elses_gpu_x8_cuda"
+    path.write_text(json.dumps(d))
+    calibrate.set_calibration_dir(cal_dir)
+    assert calibrate.get_method_calibration(
+        "zfp", "float32", measure=False) is None
+
+
+@pytest.mark.subprocess
+def test_calibration_persists_across_processes(tmp_path):
+    """Process 1 calibrates and persists; process 2 loads with 0 sweeps."""
+    env = dict(os.environ)
+    env["HPDR_CALIBRATION_DIR"] = str(tmp_path)
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+
+    measure = (
+        "from repro.runtime import calibrate\n"
+        "mc = calibrate.get_method_calibration(\n"
+        "    'zfp', 'float32', params={'rate': 16}, best_of=1,\n"
+        "    sweep_elems=(2 << 10, 4 << 10))\n"
+        "assert mc is not None\n"
+        "print('SWEEPS', calibrate.SWEEPS_RUN)\n"
+    )
+    out1 = subprocess.run(
+        [sys.executable, "-c", measure], env=env, capture_output=True,
+        text=True, check=True,
+    ).stdout
+    assert "SWEEPS" in out1
+    assert int(out1.strip().split()[-1]) >= 1
+
+    load = (
+        "from repro.runtime import calibrate\n"
+        "mc = calibrate.get_method_calibration('zfp', 'float32')\n"
+        "assert mc is not None\n"
+        "assert calibrate.load_store().loaded_from_disk\n"
+        "print('SWEEPS', calibrate.SWEEPS_RUN)\n"
+    )
+    out2 = subprocess.run(
+        [sys.executable, "-c", load], env=env, capture_output=True,
+        text=True, check=True,
+    ).stdout
+    assert int(out2.strip().split()[-1]) == 0  # warm load: zero sweeps
+
+
+# ---------------------------------------------------------------------------
+# auto wiring: CMM canonicalisation, bit-identity, small-payload guard
+# ---------------------------------------------------------------------------
+
+
+def _stream_auto(data, **params):
+    s = api.CompressorStream("zfp", chunk_size="auto", window="auto",
+                             frame=True, **params)
+    return s, s.compress(data)
+
+
+def test_auto_chunk_hits_same_cmm_plans_as_explicit(cal_dir):
+    _seed_store("zfp")
+    rng = np.random.default_rng(3)
+    data = rng.normal(size=(64, 31, 29)).astype(np.float32)
+
+    _, res_auto = _stream_auto(data, rate=16)
+    assert res_auto.tuned is not None
+    chunk_elems = res_auto.tuned["chunk_elems"]
+
+    # the auto run built (or reused) every per-chunk plan; the SAME
+    # explicit chunk size must now be pure CMM hits — the resolved chunk
+    # never enters the plan key
+    misses0 = GLOBAL_CMM.miss_count
+    hits0 = GLOBAL_CMM.hit_count
+    explicit = api.CompressorStream(
+        "zfp", mode="fixed", c_fixed_elems=chunk_elems,
+        window=res_auto.window, frame=True, rate=16)
+    res_exp = explicit.compress(data)
+    assert GLOBAL_CMM.miss_count == misses0
+    assert GLOBAL_CMM.hit_count > hits0
+    # and the wire bytes are identical
+    assert (api.CompressorStream.to_bytes(res_auto)
+            == api.CompressorStream.to_bytes(res_exp))
+
+
+def test_small_payload_auto_degrades_to_serial(cal_dir):
+    _seed_store("zfp")
+    rng = np.random.default_rng(4)
+    tiny = rng.normal(size=(4, 16, 16)).astype(np.float32)  # 4 KB
+
+    auto_stream = api.CompressorStream("zfp", chunk_size="auto",
+                                       window="auto", frame=True, rate=16)
+    res = auto_stream.compress(tiny)
+    assert res.window == 1  # regression BENCH_pipeline.json small-payload
+
+    # wall-clock guard: auto must not lose to the explicit serial run.
+    # Interleave the runs so scheduler drift cannot bias one side of a
+    # sub-millisecond comparison; retry once — both streams execute the
+    # identical schedule, so a miss is measurement noise, and two
+    # independent misses would mean a real regression.
+    serial = api.CompressorStream(
+        "zfp", mode="fixed", c_fixed_elems=res.tuned["chunk_elems"],
+        window=1, frame=True, rate=16)
+
+    def best_walls(n=9):
+        auto_walls, serial_walls = [], []
+        for _ in range(n):
+            auto_walls.append(auto_stream.compress(tiny).wall_time)
+            serial_walls.append(serial.compress(tiny).wall_time)
+        return min(auto_walls), min(serial_walls)
+
+    a, s = best_walls()
+    if a > s * 1.05:
+        a, s = best_walls()
+    assert a <= s * 1.05
+
+
+def test_auto_bit_identical_to_serial_and_windowed(cal_dir):
+    _seed_store("zfp")
+    rng = np.random.default_rng(5)
+    data = rng.normal(size=(48, 24, 24)).astype(np.float32)
+    _, res_auto = _stream_auto(data, rate=16)
+    chunk_elems = res_auto.tuned["chunk_elems"]
+    blobs = {api.CompressorStream.to_bytes(res_auto)}
+    for w in (1, 2):
+        s = api.CompressorStream("zfp", mode="fixed",
+                                 c_fixed_elems=chunk_elems, window=w,
+                                 frame=True, rate=16)
+        blobs.add(api.CompressorStream.to_bytes(s.compress(data)))
+    assert len(blobs) == 1  # one wire format regardless of schedule
+    out = api.CompressorStream.decompress(res_auto)
+    assert out.shape == data.shape
+
+
+@pytest.mark.slow  # cross-layer integration: full tier only, keeps `fast` <1min
+def test_engine_stream_defaults_to_auto(cal_dir):
+    from repro.core.engine import ExecutionEngine
+
+    _seed_store("huffman-bytes")
+    rng = np.random.default_rng(6)
+    data = rng.normal(size=(32, 16, 16)).astype(np.float32)
+    with ExecutionEngine(backend="xla") as eng:
+        stream = eng.stream("huffman-bytes")
+        res = stream.compress(data)
+    assert res.tuned is not None
+    assert res.tuned["source"] in ("calibrated", "heuristic")
+    np.testing.assert_array_equal(
+        api.CompressorStream.decompress(res), data)
+
+
+@pytest.mark.slow  # cross-layer integration: full tier only, keeps `fast` <1min
+def test_service_stream_roundtrip_and_stats(cal_dir):
+    from repro.core.engine import ExecutionEngine
+    from repro.serving import ReductionService
+
+    _seed_store("huffman-bytes")
+    rng = np.random.default_rng(8)
+    data = rng.normal(size=(32, 24, 24)).astype(np.float32)
+    with ExecutionEngine(backend="xla") as eng:
+        with ReductionService(eng, batch_window=0.0) as svc:
+            blob, info = svc.compress_stream(data, "huffman-bytes")
+            snap = svc.stats()
+    assert snap.stream_requests == 1
+    assert info["chunks"] >= 1 and info["window"] >= 1
+    res = api.CompressorStream.from_bytes(blob)
+    out = api.CompressorStream.decompress(res)
+    np.testing.assert_array_equal(out, data)
+
+
+@pytest.mark.slow  # cross-layer integration: full tier only, keeps `fast` <1min
+def test_checkpoint_streams_large_float_leaves(cal_dir, tmp_path):
+    from repro.checkpoint import CheckpointManager, CheckpointPolicy
+
+    _seed_store("huffman-bytes")
+    _seed_store("zfp")
+    rng = np.random.default_rng(9)
+    tree = {
+        "big": rng.normal(size=(64, 64)).astype(np.float32),   # 16 KB: streams
+        "small": rng.normal(size=(8, 8)).astype(np.float32),   # one-shot
+        "ints": np.arange(32, dtype=np.int32),
+    }
+    mgr = CheckpointManager(
+        tmp_path / "ckpt",
+        policy=CheckpointPolicy(stream_threshold=8 << 10),
+    )
+    manifest = mgr.save(0, tree)
+    leaves = manifest["leaves"]
+    assert leaves["big"].get("stream") is True
+    assert "window" in leaves["big"]
+    assert leaves["small"].get("stream") is None
+    restored, _ = mgr.restore(0)
+    # big leaf is below the lossless_small elem cutoff -> huffman, exact
+    np.testing.assert_array_equal(restored["big"], tree["big"])
+    np.testing.assert_array_equal(restored["ints"], tree["ints"])
+
+
+def test_checkpoint_default_policy_streams_nothing_small(cal_dir, tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    rng = np.random.default_rng(10)
+    tree = {"w": rng.normal(size=(64, 64)).astype(np.float32)}
+    mgr = CheckpointManager(tmp_path / "ckpt")
+    manifest = mgr.save(0, tree)
+    assert manifest["leaves"]["w"].get("stream") is None
