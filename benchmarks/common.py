@@ -21,9 +21,6 @@ V100 = {
     "output_fraction": {"mgard": 0.2, "zfp": 0.5, "huffman": 0.7},
 }
 
-FRONTIER = {"nodes": 9408, "gpus_per_node": 4, "fs_bw": 9.4e12}
-SUMMIT = {"nodes": 4608, "gpus_per_node": 6, "fs_bw": 2.5e12}
-
 
 def nyx_like(n: int = 64, seed: int = 0) -> np.ndarray:
     """Smooth-ish cosmology-like density field (NYX stand-in)."""

@@ -25,6 +25,11 @@
 #                                   fixed (chunk, window) configs per codec +
 #                                   predicted-vs-measured makespan error
 #                                   -> BENCH_tuner.json
+#   scripts/check.sh bench io       multi-host parallel I/O: aggregated
+#                                   shard writes vs file-per-rank vs single
+#                                   shared file across 1/2/4 subprocess-
+#                                   simulated hosts + restore pread locality
+#                                   -> BENCH_io.json
 #   scripts/check.sh docs           execute every fenced ```python block in
 #                                   docs/*.md against the current API
 set -euo pipefail
@@ -71,6 +76,12 @@ if [[ "${1:-}" == "bench" ]]; then
     shift
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
       python -m benchmarks.tuner_sweep --smoke --out BENCH_tuner.json "$@"
+    exit 0
+  fi
+  if [[ "${1:-}" == "io" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+      python -m benchmarks.fig15_17_18_multinode_io --smoke --out BENCH_io.json "$@"
     exit 0
   fi
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

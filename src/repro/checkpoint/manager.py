@@ -24,9 +24,20 @@ checkpoint stream, so every shard is pushed through the HPDR pipeline:
     :class:`repro.runtime.io.AggregatedWriter` — large positional writes on
     a dedicated flush thread, with a segment directory so restore
     ``pread``s exactly the leaves it needs (old per-leaf-file checkpoints
-    still restore).
+    still restore);
+  * **multi-host sharded I/O** (paper Figs. 15/17/18): under a
+    multi-controller :class:`~repro.launch.mesh.HostTopology` every host
+    runs its own writer producing a local shard (``leaves-<host>.hpdr``)
+    holding exactly the leaves it owns (deterministic crc32 assignment);
+    hosts rendezvous on a shared-filesystem barrier and the coordinator
+    (host 0) stitches the per-host segment directories into a **global
+    manifest**.  Restore is topology-aware: a same-topology restore
+    ``pread``s only its local shard's byte ranges
+    (``restore(leaves="local")``), while a remeshed restart falls back to
+    cross-shard preads — observable via ``last_restore_io``.
 
 Layout:  <dir>/step_<N>/manifest.json + <dir>/step_<N>/leaves.hpdr
+         (multi-host: <dir>/step_<N>/leaves-<host>.hpdr per host)
          (pre-aggregation checkpoints: <dir>/step_<N>/<leaf-path>.hpdr)
 """
 
@@ -44,11 +55,19 @@ import numpy as np
 
 from ..core import api
 from ..core import engine as engine_mod
+from ..launch.mesh import HostTopology, barrier_payloads, fs_barrier
 from ..runtime.executor import IO, Submission
-from ..runtime.io import AggregatedReader, AggregatedWriter
+from ..runtime.io import (
+    AggregatedReader,
+    AggregatedWriter,
+    ShardSetReader,
+    shard_file_name,
+    stitch_shard_directories,
+)
 
 _SEP = "::"
 _AGGREGATE_FILE = "leaves.hpdr"
+_COMMIT_POLL_S = 0.005
 
 
 @dataclass(frozen=True)
@@ -63,6 +82,12 @@ class CheckpointPolicy:
     # calibrated machine cost model picks the chunking/overlap per leaf,
     # and the leaf's segment becomes a framed HPDS stream.  None disables.
     stream_threshold: int | None = 8 << 20
+    # fsync shard/aggregate files (and their directory entries) on close;
+    # default off — tests and benchmarks should not pay disk-flush latency
+    fsync: bool = False
+    # how long a host waits at the save barrier / for the coordinator's
+    # global-manifest commit before declaring the save torn
+    barrier_timeout_s: float = 120.0
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -126,39 +151,47 @@ class CheckpointManager:
         directory: str | Path,
         policy: CheckpointPolicy | None = None,
         engine: engine_mod.ExecutionEngine | None = None,
+        topology: HostTopology | None = None,
     ):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.policy = policy or CheckpointPolicy()
         self._engine = engine
+        self._topology = topology
         self._pending: Submission | None = None
         self.last_report: dict | None = None
+        #: pread-locality stats of the most recent ``restore`` (shard-set
+        #: layouts record local vs cross preads; single-file layouts record
+        #: everything as local) — what the topology-awareness tests assert
+        self.last_restore_io: dict | None = None
 
     @property
     def engine(self) -> engine_mod.ExecutionEngine:
         return self._engine if self._engine is not None else engine_mod.default_engine()
 
+    @property
+    def topology(self) -> HostTopology:
+        """Explicit topology, else the engine's (env / jax.distributed)."""
+        return self._topology if self._topology is not None else self.engine.topology
+
     # ----------------------------------------------------------------- save
 
     def save(self, step: int, tree: Any, extra: dict | None = None) -> dict:
-        t0 = time.perf_counter()
-        flat = _flatten(tree)
-        step_dir = self.dir / f"step_{step:08d}"
-        step_dir.mkdir(parents=True, exist_ok=True)
-        manifest = {"step": step, "extra": extra or {},
-                    "aggregate": _AGGREGATE_FILE, "leaves": {}}
-        raw_total, comp_total = 0, 0
-        # Fan per-leaf compression out across the engine's data-axis devices
-        # (compute lane); blobs coalesce into ONE aggregated segment file —
-        # large aligned positional writes flushed on the writer's own flush
-        # thread, so leaf i+1's compression overlaps leaf i's disk write.
-        # Restore preads exactly the segments it needs via the directory.
-        # Large float leaves bypass the one-shot path and go through the
-        # auto-tuned chunked stream *inline on this thread* (see
-        # ``_stream_leaf`` for why they must not occupy an engine lane);
-        # everything else fans out across the engine as before, so small
-        # leaves still compress while a streamed leaf is in flight.
-        subs = [
+        topo = self.topology
+        if topo.multi_host:
+            return self._save_multihost(step, tree, extra, topo)
+        return self._save_single(step, tree, extra)
+
+    def _submit_leaf_compressions(self, flat: dict) -> list[tuple]:
+        """Fan per-leaf compression out across the engine (compute lane).
+
+        Large float leaves bypass the one-shot path and go through the
+        auto-tuned chunked stream *inline on the save thread* (see
+        ``_stream_leaf`` for why they must not occupy an engine lane);
+        everything else fans out across the engine, so small leaves still
+        compress while a streamed leaf is in flight.
+        """
+        return [
             (
                 key,
                 arr,
@@ -168,34 +201,59 @@ class CheckpointManager:
             )
             for key, arr in flat.items()
         ]
+
+    def _write_leaves(
+        self, writer: AggregatedWriter, subs: list[tuple]
+    ) -> tuple[dict, int, int]:
+        """Drain compression futures into ``writer``; returns
+        ``(leaf_entries, raw_total, comp_total)``.
+
+        Blobs coalesce into the aggregated segment file — large aligned
+        positional writes flushed on the writer's own flush thread, so leaf
+        i+1's compression overlaps leaf i's disk write.
+        """
+        entries: dict[str, dict] = {}
+        raw_total, comp_total = 0, 0
         used: set[str] = set()
+        for key, arr, sub in subs:
+            stream_info = None
+            if sub is None:
+                blob, stream_info = _stream_leaf(arr, self.policy)
+            else:
+                blob = sub.result()
+            # sanitize separators and dedupe: distinct keys must never
+            # share a segment — restore reads the key->segment mapping
+            # from the manifest, so any injective name works
+            base = key.replace(_SEP, "__").replace("/", "_") or "_root"
+            name, i = base, 2
+            while name in used:
+                name = f"{base}~{i}"
+                i += 1
+            used.add(name)
+            writer.add(name, blob)
+            entry = {"segment": name, "bytes": len(blob), "raw": arr.nbytes}
+            if stream_info is not None:
+                entry["stream"] = True
+                entry.update(stream_info)
+            entries[key] = entry
+            raw_total += arr.nbytes
+            comp_total += len(blob)
+        return entries, raw_total, comp_total
+
+    def _save_single(self, step: int, tree: Any, extra: dict | None) -> dict:
+        t0 = time.perf_counter()
+        flat = _flatten(tree)
+        step_dir = self.dir / f"step_{step:08d}"
+        step_dir.mkdir(parents=True, exist_ok=True)
+        manifest = {"step": step, "extra": extra or {},
+                    "aggregate": _AGGREGATE_FILE, "leaves": {}}
+        subs = self._submit_leaf_compressions(flat)
         with AggregatedWriter(
-            step_dir / _AGGREGATE_FILE, meta={"step": step}
+            step_dir / _AGGREGATE_FILE, meta={"step": step},
+            fsync=self.policy.fsync, atomic=True,
         ) as writer:
-            for key, arr, sub in subs:
-                stream_info = None
-                if sub is None:
-                    blob, stream_info = _stream_leaf(arr, self.policy)
-                else:
-                    blob = sub.result()
-                # sanitize separators and dedupe: distinct keys must never
-                # share a segment — restore reads the key->segment mapping
-                # from the manifest, so any injective name works
-                base = key.replace(_SEP, "__").replace("/", "_") or "_root"
-                name, i = base, 2
-                while name in used:
-                    name = f"{base}~{i}"
-                    i += 1
-                used.add(name)
-                writer.add(name, blob)
-                entry = {"segment": name, "bytes": len(blob),
-                         "raw": arr.nbytes}
-                if stream_info is not None:
-                    entry["stream"] = True
-                    entry.update(stream_info)
-                manifest["leaves"][key] = entry
-                raw_total += arr.nbytes
-                comp_total += len(blob)
+            entries, raw_total, comp_total = self._write_leaves(writer, subs)
+        manifest["leaves"] = entries
         io_stats = dict(writer.stats)  # after close(): counts the final flush
         manifest["raw_bytes"] = raw_total
         manifest["compressed_bytes"] = comp_total
@@ -207,6 +265,99 @@ class CheckpointManager:
         (step_dir / "COMMITTED").write_text("ok")
         self.last_report = manifest
         return manifest
+
+    def _save_multihost(
+        self, step: int, tree: Any, extra: dict | None, topo: HostTopology
+    ) -> dict:
+        """Per-host shard writers + coordinator-stitched global manifest.
+
+        Every host compresses exactly the leaves it owns (deterministic
+        crc32 assignment — no communication) and writes them through its
+        own :class:`AggregatedWriter` into ``leaves-<host>.hpdr``
+        (atomically, so a torn host write never parses).  The hosts then
+        rendezvous on a shared-filesystem barrier whose marker payload
+        carries each writer's I/O stats, and host 0 stitches the per-host
+        segment directories into the global ``manifest.json`` before
+        writing ``COMMITTED``.  Non-coordinators block on the commit
+        marker, so every host returns the same manifest.
+        """
+        t0 = time.perf_counter()
+        flat = _flatten(tree)
+        step_dir = self.dir / f"step_{step:08d}"
+        step_dir.mkdir(parents=True, exist_ok=True)
+        owned = {k: a for k, a in flat.items() if topo.owns(k)}
+        subs = self._submit_leaf_compressions(owned)
+        shard = shard_file_name(topo.host_id)
+        with AggregatedWriter(
+            step_dir / shard,
+            meta={"step": step, "host": topo.host_id, "hosts": topo.n_hosts},
+            fsync=self.policy.fsync, atomic=True,
+        ) as writer:
+            entries, raw_total, comp_total = self._write_leaves(writer, subs)
+        # rendezvous: the marker payload is each host's partial manifest —
+        # leaf entries + writer stats — so stitching needs no extra files
+        payload = json.dumps({
+            "host": topo.host_id, "file": shard, "leaves": entries,
+            "raw_bytes": raw_total, "compressed_bytes": comp_total,
+            "io": dict(writer.stats), "save_s": time.perf_counter() - t0,
+        })
+        fs_barrier(step_dir, f"save-{step}", topo,
+                   timeout=self.policy.barrier_timeout_s, payload=payload)
+        if topo.host_id == 0:
+            manifest = self._stitch_global_manifest(
+                step, step_dir, extra, topo, t0
+            )
+        else:
+            self._wait_for_commit(step_dir)
+            manifest = json.loads((step_dir / "manifest.json").read_text())
+        self.last_report = manifest
+        return manifest
+
+    def _stitch_global_manifest(
+        self, step: int, step_dir: Path, extra: dict | None,
+        topo: HostTopology, t0: float,
+    ) -> dict:
+        payloads = {
+            h: json.loads(raw)
+            for h, raw in barrier_payloads(step_dir, f"save-{step}", topo).items()
+        }
+        shard_files = {str(h): p["file"] for h, p in payloads.items()}
+        # validate every shard's trailer before committing anything: a torn
+        # host write must fail the global commit, not surface at restore
+        stitched = stitch_shard_directories(step_dir, shard_files)
+        manifest: dict = {
+            "step": step, "extra": extra or {},
+            "shards": shard_files,
+            "topology": {"hosts": topo.n_hosts},
+            "leaves": {}, "io": {},
+        }
+        raw_total = comp_total = 0
+        for h in sorted(payloads):
+            p = payloads[h]
+            for key, entry in p["leaves"].items():
+                manifest["leaves"][key] = {**entry, "shard": str(h)}
+            raw_total += int(p["raw_bytes"])
+            comp_total += int(p["compressed_bytes"])
+            manifest["io"][str(h)] = p["io"]
+        manifest["raw_bytes"] = raw_total
+        manifest["compressed_bytes"] = comp_total
+        manifest["ratio"] = raw_total / max(comp_total, 1)
+        manifest["save_s"] = time.perf_counter() - t0
+        manifest["stitched_segments"] = stitched["segments"]
+        (step_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        (step_dir / "COMMITTED").write_text("ok")
+        return manifest
+
+    def _wait_for_commit(self, step_dir: Path) -> None:
+        deadline = time.monotonic() + self.policy.barrier_timeout_s
+        marker = step_dir / "COMMITTED"
+        while not marker.exists():
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"{step_dir}: coordinator never committed the global "
+                    f"manifest within {self.policy.barrier_timeout_s}s"
+                )
+            time.sleep(_COMMIT_POLL_S)
 
     def save_async(self, step: int, tree: Any, extra: dict | None = None) -> Submission:
         """Snapshot to host, then compress+write on the engine's io lane.
@@ -260,9 +411,14 @@ class CheckpointManager:
         ``target`` supplies the pytree structure; ``shardings`` (same
         structure) re-places every leaf — elastic restarts pass the new
         mesh's shardings here.  ``leaves`` (flat-mode only, ``target=None``)
-        selects a subset of leaf keys: on the aggregated layout only those
+        selects a subset of leaf keys: on the aggregated layouts only those
         leaves' byte ranges are ``pread`` — a partial restore never touches
-        the rest of the file.
+        the rest of the file.  The sentinel ``leaves="local"`` selects the
+        leaves this host owns under its *current* topology: when the
+        checkpoint was written with the same host count, every one of them
+        lives in the local shard and the restore preads only local byte
+        ranges; on remeshing the owned set spans foreign shards and the
+        reader falls back to cross-shard preads (``last_restore_io``).
         """
         if step is None:
             step = self.latest_step()
@@ -272,18 +428,36 @@ class CheckpointManager:
         manifest = json.loads((step_dir / "manifest.json").read_text())
         if leaves is not None and target is not None:
             raise ValueError("leaves= selects a subset; incompatible with target=")
-        wanted = None if leaves is None else set(leaves)
-        reader = (
-            AggregatedReader(step_dir / manifest["aggregate"])
-            if manifest.get("aggregate")
-            else None
-        )
+        topo = self.topology
+        if isinstance(leaves, str) and leaves == "local":
+            wanted: set | None = {
+                k for k in manifest["leaves"] if topo.owns(k)
+            }
+        else:
+            wanted = None if leaves is None else set(leaves)
+        shard_files = manifest.get("shards")
+        reader: AggregatedReader | None = None
+        shard_set: ShardSetReader | None = None
+        if shard_files:
+            # locality only exists when the writing topology matches ours:
+            # then this host's owned leaves are exactly its shard's segments
+            same_topo = (
+                manifest.get("topology", {}).get("hosts") == topo.n_hosts
+            )
+            shard_set = ShardSetReader(
+                step_dir, shard_files,
+                local=str(topo.host_id) if same_topo else None,
+            )
+        elif manifest.get("aggregate"):
+            reader = AggregatedReader(step_dir / manifest["aggregate"])
         try:
             flat = {}
             for key, info in manifest["leaves"].items():
                 if wanted is not None and key not in wanted:
                     continue
-                if "segment" in info:
+                if shard_set is not None:
+                    raw = shard_set.read(info["shard"], info["segment"])
+                elif "segment" in info:
                     raw = reader.read(info["segment"])
                 else:  # pre-aggregation layout: one file per leaf
                     raw = (step_dir / info["file"]).read_bytes()
@@ -296,8 +470,20 @@ class CheckpointManager:
                 else:
                     flat[key] = _decompress_leaf(raw)
         finally:
-            if reader is not None:
+            if shard_set is not None:
+                self.last_restore_io = dict(shard_set.stats)
+                shard_set.close()
+            elif reader is not None:
+                self.last_restore_io = {
+                    "local_preads": reader.preads, "cross_preads": 0,
+                    "shards_opened": [], "preads_by_shard": {},
+                }
                 reader.close()
+            else:
+                self.last_restore_io = {
+                    "local_preads": 0, "cross_preads": 0,
+                    "shards_opened": [], "preads_by_shard": {},
+                }
         if target is None:
             return flat, manifest
         leaves_with_path = jax.tree_util.tree_flatten_with_path(target)

@@ -96,10 +96,20 @@ class ExecutionEngine:
         backend: str = adapters.AUTO,
         max_workers: int | None = None,
         io_workers: int = 1,
+        topology=None,
     ):
         self.backend = adapters.resolve_backend(backend)
         self.mesh = mesh if mesh is not None else make_data_mesh()
         self.devices = data_devices(self.mesh)
+        if topology is None:
+            from ..launch import mesh as launch_mesh  # runtime import: layering
+
+            topology = launch_mesh.detect_topology()
+        #: which controller process this engine runs in (multi-host I/O
+        #: routing): the checkpoint writer coalesces this host's leaf
+        #: compressions into its local shard, and ``encode_leaf_jobs``
+        #: can drop leaves owned by other hosts before any plan work
+        self.topology = topology
         self.executor = DeviceExecutor(
             self.devices, max_workers=max_workers, io_workers=io_workers
         )
@@ -192,6 +202,7 @@ class ExecutionEngine:
         select: Callable[[str, np.ndarray], tuple[str, dict] | None] | None = None,
         *,
         sep: str = "/",
+        owned_only: bool = False,
     ) -> tuple[list[str], dict[str, np.ndarray], list[tuple], dict]:
         """Flatten ``tree`` into encode jobs: ``(order, raw, jobs, stats)``.
 
@@ -200,6 +211,12 @@ class ExecutionEngine:
         per leaf: the first leaf of a bucket builds the plan (CMM miss),
         every further leaf is a real CMM hit — the observable the
         scalability benchmark counts.
+
+        ``owned_only=True`` is the multi-controller io-lane route: leaves
+        owned by other hosts under ``self.topology`` are dropped *before*
+        any plan or compression work (``stats["remote_leaves"]`` counts
+        them), so each host's compute and io lanes carry exactly the
+        leaves that coalesce into its local shard.
         """
         from . import api
 
@@ -207,12 +224,16 @@ class ExecutionEngine:
         stats = {
             "raw": 0, "compressed": 0, "leaves": 0, "compressed_leaves": 0,
             "buckets": 0, "sharded_leaves": 0, "devices": len(self.devices),
+            "remote_leaves": 0,
         }
         order: list[str] = []
         raw_leaves: dict[str, np.ndarray] = {}
         jobs: list[tuple[str, np.ndarray, np.ndarray, ReductionSpec]] = []
         for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
             key = api._path_key(path, sep)
+            if owned_only and not self.topology.owns(key):
+                stats["remote_leaves"] += 1
+                continue
             arr = np.asarray(leaf)
             order.append(key)
             stats["raw"] += arr.nbytes
@@ -352,6 +373,7 @@ class ExecutionEngine:
         select: Callable[[str, np.ndarray], tuple[str, dict] | None] | None = None,
         *,
         sep: str = "/",
+        owned_only: bool = False,
     ) -> tuple[dict[str, Any], dict]:
         """Sharded-parallel :func:`repro.core.api.compress_pytree`.
 
@@ -360,8 +382,13 @@ class ExecutionEngine:
         CMM hits — and buckets execute across the ``data``-axis devices:
         stacked under one ``shard_map`` where the codec's encode chain is
         fully jittable, as per-leaf executor futures otherwise.
+        ``owned_only=True`` restricts the fan-out to this host's leaves
+        under ``self.topology`` (multi-controller mode — each host emits
+        exactly the flat mapping its local shard will hold).
         """
-        order, raw_leaves, jobs, stats = self.encode_leaf_jobs(tree, select, sep=sep)
+        order, raw_leaves, jobs, stats = self.encode_leaf_jobs(
+            tree, select, sep=sep, owned_only=owned_only
+        )
 
         buckets = self.bucket_encode_jobs(jobs)
         stats["buckets"] = len(buckets)

@@ -128,6 +128,13 @@ def method_key(method: str, dtype: Any) -> str:
     return f"{method}:{np.dtype(dtype).name}"
 
 
+def race_key(method: str, dtype: Any, total_elems: int, itemsize: int) -> str:
+    """Store key for one tuner candidate race (spec geometry included)."""
+    return (
+        f"{method}:{np.dtype(dtype).name}:{int(total_elems)}:{int(itemsize)}"
+    )
+
+
 # ---------------------------------------------------------------------------
 # calibration records
 # ---------------------------------------------------------------------------
@@ -210,6 +217,12 @@ class MachineCalibration:
     window_overhead_s: float | None = None   # per-chunk pipelined-over-serial
     host_frame_bps: float | None = None      # runtime.io serialization probe
     methods: dict[str, MethodCalibration] = field(default_factory=dict)
+    #: persisted tuner race winners, keyed by :func:`race_key` — the
+    #: ``(chunk_elems, window)`` the candidate race converged on plus its
+    #: measured per-element cost.  Additive field (older files load with an
+    #: empty dict); rides the same versioning/invalidation as the rest of
+    #: the store, so a machine or backend change re-races from scratch.
+    races: dict[str, dict] = field(default_factory=dict)
     path: Path | None = None
     loaded_from_disk: bool = False
 
@@ -221,6 +234,7 @@ class MachineCalibration:
             "window_overhead_s": self.window_overhead_s,
             "host_frame_bps": self.host_frame_bps,
             "methods": {k: m.to_json() for k, m in self.methods.items()},
+            "races": dict(self.races),
         }
 
     def save(self) -> None:
@@ -260,12 +274,17 @@ def _load_file(path: Path, machine: str, backend: str) -> MachineCalibration | N
         }
     except (KeyError, TypeError, ValueError):
         return None
+    races = {
+        k: r for k, r in d.get("races", {}).items()
+        if isinstance(r, dict) and "chunk_elems" in r and "window" in r
+    }
     return MachineCalibration(
         machine=machine,
         backend=backend,
         window_overhead_s=d.get("window_overhead_s"),
         host_frame_bps=d.get("host_frame_bps"),
         methods=methods,
+        races=races,
         path=path,
         loaded_from_disk=True,
     )
@@ -593,3 +612,60 @@ def window_overhead_s(backend: str | None = None) -> float:
     """The machine's calibrated per-chunk pipelining overhead (0.0 cold)."""
     store = load_store(backend)
     return float(store.window_overhead_s or 0.0)
+
+
+# ---------------------------------------------------------------------------
+# persisted tuner race winners
+# ---------------------------------------------------------------------------
+
+
+def get_race_winner(
+    method: str,
+    dtype: Any,
+    total_elems: int,
+    itemsize: int,
+    backend: str | None = None,
+) -> dict | None:
+    """The persisted race winner for this spec geometry, or ``None``.
+
+    A hit lets a fresh process start its candidate race pre-converged on
+    the previously measured winner — zero exploration runs — while
+    ``tuner.observe`` feedback can still dethrone it if the machine
+    changed behaviour.
+    """
+    store = load_store(backend)
+    with _LOCK:
+        r = store.races.get(race_key(method, dtype, total_elems, itemsize))
+        return dict(r) if r is not None else None
+
+
+def record_race_winner(
+    method: str,
+    dtype: Any,
+    total_elems: int,
+    itemsize: int,
+    backend: str | None,
+    *,
+    chunk_elems: int,
+    window: int,
+    measured_s: float,
+) -> None:
+    """Persist a converged race winner (idempotent; atomic store save)."""
+    store = load_store(backend)
+    key = race_key(method, dtype, total_elems, itemsize)
+    entry = {
+        "chunk_elems": int(chunk_elems),
+        "window": int(window),
+        "measured_s": float(measured_s),
+    }
+    with _LOCK:
+        prev = store.races.get(key)
+        if prev is not None and (
+            (prev.get("chunk_elems"), prev.get("window"))
+            == (entry["chunk_elems"], entry["window"])
+            and abs(entry["measured_s"] - prev.get("measured_s", 0.0))
+            <= 0.05 * max(entry["measured_s"], 1e-12)
+        ):
+            return  # same winner within noise: don't rewrite the file
+        store.races[key] = entry
+        store.save()

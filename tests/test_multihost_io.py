@@ -1,0 +1,449 @@
+"""Multi-host aggregated I/O: shard writers, global manifest, topology-aware
+restore, durability, and partial-shard failure handling.
+
+Hosts are simulated two ways, mirroring the production setting at the two
+granularities the layer supports:
+
+  * threads + explicit :class:`HostTopology` objects — fast in-process
+    coverage of the coordinator rendezvous, stitching, and locality paths
+    (the shared-filesystem barrier only needs concurrent callers);
+  * real subprocesses with ``HPDR_HOST_ID`` / ``HPDR_HOST_COUNT`` set
+    (``@subprocess`` tier) — the full multi-controller contract including
+    environment-driven topology detection.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, CheckpointPolicy
+from repro.core.container import ContainerError
+from repro.core.engine import ExecutionEngine
+from repro.launch.mesh import (
+    HostTopology,
+    barrier_payloads,
+    detect_topology,
+    fs_barrier,
+)
+from repro.runtime.io import (
+    AggregatedReader,
+    AggregatedWriter,
+    ShardSetReader,
+    shard_file_name,
+    stitch_shard_directories,
+)
+
+
+def _tree(seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    return {
+        "layers": {
+            f"w{i}": rng.normal(size=(32, 16 + i)).astype(np.float32)
+            for i in range(6)
+        },
+        "bias": rng.normal(size=(64,)).astype(np.float32),
+        "step": np.int32(11),
+    }
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+
+def test_detect_topology_env_override(monkeypatch):
+    monkeypatch.setenv("HPDR_HOST_COUNT", "4")
+    monkeypatch.setenv("HPDR_HOST_ID", "2")
+    topo = detect_topology()
+    assert (topo.host_id, topo.n_hosts) == (2, 4)
+    assert topo.multi_host
+
+
+def test_detect_topology_defaults_single_host(monkeypatch):
+    monkeypatch.delenv("HPDR_HOST_COUNT", raising=False)
+    monkeypatch.delenv("HPDR_HOST_ID", raising=False)
+    topo = detect_topology()
+    assert topo.n_hosts >= 1 and 0 <= topo.host_id < topo.n_hosts
+
+
+def test_host_topology_validates_range():
+    with pytest.raises(ValueError):
+        HostTopology(3, 2)
+
+
+def test_leaf_ownership_deterministic_partition():
+    keys = [f"layer{i}::w" for i in range(40)]
+    topos = [HostTopology(h, 4) for h in range(4)]
+    owned = [{k for k in keys if t.owns(k)} for t in topos]
+    # a partition: disjoint, covering, and stable across instances
+    assert set().union(*owned) == set(keys)
+    assert sum(len(o) for o in owned) == len(keys)
+    again = [{k for k in keys if HostTopology(h, 4).owns(k)} for h in range(4)]
+    assert owned == again
+
+
+def test_fs_barrier_rendezvous_and_payloads(tmp_path):
+    n = 3
+    errs = []
+
+    def host(h):
+        try:
+            fs_barrier(tmp_path, "sync", HostTopology(h, n), timeout=10.0,
+                       payload=f"host{h}")
+        except Exception as e:  # pragma: no cover - diagnostic
+            errs.append(e)
+
+    threads = [threading.Thread(target=host, args=(h,)) for h in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    payloads = barrier_payloads(tmp_path, "sync", HostTopology(0, n))
+    assert payloads == {0: "host0", 1: "host1", 2: "host2"}
+
+
+def test_fs_barrier_times_out_on_missing_host(tmp_path):
+    with pytest.raises(TimeoutError, match="1/2"):
+        fs_barrier(tmp_path, "late", HostTopology(0, 2), timeout=0.05)
+
+
+# ---------------------------------------------------------------------------
+# writer durability
+# ---------------------------------------------------------------------------
+
+
+def test_atomic_writer_commits_only_on_close(tmp_path):
+    path = tmp_path / "x.hpdr"
+    w = AggregatedWriter(path, atomic=True)
+    w.add("a", b"payload")
+    assert not path.exists()  # nothing at the target until commit
+    w.close()
+    assert path.exists()
+    assert not list(tmp_path.glob("*.tmp*"))  # staging file renamed away
+    with AggregatedReader(path) as r:
+        assert r.read("a") == b"payload"
+
+
+def test_atomic_writer_abort_leaves_no_trace(tmp_path):
+    path = tmp_path / "x.hpdr"
+    with pytest.raises(RuntimeError):
+        with AggregatedWriter(path, atomic=True) as w:
+            w.add("a", b"payload")
+            raise RuntimeError("crash mid-save")
+    assert not path.exists()
+    assert not list(tmp_path.glob("*"))  # temp staging file unlinked too
+
+
+def test_atomic_writer_overwrite_keeps_old_until_commit(tmp_path):
+    path = tmp_path / "x.hpdr"
+    with AggregatedWriter(path, atomic=True) as w:
+        w.add("a", b"old-bytes")
+    with pytest.raises(RuntimeError):
+        with AggregatedWriter(path, atomic=True) as w:
+            w.add("a", b"new-bytes")
+            raise RuntimeError("crash before commit")
+    with AggregatedReader(path) as r:  # the old file survived the torn write
+        assert r.read("a") == b"old-bytes"
+
+
+def test_fsync_atomic_writer_roundtrip(tmp_path):
+    path = tmp_path / "x.hpdr"
+    with AggregatedWriter(path, fsync=True, atomic=True) as w:
+        w.add("a", b"durable")
+    with AggregatedReader(path) as r:
+        assert r.read("a") == b"durable"
+
+
+# ---------------------------------------------------------------------------
+# stitching + shard-set reads (io layer)
+# ---------------------------------------------------------------------------
+
+
+def _write_shards(directory: Path, n_hosts: int, blobs_per_host: int = 3):
+    names = {}
+    for h in range(n_hosts):
+        with AggregatedWriter(
+            directory / shard_file_name(h), meta={"host": h}
+        ) as w:
+            for i in range(blobs_per_host):
+                w.add(f"s{h}-{i}", bytes([h]) * (100 + i))
+        names[str(h)] = shard_file_name(h)
+    return names
+
+
+def test_stitch_shard_directories_totals(tmp_path):
+    shard_files = _write_shards(tmp_path, 3)
+    stitched = stitch_shard_directories(tmp_path, shard_files)
+    assert sorted(stitched["shards"]) == ["0", "1", "2"]
+    assert stitched["segments"] == 9
+    assert stitched["shards"]["1"]["meta"] == {"host": 1}
+
+
+def test_stitch_names_torn_shard(tmp_path):
+    shard_files = _write_shards(tmp_path, 2)
+    (tmp_path / shard_file_name(1)).write_bytes(b"torn")
+    with pytest.raises(ContainerError, match="leaves-0001"):
+        stitch_shard_directories(tmp_path, shard_files)
+
+
+def test_shard_set_reader_locality_stats_and_lazy_open(tmp_path):
+    shard_files = _write_shards(tmp_path, 2)
+    with ShardSetReader(tmp_path, shard_files, local="0") as r:
+        assert r.read("0", "s0-0") == b"\x00" * 100
+        assert r.stats["local_preads"] == 1 and r.stats["cross_preads"] == 0
+        assert r.stats["shards_opened"] == ["0"]  # lazy: shard 1 untouched
+        r.read("1", "s1-0")
+        assert r.stats["cross_preads"] == 1
+        assert r.stats["shards_opened"] == ["0", "1"]
+        with pytest.raises(ContainerError, match="no shard"):
+            r.read("9", "s0-0")
+
+
+# ---------------------------------------------------------------------------
+# multi-host checkpoint save/restore (threads + explicit topologies)
+# ---------------------------------------------------------------------------
+
+
+def _threaded_save(directory, tree, n_hosts, step=1, policy=None):
+    """Run one multi-host save: one manager per simulated host, in threads."""
+    policy = policy or CheckpointPolicy(exact=True)
+    mgrs = [
+        CheckpointManager(directory, policy, topology=HostTopology(h, n_hosts))
+        for h in range(n_hosts)
+    ]
+    manifests: list = [None] * n_hosts
+    errs: list = []
+
+    def run(h):
+        try:
+            manifests[h] = mgrs[h].save(step, tree)
+        except Exception as e:
+            errs.append(e)
+
+    threads = [threading.Thread(target=run, args=(h,)) for h in range(n_hosts)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs
+    return mgrs, manifests
+
+
+def test_multihost_save_builds_global_manifest(tmp_path):
+    tree = _tree()
+    mgrs, manifests = _threaded_save(tmp_path, tree, 2)
+    m = manifests[0]
+    assert manifests[1] == m  # every host returns the stitched manifest
+    assert m["shards"] == {"0": shard_file_name(0), "1": shard_file_name(1)}
+    assert m["topology"] == {"hosts": 2}
+    assert m["stitched_segments"] == len(m["leaves"])
+    assert sorted(m["io"]) == ["0", "1"]
+    # every leaf entry names its shard, and both shards hold some leaves
+    shards_used = {e["shard"] for e in m["leaves"].values()}
+    assert shards_used == {"0", "1"}
+    for h in range(2):
+        assert (tmp_path / f"step_00000001" / shard_file_name(h)).exists()
+
+
+def test_multihost_restore_bit_identical_to_single_process(tmp_path):
+    tree = _tree()
+    _threaded_save(tmp_path / "multi", tree, 2)
+    single = CheckpointManager(
+        tmp_path / "single", CheckpointPolicy(exact=True),
+        topology=HostTopology(0, 1),
+    )
+    single.save(1, tree)
+    # a reader with no locality (fresh single process) sees both layouts
+    reader = CheckpointManager(
+        tmp_path / "multi", CheckpointPolicy(exact=True),
+        topology=HostTopology(0, 1),
+    )
+    flat_multi, _ = reader.restore(1)
+    flat_single, _ = single.restore(1)
+    assert sorted(flat_multi) == sorted(flat_single)
+    for k in flat_single:
+        np.testing.assert_array_equal(flat_multi[k], flat_single[k])
+        assert flat_multi[k].dtype == flat_single[k].dtype
+
+
+def test_same_topology_restore_preads_only_local_shard(tmp_path):
+    tree = _tree()
+    mgrs, manifests = _threaded_save(tmp_path, tree, 2)
+    all_keys = set(manifests[0]["leaves"])
+    union = set()
+    for h, mgr in enumerate(mgrs):
+        flat, _ = mgr.restore(1, leaves="local")
+        io = mgr.last_restore_io
+        assert io["cross_preads"] == 0
+        assert io["shards_opened"] == [str(h)]  # exactly the local shard
+        assert io["local_preads"] == len(flat) > 0
+        union |= set(flat)
+    assert union == all_keys  # locals across hosts cover the checkpoint
+
+
+def test_remeshed_restore_falls_back_to_cross_shard_preads(tmp_path):
+    tree = _tree()
+    _threaded_save(tmp_path, tree, 2)
+    # restart with a different host count: no locality claim is valid
+    remeshed = CheckpointManager(
+        tmp_path, CheckpointPolicy(exact=True), topology=HostTopology(0, 3)
+    )
+    flat, manifest = remeshed.restore(1)
+    assert sorted(flat) == sorted(manifest["leaves"])
+    io = remeshed.last_restore_io
+    assert io["local_preads"] == 0
+    assert io["cross_preads"] == len(flat)
+    assert sorted(io["shards_opened"]) == ["0", "1"]
+
+
+def test_corrupt_shard_raises_naming_it_and_healthy_scope_restores(tmp_path):
+    tree = _tree()
+    mgrs, manifests = _threaded_save(tmp_path, tree, 2)
+    m = manifests[0]
+    step_dir = tmp_path / "step_00000001"
+    # truncate host 1's shard: its trailer no longer parses
+    shard1 = step_dir / shard_file_name(1)
+    shard1.write_bytes(shard1.read_bytes()[:16])
+    with pytest.raises(ContainerError, match="leaves-0001"):
+        mgrs[0].restore(1)
+    # a restore scoped to the healthy shard's leaves never opens the torn
+    # one (lazy shard opening) and succeeds
+    healthy = [k for k, e in m["leaves"].items() if e["shard"] == "0"]
+    flat, _ = mgrs[0].restore(1, leaves=healthy)
+    assert sorted(flat) == sorted(healthy)
+    assert mgrs[0].last_restore_io["shards_opened"] == ["0"]
+
+
+def test_multihost_save_with_fsync_policy(tmp_path):
+    tree = _tree()
+    _, manifests = _threaded_save(
+        tmp_path, tree, 2, policy=CheckpointPolicy(exact=True, fsync=True)
+    )
+    assert manifests[0]["stitched_segments"] == len(manifests[0]["leaves"])
+
+
+# ---------------------------------------------------------------------------
+# engine-side io-lane routing
+# ---------------------------------------------------------------------------
+
+
+def test_engine_owned_only_drops_remote_leaves():
+    tree = _tree()
+    with ExecutionEngine(topology=HostTopology(0, 2)) as eng:
+        order, _raw, _jobs, stats = eng.encode_leaf_jobs(
+            tree, owned_only=True
+        )
+        topo = eng.topology
+        n_leaves = len(order) + stats["remote_leaves"]
+        assert stats["remote_leaves"] > 0
+        assert all(topo.owns(k) for k in order)
+        flat, cstats = eng.compress_pytree(tree, owned_only=True)
+        assert sorted(flat) == sorted(order)
+        assert cstats["remote_leaves"] == stats["remote_leaves"]
+        # default path is unchanged: every leaf, no drops
+        full, fstats = eng.compress_pytree(tree)
+        assert len(full) == n_leaves and fstats["remote_leaves"] == 0
+
+
+# ---------------------------------------------------------------------------
+# full multi-controller contract: 4 subprocess-simulated hosts
+# ---------------------------------------------------------------------------
+
+_HOST_SCRIPT = """
+import json, sys
+import numpy as np
+from repro.checkpoint import CheckpointManager, CheckpointPolicy
+from repro.launch.mesh import detect_topology
+
+directory = sys.argv[1]
+topo = detect_topology()  # from HPDR_HOST_ID / HPDR_HOST_COUNT
+assert topo.n_hosts == 4
+
+rng = np.random.default_rng(7)
+tree = {
+    "layers": {
+        "w%d" % i: rng.normal(size=(24, 8 + i)).astype(np.float32)
+        for i in range(6)
+    },
+    "bias": rng.normal(size=(48,)).astype(np.float32),
+    "step": np.int32(3),
+}
+mgr = CheckpointManager(directory, CheckpointPolicy(exact=True))
+manifest = mgr.save(1, tree)
+flat, _ = mgr.restore(1, leaves="local")
+print(json.dumps({
+    "host": topo.host_id,
+    "shards": sorted(manifest["shards"]),
+    "keys": sorted(flat),
+    "io": mgr.last_restore_io,
+}))
+"""
+
+
+@pytest.mark.subprocess
+def test_four_host_subprocess_save_restore(tmp_path):
+    ckpt = tmp_path / "ckpt"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        str(Path(__file__).resolve().parent.parent / "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    env["HPDR_HOST_COUNT"] = "4"
+    procs = []
+    for h in range(4):
+        env_h = dict(env)
+        env_h["HPDR_HOST_ID"] = str(h)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", _HOST_SCRIPT, str(ckpt)],
+            env=env_h, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True,
+        ))
+    reports = []
+    for h, p in enumerate(procs):
+        out, _ = p.communicate(timeout=480)
+        assert p.returncode == 0, f"host {h} failed:\n{out}"
+        reports.append(json.loads(out.strip().splitlines()[-1]))
+
+    step_dir = ckpt / "step_00000001"
+    assert sorted(p.name for p in step_dir.glob("*.hpdr")) == [
+        shard_file_name(h) for h in range(4)
+    ]
+    union = set()
+    for rep in reports:
+        assert rep["shards"] == ["0", "1", "2", "3"]
+        # same-topology restore: strictly local byte ranges
+        assert rep["io"]["cross_preads"] == 0
+        assert rep["io"]["shards_opened"] == [str(rep["host"])]
+        union |= set(rep["keys"])
+
+    # bit-identity against the single-process path, same tree
+    rng = np.random.default_rng(7)
+    tree = {
+        "layers": {
+            f"w{i}": rng.normal(size=(24, 8 + i)).astype(np.float32)
+            for i in range(6)
+        },
+        "bias": rng.normal(size=(48,)).astype(np.float32),
+        "step": np.int32(3),
+    }
+    single = CheckpointManager(
+        tmp_path / "single", CheckpointPolicy(exact=True),
+        topology=HostTopology(0, 1),
+    )
+    single.save(1, tree)
+    flat_single, _ = single.restore(1)
+    assert union == set(flat_single)
+    reader = CheckpointManager(
+        ckpt, CheckpointPolicy(exact=True), topology=HostTopology(0, 1)
+    )
+    flat_multi, manifest = reader.restore(1)
+    assert manifest["topology"] == {"hosts": 4}
+    for k in flat_single:
+        np.testing.assert_array_equal(flat_multi[k], flat_single[k])

@@ -408,6 +408,108 @@ def test_calibration_persists_across_processes(tmp_path):
     assert int(out2.strip().split()[-1]) == 0  # warm load: zero sweeps
 
 
+def test_race_winner_persisted_and_seeds_warm_start(cal_dir):
+    """A converged race's winner lands in the calibration store, and a
+    warm start (cleared tuner caches, same store) pins it with zero
+    exploration races."""
+    from repro.runtime import calibrate
+
+    _seed_store("zfp")
+    total, itemsize = 1 << 20, 4
+
+    def solve():
+        return tuner.plan_stream(total, itemsize, method="zfp",
+                                 dtype="float32")
+
+    seen = []
+    for _ in range(tuner._EXPLORE_K * tuner._EXPLORE_RUNS):
+        plan = solve()
+        cand = (plan.chunk_elems, plan.window)
+        if cand not in seen:
+            seen.append(cand)
+        fast = len(seen) >= 2 and cand == seen[1]
+        tuner.observe(plan, total, itemsize,
+                      plan.predicted_raw_s * (0.5 if fast else 2.0))
+    settled = solve()  # exploit step: pins AND persists the winner
+    rec = calibrate.get_race_winner("zfp", "float32", total, itemsize)
+    assert rec is not None
+    assert (rec["chunk_elems"], rec["window"]) == (settled.chunk_elems,
+                                                  settled.window)
+    assert rec["measured_s"] > 0
+
+    # simulate a fresh process: same store dir, all tuner caches dropped
+    calibrate.set_calibration_dir(cal_dir)
+    _seed_store("zfp")
+    started = tuner.RACES_STARTED
+    warm = solve()
+    assert (warm.chunk_elems, warm.window) == (settled.chunk_elems,
+                                               settled.window)
+    assert tuner.RACES_STARTED == started  # seeded race, no exploration
+
+
+@pytest.mark.subprocess
+def test_race_winner_persists_across_processes(tmp_path):
+    """Process 1 races candidates and persists the winner; process 2 starts
+    from the raced winner with zero new races."""
+    env = dict(os.environ)
+    env["HPDR_CALIBRATION_DIR"] = str(tmp_path)
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+
+    seed = (
+        "from repro.core import chunk_model as cm, tuner\n"
+        "from repro.runtime import calibrate\n"
+        "store = calibrate.load_store(None)\n"
+        "phi = cm.PhiModel(alpha=2e9 / (1 << 20), beta0=2e9 * 0.05,\n"
+        "                  gamma=2e9, c_threshold=1 << 20)\n"
+        "store.methods[calibrate.method_key('zfp', 'float32')] = (\n"
+        "    calibrate.MethodCalibration(\n"
+        "        method='zfp', dtype='float32', phi=phi,\n"
+        "        h2d=cm.AffineCost(t0=1e-5, bps=5e9),\n"
+        "        serialize=cm.AffineCost(t0=2e-5, bps=3e9),\n"
+        "        output_fraction=0.5))\n"
+        "store.window_overhead_s = 1e-5\n"
+        "store.host_frame_bps = 1e9\n"
+        "total, itemsize = 1 << 20, 4\n"
+    )
+    race = seed + (
+        "seen = []\n"
+        "for _ in range(tuner._EXPLORE_K * tuner._EXPLORE_RUNS):\n"
+        "    plan = tuner.plan_stream(total, itemsize, method='zfp',\n"
+        "                             dtype='float32')\n"
+        "    cand = (plan.chunk_elems, plan.window)\n"
+        "    if cand not in seen:\n"
+        "        seen.append(cand)\n"
+        "    fast = len(seen) >= 2 and cand == seen[1]\n"
+        "    tuner.observe(plan, total, itemsize,\n"
+        "                  plan.predicted_raw_s * (0.5 if fast else 2.0))\n"
+        "plan = tuner.plan_stream(total, itemsize, method='zfp',\n"
+        "                         dtype='float32')\n"
+        "rec = calibrate.get_race_winner('zfp', 'float32', total, itemsize)\n"
+        "assert rec is not None\n"
+        "print('WINNER', plan.chunk_elems, plan.window, tuner.RACES_STARTED)\n"
+    )
+    out1 = subprocess.run(
+        [sys.executable, "-c", race], env=env, capture_output=True,
+        text=True, check=True,
+    ).stdout
+    _, ce1, w1, started1 = out1.strip().splitlines()[-1].split()
+    assert int(started1) >= 1  # the cold process really raced
+
+    warm = seed + (
+        "plan = tuner.plan_stream(total, itemsize, method='zfp',\n"
+        "                         dtype='float32')\n"
+        "print('WINNER', plan.chunk_elems, plan.window, tuner.RACES_STARTED)\n"
+    )
+    out2 = subprocess.run(
+        [sys.executable, "-c", warm], env=env, capture_output=True,
+        text=True, check=True,
+    ).stdout
+    _, ce2, w2, started2 = out2.strip().splitlines()[-1].split()
+    assert (ce2, w2) == (ce1, w1)  # warm process starts at the raced winner
+    assert int(started2) == 0  # ...with zero exploration races
+
+
 # ---------------------------------------------------------------------------
 # auto wiring: CMM canonicalisation, bit-identity, small-payload guard
 # ---------------------------------------------------------------------------
