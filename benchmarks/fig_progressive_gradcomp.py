@@ -16,16 +16,17 @@ from repro.optim import grad_compress as gc
 
 
 def main() -> None:
-    # progressive retrieval: bytes vs error per prefix
+    # progressive retrieval: bytes vs error per component-prefix
     f = nyx_like(32)
     eb = 1e-3 * float(f.max() - f.min())
-    stream = progressive.refactor(jnp.asarray(f), eb, dict_size=65536)
+    stream = progressive.refactor(jnp.asarray(f), eb, tiers=3)
     curve = progressive.error_curve(stream, f)
     for c in curve:
         Row(
-            f"progressive.L{c['level']}",
+            f"progressive.tier{c['tier']}",
             0.0,
-            f"prefix_bytes={c['bytes']} max_err={c['max_err']:.3e}",
+            f"prefix_bytes={c['bytes']} bound={c['bound']:.3e} "
+            f"max_err={c['max_err']:.3e}",
         ).emit()
     Row("progressive.full_ratio", 0.0,
         f"ratio={f.nbytes/stream.nbytes():.2f}x bound_met={curve[-1]['max_err']<=eb}").emit()

@@ -1,0 +1,136 @@
+"""Progressive retrieval curve (PR 9) — emits BENCH_progressive.json.
+
+Refactors a Nyx-like field into precision components, writes the aggregated
+component file, and measures the acceptance surface of the progressive tier:
+
+  * **curve**        — per error bound: bytes fetched, preads, achieved
+    max-error, and the prefix-read ratio against the full container file;
+  * **refine_chain** — a coarse retrieve followed by one refine to the
+    finest bound: the chain must pread each component exactly once
+    (``prefix_additive``), total exactly the direct-full bytes, and beat
+    two independent full retrievals;
+  * **bit_identity** — the chained reconstruction equals a fresh direct
+    retrieve at the finest bound bit-for-bit.
+
+Usage:  python -m benchmarks.progressive_curve --smoke --out BENCH_progressive.json
+        (wired as ``scripts/check.sh bench progressive``)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+
+from .common import Row, nyx_like
+from repro.core import progressive
+
+
+def measure(n: int, tiers: int, rel_eb: float) -> dict:
+    f = nyx_like(n)
+    eb = rel_eb * float(f.max() - f.min())
+    stream = progressive.refactor(jnp.asarray(f), eb, tiers=tiers)
+    bounds = stream.tier_bounds
+
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "prog.hpdr"
+        stream.write(path)
+        file_bytes = os.path.getsize(path)
+
+        curve = []
+        for b in bounds:  # one fresh reader per bound: independent fetch cost
+            with progressive.ProgressiveReader(path) as r:
+                out = np.asarray(r.retrieve(err=b))
+                row = {
+                    "error_bound": b,
+                    "tiers_loaded": r.tiers_loaded,
+                    "bytes_fetched": r.bytes_fetched,
+                    "preads": r.preads,
+                    "max_err": float(np.abs(out - f).max()),
+                    "prefix_read_ratio": r.bytes_fetched / file_bytes,
+                }
+            curve.append(row)
+            Row(
+                f"progressive.bound{row['tiers_loaded'] - 1}",
+                0.0,
+                f"bytes={row['bytes_fetched']} preads={row['preads']} "
+                f"bound={b:.3e} max_err={row['max_err']:.3e} "
+                f"prefix_ratio={row['prefix_read_ratio']:.3f}",
+            ).emit()
+
+        with progressive.ProgressiveReader(path) as r:
+            r.retrieve(err=bounds[0])
+            coarse_bytes = r.bytes_fetched
+            refined = np.asarray(r.refine(err=bounds[-1]))
+            chain_total = r.bytes_fetched
+            chain_preads = r.preads
+        with progressive.ProgressiveReader(path) as direct:
+            full = np.asarray(direct.retrieve(err=bounds[-1]))
+            direct_bytes = direct.bytes_fetched
+
+    two_full = 2 * direct_bytes
+    chain = {
+        "coarse_bytes": coarse_bytes,
+        "refine_delta_bytes": chain_total - coarse_bytes,
+        "chain_total_bytes": chain_total,
+        "chain_preads": chain_preads,
+        "direct_full_bytes": direct_bytes,
+        "two_full_retrievals_bytes": two_full,
+        "prefix_additive": chain_total == direct_bytes,
+        "savings_vs_two_full": 1.0 - chain_total / two_full,
+        "bit_identical_to_direct": bool(np.array_equal(refined, full)),
+    }
+    Row(
+        "progressive.refine_chain",
+        0.0,
+        f"chain={chain_total} direct={direct_bytes} two_full={two_full} "
+        f"additive={chain['prefix_additive']} "
+        f"bit_identical={chain['bit_identical_to_direct']}",
+    ).emit()
+
+    return {
+        "field": {"n": n, "raw_mb": f.nbytes / 1e6},
+        "tiers": tiers,
+        "error_bound": eb,
+        "file_bytes": file_bytes,
+        "curve": curve,
+        "refine_chain": chain,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small field (CI)")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="write BENCH_progressive.json here")
+    args = ap.parse_args(argv)
+
+    n = 32 if args.smoke else 64
+    tiers = 3 if args.smoke else 4
+    report = measure(n, tiers, rel_eb=1e-4)
+    report["summary"] = {
+        "bounds_measured": len(report["curve"]),
+        "all_bounds_met": all(
+            c["max_err"] <= c["error_bound"] for c in report["curve"]
+        ),
+        "bytes_monotone": all(
+            b["bytes_fetched"] > a["bytes_fetched"]
+            for a, b in zip(report["curve"], report["curve"][1:])
+        ),
+        "prefix_additive": report["refine_chain"]["prefix_additive"],
+        "bit_identical": report["refine_chain"]["bit_identical_to_direct"],
+        "coarse_prefix_ratio": report["curve"][0]["prefix_read_ratio"],
+    }
+    if args.out:
+        args.out.write_text(json.dumps(report, indent=1))
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

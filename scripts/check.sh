@@ -30,6 +30,11 @@
 #                                   shared file across 1/2/4 subprocess-
 #                                   simulated hosts + restore pread locality
 #                                   -> BENCH_io.json
+#   scripts/check.sh bench progressive  progressive retrieval: bytes-fetched
+#                                   vs error bound at 3+ bounds, refine-chain
+#                                   prefix additivity + bit identity, prefix-
+#                                   read ratio vs full container read
+#                                   -> BENCH_progressive.json
 #   scripts/check.sh docs           execute every fenced ```python block in
 #                                   docs/*.md against the current API
 set -euo pipefail
@@ -48,7 +53,8 @@ if [[ "${1:-}" == "fast" ]]; then
     python -m pytest -x -q -m "not slow and not subprocess" \
       tests/test_conformance.py tests/test_pipeline.py tests/test_bitstream.py \
       tests/test_cmm.py tests/test_abstractions.py tests/test_api_portability.py \
-      tests/test_tuner.py \
+      tests/test_tuner.py tests/test_progressive.py \
+      tests/test_progressive_conformance.py \
       "$@"
   exit 0
 fi
@@ -82,6 +88,12 @@ if [[ "${1:-}" == "bench" ]]; then
     shift
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
       python -m benchmarks.fig15_17_18_multinode_io --smoke --out BENCH_io.json "$@"
+    exit 0
+  fi
+  if [[ "${1:-}" == "progressive" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+      python -m benchmarks.progressive_curve --smoke --out BENCH_progressive.json "$@"
     exit 0
   fi
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

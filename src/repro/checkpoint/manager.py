@@ -72,9 +72,14 @@ _COMMIT_POLL_S = 0.005
 
 @dataclass(frozen=True)
 class CheckpointPolicy:
-    float_method: str = "zfp"        # zfp | mgard | huffman-bytes (lossless)
+    # zfp | mgard | mgard-progressive | huffman-bytes (lossless);
+    # mgard-progressive writes one segment per precision tier so restore
+    # can pread a prefix (restore(max_error=...))
+    float_method: str = "zfp"
     zfp_rate: int = 28               # bits/value — ~1e-6 rel err, 1.14× smaller
     mgard_eb: float = 1e-6
+    progressive_tiers: int = 3       # precision components per leaf
+    progressive_ratio: float = 8.0   # bound ratio between adjacent tiers
     lossless_small: int = 16384      # tensors below this many elems: lossless
     exact: bool = False              # force lossless everywhere
     # float leaves at/above this many bytes go through the auto-tuned
@@ -107,16 +112,58 @@ def _method_for(arr: np.ndarray, policy: CheckpointPolicy) -> tuple[str, dict]:
         return "zfp", {"rate": policy.zfp_rate}
     if policy.float_method == "mgard":
         return "mgard", {"error_bound": policy.mgard_eb, "relative": True}
+    if policy.float_method == "mgard-progressive":
+        return "mgard-progressive", {
+            "error_bound": policy.mgard_eb, "relative": True,
+            "tiers": policy.progressive_tiers,
+            "tier_ratio": policy.progressive_ratio,
+        }
     return "huffman-bytes", {}
 
 
-def _compress_leaf(arr: np.ndarray, policy: CheckpointPolicy) -> bytes:
+def _compress_leaf(
+    arr: np.ndarray, policy: CheckpointPolicy
+) -> bytes | tuple[str, dict, list[bytes]]:
+    """One leaf's serialised form: container bytes, or — for progressive
+    leaves — ``("progressive", manifest, component_blobs)`` so the writer
+    can store each precision tier as its own addressable segment."""
     method, kw = _method_for(arr, policy)
-    return api.compress_leaf(arr, method, **kw).to_bytes()
+    c = api.compress_leaf(arr, method, **kw)
+    if c.method == "mgard-progressive":
+        from ..core import progressive
+
+        comps = [
+            np.ascontiguousarray(c.arrays[progressive.component_name(t)]).tobytes()
+            for t in range(len(c.meta["tier_bounds"]))
+        ]
+        return ("progressive", api._jsonable(c.meta), comps)
+    return c.to_bytes()
+
+
+def _restore_progressive(meta: dict, blobs: list[bytes]) -> np.ndarray:
+    """Reconstruct a progressive leaf from a component-blob prefix."""
+    from ..core import progressive
+
+    stream = progressive.ProgressiveStream(
+        manifest={
+            k: meta[k]
+            for k in ("shape", "padded", "L", "dict_size",
+                      "tier_bounds", "component_nbytes")
+        },
+        components=list(blobs),
+    )
+    out = np.asarray(progressive.retrieve(stream))
+    out = out.astype(np.dtype(meta.get("dtype", "float32")))
+    stub = api.Compressed(method="mgard-progressive", meta=meta, arrays={})
+    return api.restore_leaf(out, stub)
 
 
 def _should_stream(arr: np.ndarray, policy: CheckpointPolicy) -> bool:
     if policy.stream_threshold is None or policy.exact:
+        return False
+    if policy.float_method == "mgard-progressive":
+        # progressive leaves write per-tier segments, not a framed stream —
+        # prefix addressability is the whole point
         return False
     return arr.dtype.kind == "f" and arr.nbytes >= policy.stream_threshold
 
@@ -230,6 +277,24 @@ class CheckpointManager:
                 name = f"{base}~{i}"
                 i += 1
             used.add(name)
+            if isinstance(blob, tuple) and blob[0] == "progressive":
+                # one addressable segment per precision tier: restore can
+                # pread a component prefix (restore(max_error=...))
+                _, pmeta, comps = blob
+                seg_names, total = [], 0
+                for t, comp in enumerate(comps):
+                    seg = f"{name}~p{t:02d}"
+                    writer.add(seg, comp)
+                    seg_names.append(seg)
+                    total += len(comp)
+                entry = {
+                    "segments": seg_names, "bytes": total,
+                    "raw": arr.nbytes, "progressive": pmeta,
+                }
+                entries[key] = entry
+                raw_total += arr.nbytes
+                comp_total += total
+                continue
             writer.add(name, blob)
             entry = {"segment": name, "bytes": len(blob), "raw": arr.nbytes}
             if stream_info is not None:
@@ -405,8 +470,16 @@ class CheckpointManager:
         target: Any | None = None,
         shardings: Any | None = None,
         leaves: Any | None = None,
+        max_error: float | None = None,
     ) -> tuple[Any, dict]:
         """Load a checkpoint; optionally reshard onto a (new) mesh.
+
+        ``max_error`` (absolute L∞ bound) makes the restore *progressive*:
+        leaves checkpointed with ``float_method="mgard-progressive"`` read
+        only the component prefix whose tier bound satisfies it — coarser
+        restores pread strictly fewer bytes (``last_restore_io``).  Leaves
+        stored any other way are at final precision already and are
+        unaffected.
 
         ``target`` supplies the pytree structure; ``shardings`` (same
         structure) re-places every leaf — elastic restarts pass the new
@@ -455,6 +528,24 @@ class CheckpointManager:
             for key, info in manifest["leaves"].items():
                 if wanted is not None and key not in wanted:
                     continue
+                if "segments" in info:  # progressive: per-tier segments
+                    pmeta = info["progressive"]
+                    bounds = [float(b) for b in pmeta["tier_bounds"]]
+                    k = len(bounds)
+                    if max_error is not None:
+                        k = next(
+                            (i + 1 for i, b in enumerate(bounds)
+                             if b <= float(max_error)),
+                            k,
+                        )
+                    blobs = [
+                        shard_set.read(info["shard"], seg)
+                        if shard_set is not None
+                        else reader.read(seg)
+                        for seg in info["segments"][:k]
+                    ]
+                    flat[key] = _restore_progressive(pmeta, blobs)
+                    continue
                 if shard_set is not None:
                     raw = shard_set.read(info["shard"], info["segment"])
                 elif "segment" in info:
@@ -476,12 +567,14 @@ class CheckpointManager:
             elif reader is not None:
                 self.last_restore_io = {
                     "local_preads": reader.preads, "cross_preads": 0,
+                    "local_bytes": reader.pread_bytes, "cross_bytes": 0,
                     "shards_opened": [], "preads_by_shard": {},
                 }
                 reader.close()
             else:
                 self.last_restore_io = {
                     "local_preads": 0, "cross_preads": 0,
+                    "local_bytes": 0, "cross_bytes": 0,
                     "shards_opened": [], "preads_by_shard": {},
                 }
         if target is None:

@@ -34,11 +34,16 @@ method if/elif chain anywhere.  Higher-level entry points:
 
 Methods
 -------
-  mgard          error-bounded lossy (float arrays, 1-4D)
-  zfp            fixed-rate lossy (float arrays, 1-4D)
-  huffman        lossless entropy coding of integer key arrays
-  huffman-bytes  lossless byte-wise entropy coding of arbitrary arrays
-                 (the LZ-class baseline analogue in the paper's comparisons)
+  mgard              error-bounded lossy (float arrays, 1-4D)
+  mgard-progressive  error-bounded lossy refactored into precision tiers:
+                     separately addressable container components, prefix
+                     retrieval + incremental refinement
+                     (:mod:`repro.core.progressive`)
+  zfp                fixed-rate lossy (float arrays, 1-4D)
+  huffman            lossless entropy coding of integer key arrays
+  huffman-bytes      lossless byte-wise entropy coding of arbitrary arrays
+                     (the LZ-class baseline analogue in the paper's
+                     comparisons)
 """
 
 from __future__ import annotations
@@ -62,7 +67,7 @@ from .container import Compressed, ContainerError, _jsonable  # noqa: F401
 from .context import GLOBAL_CMM, ReductionContext
 from .stages.base import CallEnv, Stage, StageGraph, TransferStats  # noqa: F401
 
-METHODS = ("mgard", "zfp", "huffman", "huffman-bytes")
+METHODS = ("mgard", "mgard-progressive", "zfp", "huffman", "huffman-bytes")
 
 _STREAM_MAGIC = b"HPDS"
 _STREAM_VERSION = 1
@@ -183,6 +188,8 @@ def compress(
     relative: bool = True,
     rate: int = 16,
     dict_size: int = 4096,
+    tiers: int = 3,
+    tier_ratio: float = 8.0,
     backend: str | None = None,
     adapter: str | None = None,
 ) -> Compressed:
@@ -199,7 +206,8 @@ def compress(
     spec = make_spec(
         data, method,
         error_bound=error_bound, relative=relative, rate=rate,
-        dict_size=dict_size, backend=backend or adapter or adapters.AUTO,
+        dict_size=dict_size, tiers=tiers, tier_ratio=tier_ratio,
+        backend=backend or adapter or adapters.AUTO,
     )
     return encode(spec, data)
 
@@ -241,7 +249,7 @@ def leaf_policy(
     """
     arr = np.asarray(arr)
     params = dict(params or {})
-    if method in ("zfp", "mgard"):
+    if method in ("zfp", "mgard", "mgard-progressive"):
         x = arr
         if x.dtype != np.float32 and x.dtype.kind in ("f", "V"):
             x = x.astype(np.float32)

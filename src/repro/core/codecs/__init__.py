@@ -53,4 +53,9 @@ def available_methods() -> tuple[str, ...]:
 
 
 # Import order defines nothing — each module self-registers on import.
-from . import huffman_codec, mgard_codec, zfp_codec  # noqa: E402,F401
+from . import (  # noqa: E402,F401
+    huffman_codec,
+    mgard_codec,
+    progressive_codec,
+    zfp_codec,
+)

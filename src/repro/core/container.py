@@ -99,6 +99,10 @@ class Compressed:
                 "shape": list(self.arrays[n].shape),
                 "offset": payload.tell(),
                 "nbytes": len(raw),
+                # per-section checksum (additive): lets a reader verify and
+                # decode one section — e.g. a progressive component prefix —
+                # without touching the rest of the payload
+                "crc32": zlib.crc32(raw) & 0xFFFFFFFF,
             }
             payload.write(raw)
         pbytes = payload.getvalue()
@@ -203,3 +207,94 @@ class Compressed:
                 raise ContainerError(f"corrupt HPDR stream: section {n!r} out of bounds")
             arrays[n] = np.frombuffer(payload[lo:hi], dt).reshape(spec["shape"])
         return cls(method=header["method"], meta=header["meta"], arrays=arrays)
+
+
+# ---------------------------------------------------------------------------
+# partial reads: header peek + single-section fetch
+# ---------------------------------------------------------------------------
+
+
+def peek_header(raw: bytes) -> tuple[dict, int]:
+    """Parse a v2 container's header without touching the payload.
+
+    Returns ``(header, payload_base)``.  Only v2 streams carry a section
+    directory with offsets; v1 streams raise — callers wanting v1 compat go
+    through :meth:`Compressed.from_bytes`.
+    """
+    raw = bytes(raw)
+    if len(raw) < _HEADER_FIXED:
+        raise ContainerError(
+            f"truncated HPDR stream: {len(raw)} bytes < {_HEADER_FIXED}-byte header"
+        )
+    if raw[:4] != MAGIC:
+        raise ContainerError("not an HPDR stream")
+    version = int(np.frombuffer(raw[4:8], np.uint32)[0])
+    if version != 2:
+        raise ContainerError(
+            f"HPDR container version {version} has no section directory "
+            "(partial reads need v2)"
+        )
+    hlen = int(np.frombuffer(raw[8:16], np.uint64)[0])
+    if len(raw) < _HEADER_FIXED + hlen:
+        raise ContainerError("truncated HPDR stream: incomplete header")
+    try:
+        header = json.loads(raw[_HEADER_FIXED : _HEADER_FIXED + hlen].decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ContainerError(f"corrupt HPDR header: {e}") from e
+    return header, _HEADER_FIXED + hlen
+
+
+def read_section_bytes(raw: bytes, name: str) -> bytes:
+    """One section's exact payload bytes, verified without a full-payload scan.
+
+    Sections written with a per-section ``crc32`` entry are checked alone —
+    the bytes of other sections are never hashed or required to be intact.
+    Index-less older v2 streams (no per-section checksum) fall back to one
+    whole-payload crc verification on the host.  Corruption raises
+    :class:`ContainerError` naming the section.
+    """
+    header, base = peek_header(raw)
+    sec = header["sections"].get(name)
+    if sec is None:
+        raise ContainerError(f"no section {name!r} in HPDR stream")
+    lo, hi = base + int(sec["offset"]), base + int(sec["offset"]) + int(sec["nbytes"])
+    if hi > len(raw):
+        raise ContainerError(
+            f"truncated HPDR stream: section {name!r} needs bytes "
+            f"[{lo}:{hi}), stream has {len(raw)}"
+        )
+    blob = raw[lo:hi]
+    if "crc32" in sec:
+        crc = zlib.crc32(blob) & 0xFFFFFFFF
+        if crc != int(sec["crc32"]):
+            raise ContainerError(
+                f"corrupt HPDR section {name!r}: crc32 {crc:#010x} != "
+                f"recorded {int(sec['crc32']):#010x}"
+            )
+        return blob
+    # host fallback for streams predating per-section checksums: the only
+    # integrity record is the whole-payload crc32, so verify that once
+    pbytes = int(header["payload_bytes"])
+    if base + pbytes > len(raw):
+        raise ContainerError(
+            f"truncated HPDR stream: payload needs {pbytes} bytes, "
+            f"stream has {len(raw) - base} after header"
+        )
+    payload = raw[base : base + pbytes]
+    crc = zlib.crc32(payload) & 0xFFFFFFFF
+    if crc != int(header["crc32"]):
+        raise ContainerError(
+            f"corrupt HPDR payload (verifying section {name!r}): crc32 "
+            f"{crc:#010x} != recorded {int(header['crc32']):#010x}"
+        )
+    return blob
+
+
+def read_section(raw: bytes, name: str) -> np.ndarray:
+    """Like :func:`read_section_bytes`, shaped as the recorded array."""
+    header, _ = peek_header(raw)
+    sec = header["sections"].get(name)
+    if sec is None:
+        raise ContainerError(f"no section {name!r} in HPDR stream")
+    blob = read_section_bytes(raw, name)
+    return np.frombuffer(blob, np.dtype(sec["dtype"])).reshape(sec["shape"])

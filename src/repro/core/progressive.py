@@ -1,157 +1,503 @@
-"""Progressive retrieval — the data-refactoring side of the MGARD family.
+"""Progressive multi-precision retrieval — the HP-MDR side of MGARD.
 
-HPDR's context (paper refs [23]–[25]) is *refactoring*: store the multilevel
-decomposition so readers can retrieve a coarse-but-usable approximation
-from a byte prefix and refine incrementally.  This module layers that on
-MGARD-X:
+HPDR's refactoring context (paper refs [23]–[25]): store a field as a
+sequence of *precision components* so a reader fetches only the bytes a
+requested error bound needs, and refines incrementally later:
 
-  * ``refactor``      — decompose + per-level quantize + per-level Huffman
-                        streams, ordered coarsest → finest (each level is an
-                        independently decodable segment);
-  * ``retrieve``      — reconstruct from the first ``levels`` segments:
-                        missing fine coefficients are zero, so the result is
-                        exactly the level-``l`` interpolant of the data;
-  * error telescopes: each additional segment tightens the bound, and the
-                        full set reproduces plain MGARD-X compression.
+  * ``refactor``          — MGARD-decompose once, then quantize the residual
+                            coefficients at a geometric ladder of error
+                            bounds (tier 0 coarsest); each tier's keys ride
+                            the stage-graph Huffman pipeline and become one
+                            self-contained, separately addressable component;
+  * ``ProgressiveStream`` — the manifest + component blobs, serialisable as
+                            a v2 container (per-section crc32) or written as
+                            an ``AggregatedWriter`` segment file;
+  * ``ProgressiveReader`` — opens either form and answers ``retrieve(err=…)``
+                            by pread-ing exactly the component prefix that
+                            bound needs; ``refine(err'=…)`` preads only the
+                            delta and extends the cached coefficient sum, so
+                            earlier bytes are never re-read.
 
-This is the checkpoint-streaming feature of the framework: a restarting pod
-can begin warm-up from the coarse prefix while the tail is still in flight.
+Error contract: after loading tiers ``0..t`` the reconstruction satisfies
+``max|x − x̂| ≤ tier_bounds[t]`` — the residual left after tier ``t`` is
+exactly tier ``t``'s quantization error, so the plain MGARD bin-schedule
+proof applies per tier.  Retrieval accumulates dequantized tiers in fixed
+coarse→fine order, which makes ``retrieve(e)`` + ``refine(e')`` bit-identical
+to a direct ``retrieve(e')``.
+
+All plans resolve through the CMM: the MGARD executables come from the same
+geometry-keyed entry plain ``mgard`` decoding uses (one plan per shape
+regardless of bound), and per-tier entropy coding goes through
+``api.encode``/``api.decode`` on a shared Huffman spec — no plan-less legacy
+calls remain.
 """
 
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import api, huffman, mgard
+from . import api, container, mgard
+from .codecs import get_codec
 from .codecs.base import ReductionSpec
-from .quantize import signed_to_unsigned, unsigned_to_signed
+from .container import Compressed, ContainerError
+from .quantize import unsigned_to_signed
+
+METHOD = "mgard-progressive"
+DEFAULT_TIERS = 3
+DEFAULT_TIER_RATIO = 8.0
+
+_unsigned_to_signed_jit = jax.jit(unsigned_to_signed)
 
 
-def _mgard_plan(shape: tuple[int, ...], dtype, error_bound: float, dict_size: int):
-    """CMM-cached MGARD plan — shared with the compression API's contexts,
-    so refactoring and plain compression of the same field reuse one set of
-    jitted executables and one persistent level map."""
+def component_name(tier: int) -> str:
+    """Canonical section/segment name of one precision component."""
+    return f"component/{int(tier):05d}"
+
+
+def tier_bounds(
+    error_bound: float,
+    tiers: int = DEFAULT_TIERS,
+    tier_ratio: float = DEFAULT_TIER_RATIO,
+) -> list[float]:
+    """Geometric ladder of absolute bounds, coarsest first; the last entry
+    is ``error_bound`` itself (full precision)."""
+    eb = float(error_bound)
+    tiers = int(tiers)
+    ratio = float(tier_ratio)
+    if eb <= 0:
+        raise ValueError(f"error_bound must be positive, got {eb}")
+    if tiers < 1:
+        raise ValueError(f"need at least one tier, got {tiers}")
+    if ratio <= 1.0:
+        raise ValueError(f"tier_ratio must exceed 1, got {ratio}")
+    return [eb * ratio ** (tiers - 1 - t) for t in range(tiers)]
+
+
+def _mgard_plan(shape: tuple[int, ...], dict_size: int, backend=None):
+    """CMM-cached MGARD plan keyed on geometry only (no error bound): every
+    tier, every retrieval, and plain ``mgard`` decoding of the same shape
+    share one set of jitted executables and one persistent level map."""
+    kwargs = {} if backend is None else {"backend": backend}
     spec = ReductionSpec.create(
-        "mgard", shape, dtype,
-        error_bound=float(error_bound), relative=False, dict_size=int(dict_size),
+        "mgard", shape, "float32", dict_size=int(dict_size), **kwargs
     )
     return api.get_plan(spec)
 
 
+def _huffman_spec(n: int, backend=None) -> ReductionSpec:
+    """Shared CMM spec for per-tier key streams (one plan per grid size)."""
+    kwargs = {} if backend is None else {"backend": backend}
+    return get_codec("huffman").make_spec((int(n),), "int32", **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# stream object: manifest + component blobs
+# ---------------------------------------------------------------------------
+
+
 @dataclass
 class ProgressiveStream:
-    segments: list            # list[huffman.Encoded], coarsest level first
-    level_of_segment: list    # int ids matching mgard.level_map subsets
-    outlier_idx: np.ndarray
-    outlier_val: np.ndarray
-    bins: np.ndarray
-    shape: tuple
-    padded: tuple
-    error_bound: float
-    dict_size: int
+    """A refactored field: JSON-able manifest + per-tier component blobs.
 
-    def nbytes_upto(self, n_segments: int) -> int:
-        return sum(s.nbytes() for s in self.segments[:n_segments])
+    ``components`` may be a *prefix* of the manifest's tiers (a reader that
+    only fetched the coarse tiers still holds a valid stream); component
+    ``t`` is a self-contained v2 container (Huffman key stream + outliers).
+    """
+
+    manifest: dict
+    components: list = field(default_factory=list)
+
+    # ------------------------------------------------------------ accessors
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.manifest["shape"])
+
+    @property
+    def padded(self) -> tuple[int, ...]:
+        return tuple(self.manifest["padded"])
+
+    @property
+    def dict_size(self) -> int:
+        return int(self.manifest["dict_size"])
+
+    @property
+    def tier_bounds(self) -> list[float]:
+        return [float(b) for b in self.manifest["tier_bounds"]]
+
+    @property
+    def tiers(self) -> int:
+        return len(self.manifest["tier_bounds"])
+
+    def tiers_for(self, err: float | None) -> int:
+        """Smallest component prefix whose bound satisfies ``err``."""
+        if err is None:
+            return self.tiers
+        for k, b in enumerate(self.tier_bounds, start=1):
+            if b <= float(err):
+                return k
+        return self.tiers
+
+    def nbytes_upto(self, k: int) -> int:
+        return sum(int(n) for n in self.manifest["component_nbytes"][:k])
 
     def nbytes(self) -> int:
-        return self.nbytes_upto(len(self.segments))
+        return self.nbytes_upto(self.tiers)
+
+    # ----------------------------------------------- monolithic container
+
+    def to_container(self) -> Compressed:
+        """One v2 container: manifest in meta, one uint8 section per tier.
+
+        Per-section crc32 entries (container v2, additive) let
+        :meth:`ProgressiveReader.from_bytes` verify and decode a component
+        prefix without touching the later sections' bytes.
+        """
+        arrays = {
+            component_name(t): np.frombuffer(blob, np.uint8)
+            for t, blob in enumerate(self.components)
+        }
+        meta = dict(self.manifest)
+        meta.setdefault("dtype", "float32")
+        return Compressed(method=METHOD, meta=meta, arrays=arrays)
+
+    @classmethod
+    def from_container(cls, c: Compressed) -> "ProgressiveStream":
+        manifest = {
+            k: c.meta[k]
+            for k in (
+                "shape", "padded", "L", "dict_size",
+                "tier_bounds", "component_nbytes",
+            )
+        }
+        components = []
+        for t in range(len(manifest["tier_bounds"])):
+            name = component_name(t)
+            if name not in c.arrays:
+                break  # a reader may hold only a prefix
+            components.append(np.asarray(c.arrays[name], np.uint8).tobytes())
+        return cls(manifest=manifest, components=components)
+
+    def to_bytes(self) -> bytes:
+        return self.to_container().to_bytes()
+
+    @classmethod
+    def from_bytes(cls, raw: bytes) -> "ProgressiveStream":
+        return cls.from_container(Compressed.from_bytes(raw))
+
+    # ------------------------------------------------------ aggregated file
+
+    def write(self, path, *, align: int = 4096, **writer_kwargs) -> dict:
+        """Write an ``AggregatedWriter`` segment file: one crc-checked
+        segment per component, manifest in the directory meta.  Returns the
+        writer's closing directory."""
+        from ..runtime.io import AggregatedWriter  # lazy: core ↔ runtime
+
+        with AggregatedWriter(
+            path, align=align, meta=container._jsonable(self.manifest),
+            **writer_kwargs,
+        ) as w:
+            for t, blob in enumerate(self.components):
+                w.add(component_name(t), blob)
+        return w.directory()
+
+
+# ---------------------------------------------------------------------------
+# refactor: decompose once, residual-quantize per tier
+# ---------------------------------------------------------------------------
 
 
 def refactor(
-    data: jax.Array, error_bound: float, dict_size: int = 4096
+    data,
+    error_bound: float,
+    *,
+    tiers: int = DEFAULT_TIERS,
+    tier_ratio: float = DEFAULT_TIER_RATIO,
+    dict_size: int = 4096,
+    backend=None,
 ) -> ProgressiveStream:
-    """MGARD decomposition refactored into per-level entropy segments."""
+    """Refactor ``data`` into ``tiers`` precision components.
+
+    ``error_bound`` is the *absolute* L∞ bound of the finest tier; tier
+    ``t`` targets ``error_bound * tier_ratio**(tiers-1-t)``.  Each tier
+    quantizes the residual the previous tiers left, so components telescope
+    and a prefix read honours that prefix's bound exactly.
+    """
+    data = jnp.asarray(data)
+    if data.dtype != jnp.float32:
+        data = data.astype(jnp.float32)
     shape = tuple(data.shape)
-    plan = _mgard_plan(shape, data.dtype, error_bound, dict_size)
+    plan = _mgard_plan(shape, dict_size, backend)
+    padded, L = plan.meta["padded"], plan.meta["L"]
+    bounds = tier_bounds(error_bound, tiers, tier_ratio)
+    escape = int(dict_size) - 1
+
     coeffs = plan.executables["decompose"](data)
-    padded = plan.meta["padded"]
-    L = plan.meta["L"]
-    bins = mgard.level_bins(error_bound, L)
-    # snapshot + executable call both under the lock: the quantize stage
-    # donates the lmap buffer, so unlocked readers could see a dead buffer
-    with plan.lock:
-        lmap = np.asarray(plan.workspace["lmap"])
-        q_dev, _keys, _inlier, recycled = plan.executables["quantize"](
-            coeffs, plan.workspace["lmap"], jnp.asarray(bins, jnp.float32)
-        )
-        plan.recycle("lmap", recycled)
-    q = np.asarray(q_dev)
-    u = np.asarray(signed_to_unsigned(jnp.asarray(q))).reshape(-1)
-    escape = dict_size - 1
-    inlier = u < escape
-    keys = np.where(inlier, u, escape).astype(np.int32)
-    out_idx = np.nonzero(~inlier)[0]
-    out_val = q.reshape(-1)[out_idx]
+    partial = None
+    hspec = _huffman_spec(max(1, math.prod(padded)), backend)
+    components: list[bytes] = []
+    for t, eb_t in enumerate(bounds):
+        bins = jnp.asarray(mgard.level_bins(eb_t, L), jnp.float32)
+        residual = coeffs if partial is None else coeffs - partial
+        with plan.lock:  # quantize donates the lmap workspace buffer
+            q_dev, keys_dev, inlier_dev, recycled = plan.executables["quantize"](
+                residual, plan.workspace["lmap"], bins
+            )
+            plan.recycle("lmap", recycled)
+        keys = np.asarray(keys_dev).reshape(-1)
+        inlier = np.asarray(inlier_dev).reshape(-1)
+        out_idx = np.nonzero(~inlier)[0].astype(np.int64)
+        out_val = np.asarray(q_dev).reshape(-1)[out_idx].astype(np.int32)
 
-    flat_lmap = lmap.reshape(-1)
-    segments, level_ids = [], []
-    # coarsest (nodal values, id = L) first, then L-1 ... 0
-    for lid in range(L, -1, -1):
-        sel = flat_lmap == lid
-        if not sel.any():
-            continue
-        seg_keys = jnp.asarray(keys[sel])
-        segments.append(huffman.compress(seg_keys, dict_size))
-        level_ids.append(lid)
-    return ProgressiveStream(
-        segments=segments,
-        level_of_segment=level_ids,
-        outlier_idx=out_idx.astype(np.int64),
-        outlier_val=out_val.astype(np.int32),
-        bins=bins,
-        shape=shape,
-        padded=padded,
-        error_bound=float(error_bound),
-        dict_size=dict_size,
-    )
+        c = api.encode(hspec, jnp.asarray(keys))
+        c.meta.update(tier=t, error_bound=float(eb_t), escape=escape)
+        c.arrays.update(outlier_idx=out_idx, outlier_val=out_val)
+        components.append(c.to_bytes())
 
+        # Advance the encoder's partial with *exactly* what a reader will
+        # reconstruct for this tier (dequantized unclamped q), so the next
+        # residual telescopes without drift.
+        with plan.lock:
+            coeffs_t, recycled = plan.executables["dequantize"](
+                q_dev, plan.workspace["lmap"], bins
+            )
+            plan.recycle("lmap", recycled)
+        partial = coeffs_t if partial is None else partial + coeffs_t
 
-def retrieve(stream: ProgressiveStream, n_segments: int | None = None) -> jax.Array:
-    """Reconstruct from the first ``n_segments`` level segments."""
-    if n_segments is None:
-        n_segments = len(stream.segments)
-    n_segments = max(1, min(n_segments, len(stream.segments)))
-    plan = _mgard_plan(stream.shape, "float32", stream.error_bound, stream.dict_size)
-    with plan.lock:  # see refactor(): the workspace buffer may be donated
-        lmap = np.asarray(plan.workspace["lmap"])
-    flat_lmap = lmap.reshape(-1)
-    q = np.zeros(int(np.prod(stream.padded)), np.int32)
-    loaded_levels = set()
-    for seg, lid in zip(stream.segments[:n_segments],
-                        stream.level_of_segment[:n_segments]):
-        keys = np.asarray(huffman.decompress(seg))
-        vals = np.asarray(unsigned_to_signed(jnp.asarray(keys.astype(np.uint32))))
-        q[flat_lmap == lid] = vals
-        loaded_levels.add(lid)
-    # outliers only for loaded levels (they index the padded flat array)
-    if stream.outlier_idx.size:
-        mask = np.isin(flat_lmap[stream.outlier_idx], list(loaded_levels))
-        q[stream.outlier_idx[mask]] = stream.outlier_val[mask]
-    with plan.lock:
-        coeffs, recycled = plan.executables["dequantize"](
-            jnp.asarray(q.reshape(stream.padded)), plan.workspace["lmap"],
-            jnp.asarray(stream.bins, jnp.float32),
-        )
-        plan.recycle("lmap", recycled)
-    return plan.executables["recompose"](coeffs)
+    manifest = {
+        "shape": list(shape),
+        "padded": list(padded),
+        "L": int(L),
+        "dict_size": int(dict_size),
+        "tier_bounds": [float(b) for b in bounds],
+        "component_nbytes": [len(b) for b in components],
+    }
+    return ProgressiveStream(manifest=manifest, components=components)
 
 
-def error_curve(stream: ProgressiveStream, data: np.ndarray) -> list[dict]:
-    """Max-error and cumulative bytes after each retrieved segment."""
+# ---------------------------------------------------------------------------
+# retrieval: decode a component prefix, accumulate coarse→fine
+# ---------------------------------------------------------------------------
+
+
+def _component_q(blob: bytes, padded: tuple[int, ...], dict_size: int) -> np.ndarray:
+    """Decode one component blob back to its flat quantized values."""
+    c = Compressed.from_bytes(blob)
+    keys = np.asarray(api.decode(c), np.uint32).reshape(-1)
+    q = np.asarray(_unsigned_to_signed_jit(jnp.asarray(keys))).reshape(-1)
+    out_idx = np.asarray(c.arrays.get("outlier_idx", np.empty(0, np.int64)))
+    if out_idx.size:
+        q = q.copy()
+        q[out_idx] = np.asarray(c.arrays["outlier_val"], np.int32)
+    return q.astype(np.int32)
+
+
+def _accumulate(plan, manifest: dict, blobs: list, start: int, coeff_sum):
+    """Dequantize components ``start..start+len(blobs)`` into ``coeff_sum``.
+
+    Both the whole-stream path and :class:`ProgressiveReader.refine` run
+    through here, with the same left-to-right float accumulation order —
+    that shared order is what makes retrieve+refine bit-identical to a
+    direct retrieve at the finer bound.
+    """
+    padded = tuple(manifest["padded"])
+    L = int(manifest["L"])
+    dict_size = int(manifest["dict_size"])
+    bounds = manifest["tier_bounds"]
+    for i, blob in enumerate(blobs):
+        t = start + i
+        q = _component_q(blob, padded, dict_size).reshape(padded)
+        bins = jnp.asarray(mgard.level_bins(float(bounds[t]), L), jnp.float32)
+        with plan.lock:
+            coeffs_t, recycled = plan.executables["dequantize"](
+                jnp.asarray(q), plan.workspace["lmap"], bins
+            )
+            plan.recycle("lmap", recycled)
+        coeff_sum = coeffs_t if coeff_sum is None else coeff_sum + coeffs_t
+    return coeff_sum
+
+
+def retrieve(
+    stream: ProgressiveStream,
+    err: float | None = None,
+    *,
+    tiers: int | None = None,
+    backend=None,
+) -> jax.Array:
+    """Reconstruct from the component prefix satisfying ``err`` (or the
+    first ``tiers`` components; default: everything the stream holds)."""
+    if tiers is None:
+        k = stream.tiers_for(err)
+    else:
+        k = max(1, min(int(tiers), stream.tiers))
+    k = max(1, min(k, len(stream.components)))
+    plan = _mgard_plan(stream.shape, stream.dict_size, backend)
+    coeff = _accumulate(plan, stream.manifest, stream.components[:k], 0, None)
+    return plan.executables["recompose"](coeff)
+
+
+def error_curve(stream: ProgressiveStream, data) -> list[dict]:
+    """Achieved max-error and cumulative bytes after each component."""
+    data = np.asarray(data, np.float32)
     out = []
-    for n in range(1, len(stream.segments) + 1):
-        approx = np.asarray(retrieve(stream, n))
+    for k in range(1, len(stream.components) + 1):
+        approx = np.asarray(retrieve(stream, tiers=k))
         out.append(
             {
-                "segments": n,
-                "level": stream.level_of_segment[n - 1],
-                "bytes": stream.nbytes_upto(n),
-                "max_err": float(np.abs(approx - data).max()),
+                "tier": k - 1,
+                "bound": stream.tier_bounds[k - 1],
+                "bytes": stream.nbytes_upto(k),
+                "max_err": float(np.abs(approx - data).max()) if data.size else 0.0,
             }
         )
     return out
+
+
+# ---------------------------------------------------------------------------
+# reader: prefix preads + delta refinement
+# ---------------------------------------------------------------------------
+
+
+class _SegmentSource:
+    """Components from an aggregated segment file (one pread per tier)."""
+
+    def __init__(self, path):
+        from ..runtime.io import AggregatedReader  # lazy: core ↔ runtime
+
+        self.reader = AggregatedReader(path)
+        self.manifest = dict(self.reader.meta)
+
+    def read(self, tier: int) -> bytes:
+        return self.reader.read(component_name(tier))
+
+    def close(self) -> None:
+        self.reader.close()
+
+
+class _SectionSource:
+    """Components from a monolithic v2 container held in memory.
+
+    Per-section crc32 entries verify each component alone; old streams
+    written before per-section checksums fall back to one whole-payload
+    host verification (see :func:`repro.core.container.read_section_bytes`).
+    """
+
+    def __init__(self, raw: bytes):
+        self.raw = bytes(raw)
+        header, _ = container.peek_header(self.raw)
+        if header["method"] != METHOD:
+            raise ContainerError(
+                f"not a progressive stream: method {header['method']!r}"
+            )
+        self.manifest = dict(header["meta"])
+
+    def read(self, tier: int) -> bytes:
+        return container.read_section_bytes(self.raw, component_name(tier))
+
+    def close(self) -> None:
+        pass
+
+
+class ProgressiveReader:
+    """Incremental reader: ``retrieve`` fetches a prefix, ``refine`` a delta.
+
+    Accounting attributes (the acceptance surface):
+
+    * ``bytes_fetched`` — component payload bytes read so far;
+    * ``preads``        — component reads issued (one per tier, ever);
+    * ``tiers_loaded``  — components decoded into the cached coefficient sum.
+
+    A second call never re-reads earlier components: refinement decodes only
+    the new tiers and extends the cached sum in the same accumulation order
+    a direct retrieve would use, so the results are bit-identical.
+    """
+
+    def __init__(self, path=None, *, backend=None, _source=None):
+        self._source = _source if _source is not None else _SegmentSource(path)
+        self.manifest = self._source.manifest
+        self._backend = backend
+        self._plan = _mgard_plan(
+            tuple(self.manifest["shape"]), int(self.manifest["dict_size"]), backend
+        )
+        self.bytes_fetched = 0
+        self.preads = 0
+        self.tiers_loaded = 0
+        self._coeff = None
+
+    @classmethod
+    def from_bytes(cls, raw: bytes, *, backend=None) -> "ProgressiveReader":
+        """Reader over a monolithic container blob (section-prefix reads)."""
+        return cls(backend=backend, _source=_SectionSource(raw))
+
+    # ------------------------------------------------------------ accessors
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(self.manifest["shape"])
+
+    @property
+    def tier_bounds(self) -> list[float]:
+        return [float(b) for b in self.manifest["tier_bounds"]]
+
+    @property
+    def tiers(self) -> int:
+        return len(self.manifest["tier_bounds"])
+
+    def tiers_for(self, err: float | None) -> int:
+        if err is None:
+            return self.tiers
+        for k, b in enumerate(self.tier_bounds, start=1):
+            if b <= float(err):
+                return k
+        return self.tiers
+
+    # ------------------------------------------------------------- retrieval
+
+    def _load_upto(self, k: int) -> None:
+        blobs = []
+        for t in range(self.tiers_loaded, k):
+            blob = self._source.read(t)  # crc-checked, names the component
+            self.bytes_fetched += len(blob)
+            self.preads += 1
+            blobs.append(blob)
+        if blobs:
+            self._coeff = _accumulate(
+                self._plan, self.manifest, blobs, self.tiers_loaded, self._coeff
+            )
+            self.tiers_loaded = k
+
+    def retrieve(
+        self, err: float | None = None, *, tiers: int | None = None
+    ) -> jax.Array:
+        """Reconstruct at ``err`` (or a component count), fetching only the
+        not-yet-loaded part of the needed prefix."""
+        if tiers is None:
+            k = self.tiers_for(err)
+        else:
+            k = max(1, min(int(tiers), self.tiers))
+        # never discard precision already paid for: a coarser second call
+        # reuses the finer cached sum (still within the requested bound)
+        self._load_upto(max(k, self.tiers_loaded))
+        return self._plan.executables["recompose"](self._coeff)
+
+    def refine(
+        self, err: float | None = None, *, tiers: int | None = None
+    ) -> jax.Array:
+        """Tighten a previous retrieval; reads only the delta components."""
+        return self.retrieve(err, tiers=tiers)
+
+    # -------------------------------------------------------------- lifecycle
+
+    def close(self) -> None:
+        self._source.close()
+
+    def __enter__(self) -> "ProgressiveReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

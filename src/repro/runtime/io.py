@@ -326,6 +326,7 @@ class AggregatedReader:
         self._lock = threading.Lock()
         self._closed = False
         self.preads = 0  # observable for "reads exactly what it needs" tests
+        self.pread_bytes = 0  # bytes actually fetched (progressive-prefix stat)
         try:
             self.directory = self._read_directory()
         except Exception:
@@ -378,9 +379,11 @@ class AggregatedReader:
         return iter(self.segments)
 
     def pread(self, offset: int, nbytes: int) -> bytes:
+        raw = os.pread(self._fd, nbytes, offset)
         with self._lock:
             self.preads += 1
-        return os.pread(self._fd, nbytes, offset)
+            self.pread_bytes += len(raw)
+        return raw
 
     def read(self, name: str, *, verify: bool = True) -> bytes:
         """One segment's exact bytes (crc-checked unless ``verify=False``)."""
@@ -488,6 +491,7 @@ class ShardSetReader:
     locality tests assert on::
 
         {"local_preads": n, "cross_preads": n,
+         "local_bytes": n, "cross_bytes": n,
          "shards_opened": [...], "preads_by_shard": {shard: n}}
     """
 
@@ -505,6 +509,8 @@ class ShardSetReader:
         self.stats: dict = {
             "local_preads": 0,
             "cross_preads": 0,
+            "local_bytes": 0,
+            "cross_bytes": 0,
             "shards_opened": [],
             "preads_by_shard": {},
         }
@@ -527,8 +533,9 @@ class ShardSetReader:
     def read(self, shard: str, name: str, *, verify: bool = True) -> bytes:
         shard = str(shard)
         raw = self.reader(shard).read(name, verify=verify)
-        lane = "local_preads" if shard == self.local else "cross_preads"
-        self.stats[lane] += 1
+        local = shard == self.local
+        self.stats["local_preads" if local else "cross_preads"] += 1
+        self.stats["local_bytes" if local else "cross_bytes"] += len(raw)
         by = self.stats["preads_by_shard"]
         by[shard] = by.get(shard, 0) + 1
         return raw

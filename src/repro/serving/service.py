@@ -49,6 +49,7 @@ Typical use::
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from collections import deque
@@ -80,7 +81,7 @@ class ServiceOverloaded(RuntimeError):
 class _Request:
     """One admitted client request, resolved through ``future``."""
 
-    kind: str              # "compress" | "decompress" | "park_kv" | "stream"
+    kind: str  # "compress" | "decompress" | "park_kv" | "stream" | "quicklook"
     tenant: str
     future: Future
     t_enqueue: float
@@ -131,6 +132,8 @@ class ServiceStats:
     decode_fallback_leaves: int
     stream_requests: int
     stream_serial_degrades: int    # auto-tuned streams degraded to window=1
+    quicklook_requests: int
+    quicklook_bytes: int           # component bytes fetched by quicklooks
     per_tenant: dict[str, dict[str, Any]]
     executor_lanes: dict[str, dict[str, float]]
     kv: dict[str, Any]
@@ -214,6 +217,7 @@ class ReductionService:
             "bucket_requests_sum": 0, "decode_stacked_buckets": 0,
             "decode_stacked_leaves": 0, "decode_fallback_leaves": 0,
             "stream_requests": 0, "stream_serial_degrades": 0,
+            "quicklook_requests": 0, "quicklook_bytes": 0,
         }
         self._tenants: dict[str, dict[str, Any]] = {}
         # chunked single-array streams run on their own small pool: each
@@ -369,6 +373,39 @@ class ReductionService:
             window=window, timeout=timeout, **params,
         ).result()
 
+    def submit_quicklook(
+        self,
+        path: Any,
+        *,
+        err: float | None = None,
+        tiers: int | None = None,
+        tenant: str = _DEFAULT_TENANT,
+        timeout: float | None = None,
+    ) -> Submission:
+        """Admit a quicklook read of a progressive stream file.
+
+        ``path`` names an aggregated progressive file (written by
+        :meth:`repro.core.progressive.ProgressiveStream.write`).  With no
+        ``err``/``tiers`` the coarsest precision tier is answered from ONE
+        component ``pread`` — the cheap low-precision preview; an explicit
+        ``err`` (absolute bound) or ``tiers`` fetches exactly that prefix.
+        The future resolves to ``(array, info)`` with ``info`` carrying
+        ``bytes_fetched`` / ``preads`` / ``tiers_loaded`` / ``tier_bound`` /
+        ``file_bytes`` — the prefix-vs-full accounting.
+        """
+        req = _Request(
+            kind="quicklook", tenant=str(tenant), future=Future(),
+            t_enqueue=time.monotonic(), tree=path,
+            stream_kwargs={"err": err, "tiers": tiers},
+        )
+        return self._submit(req, timeout)
+
+    def quicklook(self, path, *, err=None, tiers=None,
+                  tenant=_DEFAULT_TENANT, timeout=None):
+        return self.submit_quicklook(
+            path, err=err, tiers=tiers, tenant=tenant, timeout=timeout
+        ).result()
+
     def submit_park_kv(
         self,
         session_id: str,
@@ -485,6 +522,10 @@ class ReductionService:
                     # off the dispatcher thread: the stream's staging loop
                     # blocks on its in-flight window
                     self._stream_pool.submit(self._run_stream, req)
+                elif req.kind == "quicklook":
+                    # one (or a prefix of) pread + a small reconstruction;
+                    # never let file I/O block the dispatcher
+                    self._stream_pool.submit(self._run_quicklook, req)
                 else:  # park_kv
                     sub = self.kv.park_async(
                         req.session_id, req.tree, tenant=req.tenant
@@ -557,6 +598,31 @@ class ReductionService:
                     self._m["stream_serial_degrades"] += 1
                 self._tenants[req.tenant]["raw_bytes"] += int(data.nbytes)
             self._resolve(req, (blob, info))
+        except Exception as e:
+            self._fail(req, e)
+
+    def _run_quicklook(self, req: _Request) -> None:
+        """Answer a precision-tier read from a progressive stream file."""
+        try:
+            from ..core import progressive  # lazy: serving ↔ core layering
+
+            err = req.stream_kwargs.get("err")
+            tiers = req.stream_kwargs.get("tiers")
+            with progressive.ProgressiveReader(req.tree) as r:
+                if err is None and tiers is None:
+                    tiers = 1  # default preview: coarsest tier, one pread
+                arr = np.asarray(r.retrieve(err, tiers=tiers))
+                info = {
+                    "bytes_fetched": r.bytes_fetched,
+                    "preads": r.preads,
+                    "tiers_loaded": r.tiers_loaded,
+                    "tier_bound": r.tier_bounds[r.tiers_loaded - 1],
+                    "file_bytes": int(os.path.getsize(req.tree)),
+                }
+            with self._mlock:
+                self._m["quicklook_requests"] += 1
+                self._m["quicklook_bytes"] += info["bytes_fetched"]
+            self._resolve(req, (arr, info))
         except Exception as e:
             self._fail(req, e)
 
@@ -722,6 +788,8 @@ class ReductionService:
             decode_fallback_leaves=m["decode_fallback_leaves"],
             stream_requests=m["stream_requests"],
             stream_serial_degrades=m["stream_serial_degrades"],
+            quicklook_requests=m["quicklook_requests"],
+            quicklook_bytes=m["quicklook_bytes"],
             per_tenant=tenants,
             executor_lanes=lanes,
             kv=kv_stats,

@@ -41,6 +41,10 @@ CASES = [
     ("mgard", "float32", (17,)),
     ("mgard", "float32", (5, 7)),
     ("mgard", "float64", (2, 3, 4, 5, 2)),   # >4-D: policy flattens
+    ("mgard-progressive", "float32", ()),
+    ("mgard-progressive", "float32", (17,)),
+    ("mgard-progressive", "float32", (5, 7)),
+    ("mgard-progressive", "float64", (2, 3, 4, 5, 2)),
     ("zfp", "float32", (1,)),
     ("zfp", "float32", (33,)),               # ragged → padded 4³ blocks
     ("zfp", "float32", (6, 7, 8)),
@@ -71,8 +75,11 @@ def _data(method: str, dtype: str, shape: tuple) -> np.ndarray:
 def _roundtrip(arr: np.ndarray, method: str, backend: str,
                decode_backend: str | None = None) -> tuple[Compressed, np.ndarray]:
     """Policy-encode on ``backend``, decode on ``decode_backend``."""
-    params = {"error_bound": 1e-2} if method == "mgard" else (
-        {"rate": 24} if method == "zfp" else {})
+    params = (
+        {"error_bound": 1e-2}
+        if method in ("mgard", "mgard-progressive")
+        else {"rate": 24} if method == "zfp" else {}
+    )
     x, pol_method, pol_params = api.leaf_policy(arr, method, params)
     spec = api.make_spec(x, pol_method, backend=backend, **pol_params)
     c = api.encode(spec, jnp.asarray(x))
@@ -87,11 +94,12 @@ def _check_contract(arr: np.ndarray, out: np.ndarray, method: str) -> None:
     assert out.shape == arr.shape and out.dtype == arr.dtype
     if method in ("huffman", "huffman-bytes"):
         np.testing.assert_array_equal(out, arr)     # lossless: bit-exact
-    elif method == "mgard":
+    elif method in ("mgard", "mgard-progressive"):
         vrange = float(arr.max() - arr.min()) if arr.size else 0.0
-        if vrange == 0.0:  # constant data: relative-to-range is vacuous
-            vrange = float(np.abs(arr).max(initial=0.0))
-        bound = 1e-2 * vrange + 1e-6
+        # constant data: relative-to-range is vacuous, and the bin schedule
+        # falls back to the *absolute* bound (BinSchedule.host_apply) — so
+        # that is the contract to hold the codec to
+        bound = 1e-2 * vrange + 1e-6 if vrange > 0.0 else 1e-2 + 1e-6
         assert np.abs(out - arr).max(initial=0.0) <= bound
     else:  # zfp fixed-rate: high rate on bounded data ⇒ small error
         scale = max(float(np.abs(arr).max(initial=0.0)), 1e-6)

@@ -1,9 +1,11 @@
-"""Progressive retrieval: telescoping error, prefix decodability, full == MGARD."""
+"""Progressive tier API: bounds per tier, CMM plan reuse, stream round-trips."""
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
 from repro.core import progressive
+from repro.core.context import GLOBAL_CMM
 from conftest import smooth_field_3d
 
 
@@ -15,41 +17,84 @@ def test_full_retrieval_meets_bound():
     assert np.abs(out - f).max() <= eb
 
 
-def test_error_telescopes():
+def test_every_tier_prefix_meets_its_bound():
+    """After loading tiers 0..t the error is within tier_bounds[t] — the
+    residual-quantization telescoping contract."""
     f = smooth_field_3d(32)
     eb = 1e-3 * float(f.max() - f.min())
-    stream = progressive.refactor(jnp.asarray(f), eb, dict_size=65536)
+    stream = progressive.refactor(jnp.asarray(f), eb, tiers=3)
     curve = progressive.error_curve(stream, f)
-    errs = [c["max_err"] for c in curve]
+    assert len(curve) == 3
+    for c in curve:
+        assert c["max_err"] <= c["bound"]
     sizes = [c["bytes"] for c in curve]
-    # strictly increasing bytes
-    assert all(b > a for a, b in zip(sizes, sizes[1:]))
-    # NB: max-norm error is NOT guaranteed monotone per level (MGARD's L2
-    # projections can overshoot pointwise mid-hierarchy); the telescoping
-    # guarantees are: the full stream meets the bound, and the tail is far
-    # below the head.
-    assert errs[-1] <= eb
-    assert errs[-1] < 0.05 * errs[0]
-    # early prefix is much smaller than the whole and still usable
-    assert sizes[0] < 0.5 * sizes[-1]
+    assert all(b > a for a, b in zip(sizes, sizes[1:]))  # strictly additive
+    # the coarse prefix is meaningfully cheaper than the full stream
+    assert sizes[0] < sizes[-1]
 
 
-def test_prefix_is_coarse_interpolant():
-    """One segment = nodal values only: retrieval equals the coarse-grid
-    interpolant of the data up to the quantization bound."""
-    f = smooth_field_3d(17)
-    eb = 1e-2 * float(f.max() - f.min())
-    stream = progressive.refactor(jnp.asarray(f), eb)
-    coarse = np.asarray(progressive.retrieve(stream, 1))
-    assert coarse.shape == f.shape
-    # the coarse approximation of a smooth field is already usable
-    assert np.abs(coarse - f).max() <= 0.75 * float(f.max() - f.min())
+def test_tier_bounds_ladder():
+    bounds = progressive.tier_bounds(1e-4, tiers=3, tier_ratio=8.0)
+    assert bounds == [64e-4, 8e-4, 1e-4]
+    with pytest.raises(ValueError):
+        progressive.tier_bounds(0.0)
+    with pytest.raises(ValueError):
+        progressive.tier_bounds(1e-3, tiers=0)
+    with pytest.raises(ValueError):
+        progressive.tier_bounds(1e-3, tier_ratio=1.0)
 
 
-def test_segments_decodable_independently():
+def test_tiers_for_picks_smallest_sufficient_prefix():
+    f = smooth_field_3d(16)
+    stream = progressive.refactor(jnp.asarray(f), 1e-4, tiers=3)
+    b = stream.tier_bounds
+    assert stream.tiers_for(None) == 3
+    assert stream.tiers_for(b[0] * 2) == 1
+    assert stream.tiers_for(b[1]) == 2
+    assert stream.tiers_for(b[2] / 10) == 3  # tighter than finest: all tiers
+
+
+def test_plans_resolve_through_cmm():
+    """refactor/retrieve share one geometry-keyed MGARD plan and one Huffman
+    plan per grid size — a second refactor at a *different* bound must add
+    zero CMM misses (regression: the legacy path built plan-less executables
+    per call)."""
+    f = smooth_field_3d(16)
+    GLOBAL_CMM.clear()
+    h0, m0 = GLOBAL_CMM.hit_count, GLOBAL_CMM.miss_count
+
+    s1 = progressive.refactor(jnp.asarray(f), 1e-2, tiers=2)
+    misses_first = GLOBAL_CMM.miss_count - m0
+    assert misses_first >= 1  # plans were built, through the CMM
+
+    s2 = progressive.refactor(jnp.asarray(f), 1e-3, tiers=3)
+    progressive.retrieve(s1)
+    progressive.retrieve(s2)
+
+    assert GLOBAL_CMM.miss_count == m0 + misses_first  # no new plans
+    assert GLOBAL_CMM.hit_count > h0  # later calls were cache hits
+
+
+def test_stream_bytes_roundtrip():
     f = smooth_field_3d(16)
     eb = 1e-2 * float(f.max() - f.min())
     stream = progressive.refactor(jnp.asarray(f), eb)
-    for n in (1, 2, len(stream.segments)):
-        out = np.asarray(progressive.retrieve(stream, n))
-        assert np.isfinite(out).all()
+    raw = stream.to_bytes()
+    back = progressive.ProgressiveStream.from_bytes(raw)
+    assert back.manifest == stream.manifest
+    assert back.components == stream.components
+    a = np.asarray(progressive.retrieve(stream))
+    b = np.asarray(progressive.retrieve(back))
+    assert np.array_equal(a, b)
+
+
+def test_prefix_stream_still_retrieves():
+    """A stream holding only a component prefix reconstructs at its bound."""
+    f = smooth_field_3d(16)
+    eb = 1e-3 * float(f.max() - f.min())
+    stream = progressive.refactor(jnp.asarray(f), eb, tiers=3)
+    coarse = progressive.ProgressiveStream(
+        manifest=stream.manifest, components=stream.components[:1]
+    )
+    out = np.asarray(progressive.retrieve(coarse))
+    assert np.abs(out - f).max() <= stream.tier_bounds[0]

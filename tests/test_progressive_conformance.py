@@ -1,0 +1,303 @@
+"""Refinement conformance suite for progressive multi-precision retrieval.
+
+Three property tiers (hypothesis, or the offline shim from
+``_hypothesis_compat``) plus a corruption tier mirroring the aggregated-file
+cases in ``test_conformance.py``:
+
+  * **monotone**   — achieved max-error never increases across refinement
+    steps, and every prefix honours its tier bound;
+  * **bit-identity** — ``retrieve(err)`` + ``refine(err')`` reconstructs the
+    exact same array (bit-for-bit) as a fresh reader's direct
+    ``retrieve(err')``, for both the aggregated-file and monolithic forms;
+  * **prefix-additive bytes** — a refinement chain preads each component
+    exactly once: chain total == direct-full total == sum of component
+    sizes, strictly less than two independent full retrievals;
+  * **corruption** — a damaged component (bit-flip, truncation, tampered
+    crc record) raises :class:`ContainerError` naming that component, while
+    retrieval at bounds whose prefix excludes it still succeeds; index-less
+    old streams without per-section checksums fall back to the whole-payload
+    crc on the host.
+"""
+
+import json
+import tempfile
+import zlib
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import container, progressive
+from repro.core.container import Compressed, ContainerError
+from conftest import smooth_field_3d
+
+# deterministic fields per (size, tiers) example drawn by the properties
+SIZES = st.integers(min_value=9, max_value=17)
+TIERS = st.integers(min_value=2, max_value=4)
+
+
+def _field(n: int) -> np.ndarray:
+    return smooth_field_3d(int(n))
+
+
+def _stream(n: int, tiers: int) -> progressive.ProgressiveStream:
+    f = _field(n)
+    eb = 1e-3 * float(f.max() - f.min())
+    return progressive.refactor(jnp.asarray(f), eb, tiers=int(tiers))
+
+
+# ---------------------------------------------------------------------------
+# property tier: monotone refinement
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=3, deadline=None)
+@given(SIZES, TIERS)
+def test_refinement_error_monotone(n, tiers):
+    """Each refinement step tightens (never worsens) the achieved error and
+    stays within its tier's advertised bound."""
+    f = _field(n)
+    stream = _stream(n, tiers)
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "prog.hpdr"
+        stream.write(path)
+        with progressive.ProgressiveReader(path) as r:
+            errs = []
+            for k in range(1, r.tiers + 1):
+                out = np.asarray(r.refine(tiers=k))
+                err = float(np.abs(out - f).max())
+                assert err <= r.tier_bounds[k - 1]
+                errs.append(err)
+    assert all(b <= a for a, b in zip(errs, errs[1:]))  # non-increasing
+
+
+# ---------------------------------------------------------------------------
+# property tier: retrieve + refine ≡ direct retrieve (bit-identical)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=3, deadline=None)
+@given(SIZES, TIERS)
+def test_refine_bit_identical_to_direct(n, tiers):
+    """retrieve(coarse) then refine(fine) must reproduce a direct
+    retrieve(fine) bit-for-bit — same accumulation order, no drift."""
+    stream = _stream(n, tiers)
+    coarse_err, fine_err = stream.tier_bounds[0], stream.tier_bounds[-1]
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "prog.hpdr"
+        stream.write(path)
+        with progressive.ProgressiveReader(path) as r:
+            r.retrieve(err=coarse_err)
+            refined = np.asarray(r.refine(err=fine_err))
+        with progressive.ProgressiveReader(path) as direct:
+            full = np.asarray(direct.retrieve(err=fine_err))
+    assert np.array_equal(refined, full)
+    # the monolithic (section-pread) form reconstructs identically too
+    mono = progressive.ProgressiveReader.from_bytes(stream.to_bytes())
+    mono.retrieve(err=coarse_err)
+    assert np.array_equal(np.asarray(mono.refine(err=fine_err)), full)
+    # and both match the in-memory whole-stream path
+    assert np.array_equal(np.asarray(progressive.retrieve(stream)), full)
+
+
+# ---------------------------------------------------------------------------
+# property tier: bytes fetched are strictly prefix-additive
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=3, deadline=None)
+@given(SIZES, TIERS)
+def test_bytes_fetched_prefix_additive(n, tiers):
+    """A refinement chain never re-reads: each step adds exactly the new
+    components' bytes, and the chain total equals one direct full retrieve —
+    strictly cheaper than two independent full retrievals."""
+    stream = _stream(n, tiers)
+    with tempfile.TemporaryDirectory() as td:
+        path = Path(td) / "prog.hpdr"
+        stream.write(path)
+        with progressive.ProgressiveReader(path) as r:
+            seen = 0
+            for k in range(1, r.tiers + 1):
+                r.refine(tiers=k)
+                assert r.preads == k            # one pread per component, ever
+                assert r.bytes_fetched == stream.nbytes_upto(k)
+                assert r.bytes_fetched > seen   # strictly growing
+                seen = r.bytes_fetched
+            r.refine(tiers=r.tiers)             # idempotent: no re-read
+            assert r.preads == r.tiers
+            chain_total = r.bytes_fetched
+        with progressive.ProgressiveReader(path) as direct:
+            direct.retrieve()
+            direct_total = direct.bytes_fetched
+    assert chain_total == direct_total == stream.nbytes()
+    assert chain_total < 2 * direct_total
+
+
+# ---------------------------------------------------------------------------
+# corruption tier: aggregated segment files
+# ---------------------------------------------------------------------------
+
+
+def _flip_segment_byte(path: Path, directory: dict, name: str) -> None:
+    seg = directory["segments"][name]
+    raw = bytearray(path.read_bytes())
+    raw[int(seg["offset"]) + int(seg["nbytes"]) // 2] ^= 0x01
+    path.write_bytes(bytes(raw))
+
+
+def test_aggregated_component_bitflip_names_component(tmp_path):
+    """A flipped byte inside one component fails that component's crc on
+    pread — naming it — while bounds whose prefix stops earlier still work."""
+    stream = _stream(16, 3)
+    path = tmp_path / "prog.hpdr"
+    directory = stream.write(path)
+    victim = progressive.component_name(2)
+    _flip_segment_byte(path, directory, victim)
+
+    with progressive.ProgressiveReader(path) as r:
+        coarse = r.retrieve(err=r.tier_bounds[1])      # tiers 0–1: intact
+        assert np.isfinite(np.asarray(coarse)).all()
+        assert r.tiers_loaded == 2
+        with pytest.raises(ContainerError, match="component/00002"):
+            r.refine(err=r.tier_bounds[2])
+    with progressive.ProgressiveReader(path) as fresh:  # full read also loud
+        with pytest.raises(ContainerError, match="crc32"):
+            fresh.retrieve()
+
+
+def test_aggregated_component_crc_tamper(tmp_path):
+    """Tampering the *recorded* crc32 in the trailer directory (same-length
+    JSON edit) is detected on the segment pread."""
+    stream = _stream(12, 2)
+    path = tmp_path / "prog.hpdr"
+    directory = stream.write(path)
+    crc = int(directory["segments"][progressive.component_name(0)]["crc32"])
+    raw = path.read_bytes()
+    needle = json.dumps(crc).encode()
+    tampered = str(crc + 1 if len(str(crc + 1)) == len(str(crc)) else crc - 1)
+    idx = raw.rindex(needle)
+    path.write_bytes(raw[:idx] + tampered.encode() + raw[idx + len(needle):])
+
+    with progressive.ProgressiveReader(path) as r:
+        with pytest.raises(ContainerError, match="component/00000"):
+            r.retrieve(tiers=1)
+
+
+def test_aggregated_component_truncation(tmp_path):
+    """Chopping the file mid-way through the last component leaves earlier
+    tiers readable; the torn component read raises loudly."""
+    stream = _stream(16, 3)
+    path = tmp_path / "prog.hpdr"
+    directory = stream.write(path)
+    last = directory["segments"][progressive.component_name(2)]
+    raw = path.read_bytes()
+    # keep the trailer directory but gut the last component's tail bytes
+    cut_lo = int(last["offset"]) + int(last["nbytes"]) // 2
+    cut_hi = int(last["offset"]) + int(last["nbytes"])
+    path.write_bytes(raw[:cut_lo] + b"\0" * (cut_hi - cut_lo) + raw[cut_hi:])
+
+    with progressive.ProgressiveReader(path) as r:
+        out = r.retrieve(err=r.tier_bounds[1])
+        assert np.isfinite(np.asarray(out)).all()
+        with pytest.raises(ContainerError, match="component/00002"):
+            r.refine()
+
+
+# ---------------------------------------------------------------------------
+# corruption tier: monolithic v2 containers (section preads)
+# ---------------------------------------------------------------------------
+
+
+def _section_extent(raw: bytes, name: str) -> tuple[int, int]:
+    header, base = container.peek_header(raw)
+    sec = header["sections"][name]
+    lo = base + int(sec["offset"])
+    return lo, lo + int(sec["nbytes"])
+
+
+def test_monolithic_component_bitflip_names_component():
+    stream = _stream(16, 3)
+    raw = bytearray(stream.to_bytes())
+    lo, hi = _section_extent(bytes(raw), progressive.component_name(1))
+    raw[(lo + hi) // 2] ^= 0x01
+
+    r = progressive.ProgressiveReader.from_bytes(bytes(raw))
+    out = r.retrieve(tiers=1)                  # prefix before the damage: fine
+    assert np.isfinite(np.asarray(out)).all()
+    with pytest.raises(ContainerError, match="component/00001"):
+        r.refine(tiers=2)
+
+
+def test_monolithic_truncation_names_component():
+    stream = _stream(12, 2)
+    raw = stream.to_bytes()
+    lo, _hi = _section_extent(raw, progressive.component_name(1))
+    torn = raw[: lo + 4]                       # last component torn mid-blob
+
+    r = progressive.ProgressiveReader.from_bytes(torn)
+    assert np.isfinite(np.asarray(r.retrieve(tiers=1))).all()
+    with pytest.raises(ContainerError, match="component/00001"):
+        r.refine(tiers=2)
+
+
+def test_indexless_stream_host_fallback():
+    """Old v2 streams without per-section crc32 entries: reads fall back to
+    one whole-payload verification — intact streams decode, and corruption
+    anywhere is reported against the requested component."""
+    stream = _stream(12, 2)
+    raw = stream.to_bytes()
+    header, base = container.peek_header(raw)
+    for sec in header["sections"].values():
+        sec.pop("crc32", None)                 # simulate a pre-index stream
+    hjson = json.dumps(header).encode()
+    stripped = (
+        raw[:8]
+        + np.uint64(len(hjson)).tobytes()
+        + hjson
+        + raw[base:]
+    )
+
+    r = progressive.ProgressiveReader.from_bytes(stripped)
+    full = np.asarray(r.retrieve())
+    assert np.array_equal(full, np.asarray(progressive.retrieve(stream)))
+
+    flipped = bytearray(stripped)
+    flipped[-3] ^= 0x01                        # corrupt somewhere in payload
+    r2 = progressive.ProgressiveReader.from_bytes(bytes(flipped))
+    with pytest.raises(ContainerError, match="component/00000"):
+        r2.retrieve(tiers=1)
+
+
+def test_non_progressive_stream_rejected():
+    c = Compressed(method="mgard", meta={}, arrays={"q": np.zeros(4, np.uint8)})
+    with pytest.raises(ContainerError, match="progressive"):
+        progressive.ProgressiveReader.from_bytes(c.to_bytes())
+
+
+# ---------------------------------------------------------------------------
+# slow tier: a larger sweep of the same properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_large_field_chain_conformance(tmp_path):
+    f = smooth_field_3d(40)
+    eb = 1e-4 * float(f.max() - f.min())
+    stream = progressive.refactor(jnp.asarray(f), eb, tiers=4)
+    path = tmp_path / "prog.hpdr"
+    stream.write(path)
+    with progressive.ProgressiveReader(path) as r:
+        prev = None
+        for k in range(1, 5):
+            out = np.asarray(r.refine(tiers=k))
+            err = float(np.abs(out - f).max())
+            assert err <= r.tier_bounds[k - 1]
+            if prev is not None:
+                assert err <= prev
+            prev = err
+        assert r.preads == 4
+        assert r.bytes_fetched == stream.nbytes()
+    with progressive.ProgressiveReader(path) as direct:
+        assert np.array_equal(np.asarray(direct.retrieve()), out)
