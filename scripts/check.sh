@@ -19,7 +19,10 @@
 #                                   -> BENCH_pipeline.json
 #   scripts/check.sh bench serving  reduction-service concurrency: latency
 #                                   p50/p99 + goodput at >=3 offered loads,
-#                                   batch fill ratio vs batch window
+#                                   batch fill ratio vs batch window, PLUS
+#                                   the socket-mode run: per-priority
+#                                   p50/p99 over the wire protocol and the
+#                                   interactive-under-bulk-saturation bound
 #                                   -> BENCH_serving.json
 #   scripts/check.sh bench tuner    auto-tuner validation: auto vs best/worst
 #                                   fixed (chunk, window) configs per codec +
@@ -55,6 +58,7 @@ if [[ "${1:-}" == "fast" ]]; then
       tests/test_cmm.py tests/test_abstractions.py tests/test_api_portability.py \
       tests/test_tuner.py tests/test_progressive.py \
       tests/test_progressive_conformance.py \
+      tests/test_wire_protocol.py tests/test_wire_fault.py \
       "$@"
   exit 0
 fi

@@ -54,6 +54,36 @@ class ContainerError(ValueError):
     """
 
 
+def crc32_of(data: bytes | bytearray | memoryview) -> int:
+    """The framework's canonical checksum: unsigned crc32 of ``data``.
+
+    Shared by the container payload/section checksums, the aggregated-file
+    segment directory, and the serving wire protocol's frame integrity
+    field — one function so every layer hashes (and prints) checksums the
+    same way.
+    """
+    return zlib.crc32(data) & 0xFFFFFFFF
+
+
+def check_crc32(
+    data: bytes | bytearray | memoryview,
+    recorded: int,
+    what: str,
+    exc: type[Exception] = ContainerError,
+) -> None:
+    """Verify ``data`` against a recorded crc32; raise ``exc`` naming ``what``.
+
+    The error message always carries both checksums in ``0x``-hex — torn
+    writes and bit flips surface as loud, greppable mismatches rather than
+    silently corrupt tensors (or, on the wire, silently corrupt frames).
+    """
+    crc = crc32_of(data)
+    if crc != int(recorded):
+        raise exc(
+            f"corrupt {what}: crc32 {crc:#010x} != recorded {int(recorded):#010x}"
+        )
+
+
 def _jsonable(d: dict) -> dict:
     out = {}
     for k, v in d.items():
@@ -193,12 +223,7 @@ class Compressed:
                 f"stream has {len(raw) - base} after header"
             )
         payload = raw[base : base + pbytes]
-        crc = zlib.crc32(payload) & 0xFFFFFFFF
-        if crc != header["crc32"]:
-            raise ContainerError(
-                f"corrupt HPDR payload: crc32 {crc:#010x} != recorded "
-                f"{header['crc32']:#010x}"
-            )
+        check_crc32(payload, header["crc32"], "HPDR payload")
         arrays = {}
         for n, spec in header["sections"].items():
             dt = np.dtype(spec["dtype"])
@@ -265,12 +290,7 @@ def read_section_bytes(raw: bytes, name: str) -> bytes:
         )
     blob = raw[lo:hi]
     if "crc32" in sec:
-        crc = zlib.crc32(blob) & 0xFFFFFFFF
-        if crc != int(sec["crc32"]):
-            raise ContainerError(
-                f"corrupt HPDR section {name!r}: crc32 {crc:#010x} != "
-                f"recorded {int(sec['crc32']):#010x}"
-            )
+        check_crc32(blob, sec["crc32"], f"HPDR section {name!r}")
         return blob
     # host fallback for streams predating per-section checksums: the only
     # integrity record is the whole-payload crc32, so verify that once
@@ -281,12 +301,9 @@ def read_section_bytes(raw: bytes, name: str) -> bytes:
             f"stream has {len(raw) - base} after header"
         )
     payload = raw[base : base + pbytes]
-    crc = zlib.crc32(payload) & 0xFFFFFFFF
-    if crc != int(header["crc32"]):
-        raise ContainerError(
-            f"corrupt HPDR payload (verifying section {name!r}): crc32 "
-            f"{crc:#010x} != recorded {int(header['crc32']):#010x}"
-        )
+    check_crc32(
+        payload, header["crc32"], f"HPDR payload (verifying section {name!r})"
+    )
     return blob
 
 

@@ -271,7 +271,9 @@ class ExecutionEngine:
             and api.get_plan(spec).pipeline is not None
         )
 
-    def submit_encode_bucket(self, spec: ReductionSpec, items: list) -> Submission:
+    def submit_encode_bucket(
+        self, spec: ReductionSpec, items: list, *, priority: str | None = None
+    ) -> Submission:
         """One whole-mesh submission for a stackable bucket.
 
         Resolves to the per-item containers (leaf meta finished), aligned
@@ -290,13 +292,17 @@ class ExecutionEngine:
                 self.sharded_leaves += len(items)
             return out
 
-        return self.executor.submit(run, device=MESH)
+        return self.executor.submit(run, device=MESH, priority=priority)
 
-    def submit_encode_job(self, job: tuple) -> Submission:
+    def submit_encode_job(
+        self, job: tuple, *, priority: str | None = None
+    ) -> Submission:
         """Per-leaf fallback submission; resolves to one finished container."""
         key, arr, x, spec = job
         del key
-        return self.executor.submit(self._encode_leaf, spec, x, arr)
+        return self.executor.submit(
+            self._encode_leaf, spec, x, arr, priority=priority
+        )
 
     def decode_leaf_groups(
         self, comp: dict[str, Any]
@@ -344,7 +350,8 @@ class ExecutionEngine:
         return prepared
 
     def submit_decode_bucket(
-        self, spec: ReductionSpec, items: list, prepared: list
+        self, spec: ReductionSpec, items: list, prepared: list,
+        *, priority: str | None = None,
     ) -> Submission:
         """One whole-mesh submission for a stacked decode bucket.
 
@@ -359,11 +366,13 @@ class ExecutionEngine:
                 self.sharded_decoded_leaves += len(items)
             return out
 
-        return self.executor.submit(run, device=MESH)
+        return self.executor.submit(run, device=MESH, priority=priority)
 
-    def submit_decode_job(self, spec: ReductionSpec, c: Compressed) -> Submission:
+    def submit_decode_job(
+        self, spec: ReductionSpec, c: Compressed, *, priority: str | None = None
+    ) -> Submission:
         """Per-leaf decode fallback; resolves to the restored leaf."""
-        return self.executor.submit(self._decode_leaf, spec, c)
+        return self.executor.submit(self._decode_leaf, spec, c, priority=priority)
 
     # -------------------------------------------------------- pytree fan-out
 

@@ -105,6 +105,10 @@ class DeviceExecutor:
         self._lane_started = {COMPUTE: 0, IO: 0}
         self._lane_completed = {COMPUTE: 0, IO: 0}
         self._lane_wait_s = {COMPUTE: 0.0, IO: 0.0}
+        # per-priority counters (priority is an opaque caller label — the
+        # serving layer tags submissions "interactive"/"bulk" so operators
+        # can see which class is eating each lane)
+        self._prio: dict[str, dict[str, float]] = {}
 
     # ------------------------------------------------------------ submission
 
@@ -118,6 +122,7 @@ class DeviceExecutor:
         *args: Any,
         device: Any = None,
         lane: str = COMPUTE,
+        priority: str | None = None,
         **kwargs: Any,
     ) -> Submission:
         """Schedule ``fn(*args, **kwargs)``; returns a :class:`Submission`.
@@ -126,7 +131,9 @@ class DeviceExecutor:
         by async checkpoint saves); ``lane="compute"`` (default) round-robins
         over the device ring.  ``device=MESH`` runs on the compute pool with
         no default-device pin — for tasks that span the whole mesh (stacked
-        shard_map buckets).
+        shard_map buckets).  ``priority`` is an optional caller label
+        accumulated into :meth:`priority_stats` (the serving layer tags
+        interactive vs bulk work).
         """
         if lane == IO:
             pool, dev = self._io_pool, None
@@ -142,11 +149,16 @@ class DeviceExecutor:
                 )
             self.submitted += 1
             self._lane_submitted[lane_key] += 1
+            if priority is not None:
+                self._prio_entry(priority)["submitted"] += 1
             if device is MESH:
                 self.mesh_submitted += 1
         t_sub = time.perf_counter()
+        out: Future = Future()
         try:
-            future = pool.submit(self._run, dev, lane_key, t_sub, fn, args, kwargs)
+            pool.submit(
+                self._run, out, dev, lane_key, priority, t_sub, fn, args, kwargs
+            )
         except RuntimeError as e:
             # lost the race with a concurrent shutdown(): undo the counters
             # so drain() still converges, and surface a clear error instead
@@ -154,12 +166,21 @@ class DeviceExecutor:
             with self._lock:
                 self.submitted -= 1
                 self._lane_submitted[lane_key] -= 1
+                if priority is not None:
+                    self._prio_entry(priority)["submitted"] -= 1
                 if device is MESH:
                     self.mesh_submitted -= 1
             raise RuntimeError(
                 "DeviceExecutor is shut down: submit after close"
             ) from e
-        return Submission(future, dev, lane)
+        return Submission(out, dev, lane)
+
+    def _prio_entry(self, priority: str) -> dict[str, float]:
+        # caller holds self._lock
+        return self._prio.setdefault(
+            priority,
+            {"submitted": 0, "started": 0, "completed": 0, "wait_s": 0.0},
+        )
 
     def submit_after(
         self,
@@ -169,6 +190,7 @@ class DeviceExecutor:
         *args: Any,
         device: Any = None,
         lane: str = COMPUTE,
+        priority: str | None = None,
         **kwargs: Any,
     ) -> Submission:
         """Schedule ``fn(sub.result(), *args, **kwargs)`` once ``sub`` resolves.
@@ -197,7 +219,7 @@ class DeviceExecutor:
             try:
                 inner = self.submit(
                     fn, upstream.result(), *args,
-                    device=device, lane=lane, **kwargs
+                    device=device, lane=lane, priority=priority, **kwargs
                 )
             except BaseException as e:  # e.g. pool already shut down —
                 # done-callbacks swallow exceptions, so surface it on the
@@ -210,22 +232,38 @@ class DeviceExecutor:
         return Submission(out, device, lane)
 
     def _run(
-        self, device: Any, lane: str, t_sub: float,
-        fn: Callable, args: tuple, kwargs: dict,
-    ) -> Any:
+        self, out: Future, device: Any, lane: str, priority: str | None,
+        t_sub: float, fn: Callable, args: tuple, kwargs: dict,
+    ) -> None:
         t_start = time.perf_counter()
         with self._lock:
             self._lane_started[lane] += 1
             self._lane_wait_s[lane] += t_start - t_sub
+            if priority is not None:
+                e = self._prio_entry(priority)
+                e["started"] += 1
+                e["wait_s"] += t_start - t_sub
         try:
-            if device is None:
-                return fn(*args, **kwargs)
-            with jax.default_device(device):
-                return fn(*args, **kwargs)
+            try:
+                if device is None:
+                    res = fn(*args, **kwargs)
+                else:
+                    with jax.default_device(device):
+                        res = fn(*args, **kwargs)
+            except BaseException as exc:
+                out.set_exception(exc)
+            else:
+                # resolve BEFORE counting the task complete: done-callbacks
+                # (the serving demux, submit_after continuations) run inline
+                # here, so drain() cannot return while a completion callback
+                # is still fanning results out or chaining io-lane work
+                out.set_result(res)
         finally:
             with self._lock:
                 self.completed += 1
                 self._lane_completed[lane] += 1
+                if priority is not None:
+                    self._prio_entry(priority)["completed"] += 1
                 self._idle.notify_all()
 
     def map(self, fn: Callable, items: Sequence[Any]) -> list[Any]:
@@ -264,6 +302,24 @@ class DeviceExecutor:
                 for lane in (COMPUTE, IO)
             }
 
+    def priority_stats(self) -> dict[str, dict[str, float]]:
+        """Per-priority counters for submissions tagged with ``priority=``.
+
+        Keys are whatever labels callers used (the serving layer submits
+        ``"interactive"`` and ``"bulk"``); values mirror the lane counters:
+        submitted/started/completed, ``depth`` (queued for a thread) and
+        cumulative ``wait_s``.
+        """
+        with self._lock:
+            return {
+                p: {
+                    **e,
+                    "depth": e["submitted"] - e["started"],
+                    "inflight": e["started"] - e["completed"],
+                }
+                for p, e in self._prio.items()
+            }
+
     @property
     def closed(self) -> bool:
         with self._lock:
@@ -273,12 +329,14 @@ class DeviceExecutor:
         """Block until every submitted task has completed; True on quiesce.
 
         Safe to call concurrently with ``submit`` (tasks submitted while
-        draining extend the wait) and idempotent.  Chained continuations
-        (``submit_after``) count once their upstream resolves and the
-        continuation is actually submitted; callers who need a full chain
-        drained should hold the chain's final :class:`Submission` and
-        ``result()`` it — drain is the pool-level quiesce, not a dataflow
-        barrier.
+        draining extend the wait) and idempotent.  A task counts as
+        complete only after its :class:`Submission` resolved and every
+        ``add_done_callback`` ran — so continuations chained with
+        ``submit_after`` are *submitted* (and therefore awaited) before the
+        upstream task can satisfy drain.  A full dataflow chain quiesces
+        under one ``drain()`` call; it cannot return between a submission
+        completing and its io-lane completion callbacks finishing (the
+        pre-PR-10 shutdown race).
         """
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._idle:

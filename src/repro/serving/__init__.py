@@ -1,3 +1,4 @@
+from .client import ReductionClient  # noqa: F401
 from .engine import (  # noqa: F401
     KVPageStore,
     Request,
@@ -6,8 +7,20 @@ from .engine import (  # noqa: F401
     decompress_kv_cache,
     park_kv_cache_async,
 )
+from .protocol import (  # noqa: F401
+    MAX_FRAME_BYTES,
+    PROTOCOL_VERSION,
+    Frame,
+    ProtocolError,
+    encode_frame,
+    parse_frame,
+)
+from .server import ReductionServer  # noqa: F401
 from .service import (  # noqa: F401
+    BULK,
+    INTERACTIVE,
     OVERLOAD_POLICIES,
+    PRIORITIES,
     ReductionService,
     ServiceOverloaded,
     ServiceStats,

@@ -13,7 +13,18 @@ request layer that restores aggregation *across* clients:
     (backpressure on the producer, optionally bounded by a timeout),
     ``"reject"`` (fail fast with :class:`ServiceOverloaded`), or
     ``"shed"`` (drop the *oldest* queued request — freshest-first under
-    overload, the classic load-shedding rule).
+    overload, the classic load-shedding rule; bulk is shed before
+    interactive).
+  * **Priority classes** (PR 10) — admission splits into ``interactive``
+    (quicklook, admitted KV fetch) and ``bulk`` (compress/decompress,
+    streams, parks) lanes.  The dispatcher's weighted dequeue prefers
+    interactive but forces one bulk request through after
+    ``starvation_limit`` consecutive interactive pops while bulk waits,
+    so neither class starves.  Per-priority wait histograms
+    (p50/p99/mean/max) land in :class:`ServiceStats` — and cross-request
+    ``decompress_stream`` requests for the SAME stream coalesce per
+    dispatch cycle through the container chunk index (each distinct
+    chunk decoded once).
   * **Request coalescing** — the dispatcher drains whatever arrives within
     a short ``batch_window`` and merges same-``(spec, shape, dtype)`` leaf
     jobs *from different requests* into ONE stacked bucket submission on
@@ -33,8 +44,15 @@ request layer that restores aggregation *across* clients:
     heavy tenant cannot displace another's sessions.
   * **Service metrics** — :meth:`ReductionService.stats` snapshots a
     :class:`ServiceStats`: queue depth, admission wait times, batch fill
-    ratio, coalesce hits, shed/reject counts, per-tenant bytes, and the
-    executor's per-lane queue-depth/wait-time counters.
+    ratio, coalesce hits, shed/reject counts, per-tenant bytes, per-
+    priority wait histograms, per-connection byte counters (fed by the
+    wire server), and the executor's per-lane and per-priority
+    queue-depth/wait-time counters.
+
+Cross-process clients reach the same service through the wire protocol —
+:class:`~repro.serving.server.ReductionServer` /
+:class:`~repro.serving.client.ReductionClient` (``serving/protocol.py``
+frames; socket results byte-identical to these in-process calls).
 
 Typical use::
 
@@ -70,6 +88,28 @@ _DEFAULT_TENANT = "default"
 
 OVERLOAD_POLICIES = ("block", "reject", "shed")
 
+# Priority classes (PR 10): latency-sensitive reads vs bulk reduction.
+# ``interactive`` work is answered from metadata-scale or single-pread
+# paths (progressive quicklooks, parked-KV fetches); ``bulk`` is the
+# engine-bound compress/decompress traffic.  The dispatcher dequeues
+# interactive first, with a starvation bound guaranteeing bulk progress.
+INTERACTIVE, BULK = "interactive", "bulk"
+PRIORITIES = (INTERACTIVE, BULK)
+
+_KIND_PRIORITY = {
+    "quicklook": INTERACTIVE,
+    "fetch_kv": INTERACTIVE,
+    "compress": BULK,
+    "decompress": BULK,
+    "stream": BULK,
+    "decompress_stream": BULK,
+    "park_kv": BULK,
+}
+
+# bounded reservoir per priority for wait-time histograms: enough samples
+# for a stable p99 without unbounded growth on long-lived services
+_WAIT_SAMPLES = 4096
+
 
 class ServiceOverloaded(RuntimeError):
     """Raised when the admission queue is full (``reject``), an admission
@@ -104,6 +144,10 @@ class _Request:
     coalesced: bool = False
     lock: threading.Lock = field(default_factory=threading.Lock)
 
+    @property
+    def priority(self) -> str:
+        return _KIND_PRIORITY.get(self.kind, BULK)
+
 
 @dataclass
 class ServiceStats:
@@ -134,8 +178,19 @@ class ServiceStats:
     stream_serial_degrades: int    # auto-tuned streams degraded to window=1
     quicklook_requests: int
     quicklook_bytes: int           # component bytes fetched by quicklooks
+    stream_decode_requests: int
+    chunk_decodes: int             # stream chunks actually decoded
+    chunk_coalesce_hits: int       # chunk needs served from another request's decode
     per_tenant: dict[str, dict[str, Any]]
+    # per-priority admission view: depth, admitted/dispatched counts, the
+    # starvation-bound trips ("forced"), and the wait histogram
+    # (mean/max/p50/p99 over a bounded reservoir)
+    priorities: dict[str, dict[str, float]]
     executor_lanes: dict[str, dict[str, float]]
+    executor_priorities: dict[str, dict[str, float]]
+    # wire-server connection accounting (empty when no server is attached):
+    # open/opened/closed counts, aggregate+per-connection byte counters
+    connections: dict[str, Any]
     kv: dict[str, Any]
 
     def as_dict(self) -> dict:
@@ -167,6 +222,13 @@ class ReductionService:
         queued (burst batching) without adding latency.
     max_batch_requests:
         Upper bound on requests merged into one dispatch cycle.
+    starvation_limit:
+        The weighted-dequeue starvation bound: at most this many
+        consecutive ``interactive`` requests are dequeued while ``bulk``
+        work waits, after which one bulk request is forced through.
+        Interactive work (quicklook, fetch_kv) therefore waits behind at
+        most ONE in-progress dispatch plus the batch window, and bulk can
+        be delayed by at most ``starvation_limit`` interactive dequeues.
     kv_store:
         A pre-built tenant-scoped :class:`KVPageStore`; by default one is
         created with ``kv_capacity_bytes`` / ``tenant_quota_bytes``.
@@ -180,6 +242,7 @@ class ReductionService:
         overload: str = "block",
         batch_window: float = 0.002,
         max_batch_requests: int = 32,
+        starvation_limit: int = 4,
         kv_store: KVPageStore | None = None,
         kv_capacity_bytes: int = 256 << 20,
         kv_rate: int = 12,
@@ -190,11 +253,14 @@ class ReductionService:
             raise ValueError(
                 f"overload must be one of {OVERLOAD_POLICIES}, got {overload!r}"
             )
+        if starvation_limit < 1:
+            raise ValueError("starvation_limit must be >= 1")
         self.engine = engine if engine is not None else engine_mod.default_engine()
         self.max_queue = int(max_queue)
         self.overload = overload
         self.batch_window = float(batch_window)
         self.max_batch_requests = int(max_batch_requests)
+        self.starvation_limit = int(starvation_limit)
         self.kv = kv_store if kv_store is not None else KVPageStore(
             capacity_bytes=kv_capacity_bytes,
             spill_dir=spill_dir,
@@ -202,7 +268,10 @@ class ReductionService:
             engine=self.engine,
             tenant_quota_bytes=tenant_quota_bytes,
         )
-        self._queue: deque[_Request] = deque()
+        self._queues: dict[str, deque[_Request]] = {
+            p: deque() for p in PRIORITIES
+        }
+        self._interactive_run = 0  # consecutive interactive dequeues
         self._cond = threading.Condition()
         self._closing = False
         self._inflight = 0
@@ -218,6 +287,22 @@ class ReductionService:
             "decode_stacked_leaves": 0, "decode_fallback_leaves": 0,
             "stream_requests": 0, "stream_serial_degrades": 0,
             "quicklook_requests": 0, "quicklook_bytes": 0,
+            "stream_decode_requests": 0, "chunk_decodes": 0,
+            "chunk_coalesce_hits": 0,
+        }
+        self._prio_m = {
+            p: {"admitted": 0, "dispatched": 0, "forced": 0,
+                "wait_s_total": 0.0, "wait_s_max": 0.0}
+            for p in PRIORITIES
+        }
+        self._wait_samples: dict[str, deque[float]] = {
+            p: deque(maxlen=_WAIT_SAMPLES) for p in PRIORITIES
+        }
+        # wire-server connection counters (fed by ReductionServer)
+        self._conns: dict[str, dict[str, int]] = {}
+        self._conn_totals = {
+            "opened": 0, "closed": 0, "rx_bytes": 0, "tx_bytes": 0,
+            "frames_rx": 0, "frames_tx": 0, "protocol_errors": 0,
         }
         self._tenants: dict[str, dict[str, Any]] = {}
         # chunked single-array streams run on their own small pool: each
@@ -234,12 +319,24 @@ class ReductionService:
 
     # ------------------------------------------------------------- admission
 
+    def _depth(self) -> int:
+        # caller holds _cond
+        return sum(len(q) for q in self._queues.values())
+
+    def _shed_victim(self) -> _Request | None:
+        # caller holds _cond.  Shed the oldest BULK request first: under
+        # overload the latency-sensitive class is the last to be dropped.
+        for prio in (BULK, INTERACTIVE):
+            if self._queues[prio]:
+                return self._queues[prio].popleft()
+        return None
+
     def _admit(self, req: _Request, timeout: float | None) -> None:
         with self._cond:
             if self._closing:
                 raise RuntimeError("ReductionService is closed")
             deadline = None if timeout is None else time.monotonic() + timeout
-            while len(self._queue) >= self.max_queue:
+            while self._depth() >= self.max_queue:
                 if self.overload == "reject":
                     with self._mlock:
                         self._m["rejected"] += 1
@@ -247,7 +344,7 @@ class ReductionService:
                         f"admission queue full ({self.max_queue} requests)"
                     )
                 if self.overload == "shed":
-                    victim = self._queue.popleft()
+                    victim = self._shed_victim()
                     with self._mlock:
                         self._m["shed"] += 1
                     # resolve outside _cond?  set_exception is lock-free and
@@ -268,10 +365,11 @@ class ReductionService:
                 self._cond.wait(remaining)
                 if self._closing:
                     raise RuntimeError("ReductionService is closed")
-            self._queue.append(req)
+            self._queues[req.priority].append(req)
             self._inflight += 1
             with self._mlock:
                 self._m["admitted"] += 1
+                self._prio_m[req.priority]["admitted"] += 1
                 t = self._tenants.setdefault(
                     req.tenant, {"requests": 0, "raw_bytes": 0}
                 )
@@ -406,6 +504,61 @@ class ReductionService:
             path, err=err, tiers=tiers, tenant=tenant, timeout=timeout
         ).result()
 
+    def submit_decompress_stream(
+        self,
+        source: Any,
+        *,
+        chunks: tuple[int, int] | None = None,
+        tenant: str = _DEFAULT_TENANT,
+        timeout: float | None = None,
+    ) -> Submission:
+        """Admit a chunked-stream decode; future resolves to ``(array, info)``.
+
+        ``source`` is a stream file path (written by
+        :meth:`~repro.core.api.CompressorStream.to_file`) or framed stream
+        bytes (:meth:`to_bytes`); ``chunks=(lo, hi)`` restores only that
+        chunk range (concatenated along the stream axis), reading only
+        those chunks' byte ranges via the container chunk index.
+
+        Requests for the SAME stream admitted within one dispatch cycle are
+        coalesced: each distinct chunk is decoded once and shared — the
+        ``chunk_coalesce_hits`` counter is the win.  ``info`` carries the
+        chunk range, the group's decode/hit counts, and ``bytes_read``.
+        """
+        req = _Request(
+            kind="decompress_stream", tenant=str(tenant), future=Future(),
+            t_enqueue=time.monotonic(), tree=source,
+            stream_kwargs={"chunks": chunks},
+        )
+        return self._submit(req, timeout)
+
+    def decompress_stream(self, source, *, chunks=None,
+                          tenant=_DEFAULT_TENANT, timeout=None):
+        return self.submit_decompress_stream(
+            source, chunks=chunks, tenant=tenant, timeout=timeout
+        ).result()
+
+    def submit_fetch_kv(
+        self,
+        session_id: str,
+        *,
+        tenant: str = _DEFAULT_TENANT,
+        timeout: float | None = None,
+    ) -> Submission:
+        """Admit a parked-KV fetch on the ``interactive`` priority lane.
+
+        Unlike the direct :meth:`fetch_kv` (which bypasses admission
+        entirely), this admitted form is what remote clients ride: it
+        contends through the priority queue — where interactive work
+        preempts bulk — and its wait lands in the interactive histogram.
+        The future resolves to the session's compressed containers.
+        """
+        req = _Request(
+            kind="fetch_kv", tenant=str(tenant), future=Future(),
+            t_enqueue=time.monotonic(), session_id=str(session_id),
+        )
+        return self._submit(req, timeout)
+
     def submit_park_kv(
         self,
         session_id: str,
@@ -443,6 +596,44 @@ class ReductionService:
     def set_tenant_quota(self, tenant: str, capacity_bytes: int | None) -> None:
         self.kv.set_tenant_quota(tenant, capacity_bytes)
 
+    # ------------------------------------------------- connection accounting
+
+    def note_connection(
+        self,
+        conn_id: str,
+        *,
+        opened: bool = False,
+        closed: bool = False,
+        rx_bytes: int = 0,
+        tx_bytes: int = 0,
+        frames_rx: int = 0,
+        frames_tx: int = 0,
+        protocol_errors: int = 0,
+    ) -> None:
+        """Accumulate wire-server byte/frame counters for one connection.
+
+        Called by :class:`~repro.serving.server.ReductionServer`; the
+        per-connection entries (and the aggregate totals, which survive the
+        connection) surface in :attr:`ServiceStats.connections`.
+        """
+        with self._mlock:
+            if opened:
+                self._conn_totals["opened"] += 1
+                self._conns.setdefault(conn_id, {
+                    "rx_bytes": 0, "tx_bytes": 0, "frames_rx": 0,
+                    "frames_tx": 0, "protocol_errors": 0,
+                })
+            entry = self._conns.get(conn_id)
+            for k, v in (("rx_bytes", rx_bytes), ("tx_bytes", tx_bytes),
+                         ("frames_rx", frames_rx), ("frames_tx", frames_tx),
+                         ("protocol_errors", protocol_errors)):
+                self._conn_totals[k] += v
+                if entry is not None:
+                    entry[k] += v
+            if closed:
+                self._conn_totals["closed"] += 1
+                self._conns.pop(conn_id, None)
+
     # ------------------------------------------------------------ dispatcher
 
     def _loop(self) -> None:
@@ -453,20 +644,42 @@ class ReductionService:
             if batch:
                 self._dispatch(batch)
 
+    def _pop_next(self) -> _Request | None:
+        """Weighted priority dequeue with a starvation bound.
+
+        ``interactive`` wins every pop — unless it has won
+        ``starvation_limit`` consecutive pops while bulk work waited, in
+        which case one bulk request is forced through (counted as
+        ``forced`` in the priority stats).  Caller holds ``_cond``.
+        """
+        qi, qb = self._queues[INTERACTIVE], self._queues[BULK]
+        if qi and qb and self._interactive_run >= self.starvation_limit:
+            self._interactive_run = 0
+            with self._mlock:
+                self._prio_m[BULK]["forced"] += 1
+            return qb.popleft()
+        if qi:
+            self._interactive_run += 1
+            return qi.popleft()
+        if qb:
+            self._interactive_run = 0
+            return qb.popleft()
+        return None
+
     def _collect(self) -> list[_Request] | None:
         """Block for the first request, then linger ``batch_window`` for more."""
         with self._cond:
-            while not self._queue and not self._closing:
+            while not self._depth() and not self._closing:
                 self._cond.wait()
-            if not self._queue and self._closing:
+            if not self._depth() and self._closing:
                 return None
-            batch = [self._queue.popleft()]
+            batch = [self._pop_next()]
             self._cond.notify_all()  # space freed: wake blocked producers
         deadline = time.monotonic() + self.batch_window
         while len(batch) < self.max_batch_requests:
             with self._cond:
-                if self._queue:
-                    batch.append(self._queue.popleft())
+                if self._depth():
+                    batch.append(self._pop_next())
                     self._cond.notify_all()
                     continue
                 if self._closing:
@@ -475,7 +688,7 @@ class ReductionService:
                 if remaining <= 0:
                     break
                 self._cond.wait(remaining)
-                if not self._queue and time.monotonic() >= deadline:
+                if not self._depth() and time.monotonic() >= deadline:
                     break
         return batch
 
@@ -489,9 +702,15 @@ class ReductionService:
                 self._m["wait_s_total"] += wait
                 self._m["wait_count"] += 1
                 self._m["wait_s_max"] = max(self._m["wait_s_max"], wait)
+                pm = self._prio_m[req.priority]
+                pm["dispatched"] += 1
+                pm["wait_s_total"] += wait
+                pm["wait_s_max"] = max(pm["wait_s_max"], wait)
+                self._wait_samples[req.priority].append(wait)
 
         encode_groups: dict[Any, list[tuple[_Request, tuple]]] = {}
         decode_groups: dict[tuple, list[tuple[_Request, str, Any]]] = {}
+        stream_decode_groups: dict[Any, list[_Request]] = {}
         for req in batch:
             try:
                 if req.kind == "compress":
@@ -526,6 +745,16 @@ class ReductionService:
                     # one (or a prefix of) pread + a small reconstruction;
                     # never let file I/O block the dispatcher
                     self._stream_pool.submit(self._run_quicklook, req)
+                elif req.kind == "fetch_kv":
+                    # a dict lookup or a single spill pread — interactive
+                    self._stream_pool.submit(self._run_fetch_kv, req)
+                elif req.kind == "decompress_stream":
+                    # cross-request coalescing: same-stream requests in one
+                    # dispatch cycle share per-chunk decodes via the
+                    # container chunk index (ROADMAP "service hardening")
+                    stream_decode_groups.setdefault(
+                        self._stream_key(req), []
+                    ).append(req)
                 else:  # park_kv
                     sub = self.kv.park_async(
                         req.session_id, req.tree, tenant=req.tenant
@@ -541,7 +770,7 @@ class ReductionService:
             reqs = {id(r): r for r, _ in entries}
             if self.engine.encode_bucket_stackable(spec, items):
                 self._note_stacked(len(items), reqs.values(), encode=True)
-                sub = self.engine.submit_encode_bucket(spec, items)
+                sub = self.engine.submit_encode_bucket(spec, items, priority=BULK)
                 sub.add_done_callback(
                     lambda s, es=entries: self._on_encode_bucket(es, s)
                 )
@@ -549,7 +778,7 @@ class ReductionService:
                 with self._mlock:
                     self._m["fallback_leaves"] += len(items)
                 for req, job in entries:
-                    sub = self.engine.submit_encode_job(job)
+                    sub = self.engine.submit_encode_job(job, priority=BULK)
                     sub.add_done_callback(
                         lambda s, r=req, k=job[0]: self._on_leaf(r, k, s)
                     )
@@ -560,7 +789,9 @@ class ReductionService:
             prepared = self.engine.decode_bucket_prepared(spec, items)
             if prepared is not None:
                 self._note_stacked(len(items), reqs.values(), encode=False)
-                sub = self.engine.submit_decode_bucket(spec, items, prepared)
+                sub = self.engine.submit_decode_bucket(
+                    spec, items, prepared, priority=BULK
+                )
                 sub.add_done_callback(
                     lambda s, es=entries: self._on_decode_bucket(es, s)
                 )
@@ -568,10 +799,15 @@ class ReductionService:
                 with self._mlock:
                     self._m["decode_fallback_leaves"] += len(items)
                 for req, key, c in entries:
-                    sub = self.engine.submit_decode_job(spec, c)
+                    sub = self.engine.submit_decode_job(spec, c, priority=BULK)
                     sub.add_done_callback(
                         lambda s, r=req, k=key: self._on_leaf(r, k, s)
                     )
+
+        for _key, reqs_same_stream in stream_decode_groups.items():
+            self._stream_pool.submit(
+                self._run_stream_decode_group, reqs_same_stream
+            )
 
     def _run_stream(self, req: _Request) -> None:
         """One auto-tuned CompressorStream run on a stream-pool thread."""
@@ -625,6 +861,88 @@ class ReductionService:
             self._resolve(req, (arr, info))
         except Exception as e:
             self._fail(req, e)
+
+    def _run_fetch_kv(self, req: _Request) -> None:
+        """Admitted (interactive-priority) parked-KV fetch."""
+        try:
+            self._resolve(
+                req, self.kv.fetch(req.session_id, tenant=req.tenant)
+            )
+        except Exception as e:
+            self._fail(req, e)
+
+    @staticmethod
+    def _stream_key(req: _Request) -> tuple:
+        """Identity of a stream source: same key ⇒ same chunk index."""
+        from ..core.container import crc32_of
+
+        src = req.tree
+        if isinstance(src, (bytes, bytearray, memoryview)):
+            raw = bytes(src)
+            return ("bytes", len(raw), crc32_of(raw))
+        return ("file", os.path.realpath(str(src)))
+
+    def _run_stream_decode_group(self, reqs: list[_Request]) -> None:
+        """Decode one stream for N coalesced requests, each chunk once.
+
+        The stream's chunk index locates every chunk, so only the union of
+        the requested ranges is ever read or decoded; a chunk needed by
+        several requests decodes once and the rest are ``coalesce`` hits.
+        """
+        try:
+            src = reqs[0].tree
+            if isinstance(src, (bytes, bytearray, memoryview)):
+                result = api.CompressorStream.from_bytes(bytes(src))
+            else:
+                result = api.CompressorStream.from_file(str(src))
+            n = len(result.chunks)
+        except Exception as e:
+            for req in reqs:
+                self._fail(req, e)
+            return
+        cache: dict[int, np.ndarray] = {}
+        decoded = hits = 0
+        for req in reqs:
+            try:
+                sel = req.stream_kwargs.get("chunks")
+                lo, hi = (0, n) if sel is None else (int(sel[0]), int(sel[1]))
+                if not 0 <= lo < hi <= n:
+                    raise IndexError(
+                        f"chunk range [{lo}, {hi}) out of bounds for "
+                        f"{n}-chunk stream"
+                    )
+                parts = []
+                for i in range(lo, hi):
+                    if i in cache:
+                        hits += 1
+                    else:
+                        cache[i] = np.asarray(api.decode(result.chunks[i]))
+                        decoded += 1
+                    parts.append(cache[i])
+                arr = np.concatenate(parts, axis=result.axis)
+                reader = getattr(result.chunks, "reader", None)
+                info = {
+                    "chunks": [lo, hi],
+                    "stream_chunks": n,
+                    "axis": result.axis,
+                    "group_requests": len(reqs),
+                    "group_chunk_decodes": decoded,
+                    "group_coalesce_hits": hits,
+                }
+                if reader is not None:
+                    info["bytes_read"] = int(
+                        getattr(reader, "pread_bytes", 0) or 0
+                    )
+                self._resolve(req, (arr, info))
+            except Exception as e:
+                self._fail(req, e)
+        reader = getattr(result.chunks, "reader", None)
+        if reader is not None:
+            reader.close()
+        with self._mlock:
+            self._m["stream_decode_requests"] += len(reqs)
+            self._m["chunk_decodes"] += decoded
+            self._m["chunk_coalesce_hits"] += hits
 
     def _note_stacked(self, n_leaves: int, reqs, *, encode: bool) -> None:
         reqs = list(reqs)
@@ -746,15 +1064,43 @@ class ReductionService:
 
     # --------------------------------------------------------------- metrics
 
+    @staticmethod
+    def _wait_hist(samples: list[float], pm: dict) -> dict[str, float]:
+        n = len(samples)
+        arr = np.asarray(samples) if n else None
+        return {
+            "admitted": pm["admitted"],
+            "dispatched": pm["dispatched"],
+            "forced": pm["forced"],
+            "wait_mean": pm["wait_s_total"] / max(pm["dispatched"], 1),
+            "wait_max": pm["wait_s_max"],
+            "wait_p50": float(np.percentile(arr, 50)) if n else 0.0,
+            "wait_p99": float(np.percentile(arr, 99)) if n else 0.0,
+            "samples": n,
+        }
+
     def stats(self) -> ServiceStats:
         with self._cond:
-            depth = len(self._queue)
+            depths = {p: len(q) for p, q in self._queues.items()}
+            depth = sum(depths.values())
             inflight = self._inflight
         lanes = self.engine.executor.lane_stats()
+        prio_lanes = self.engine.executor.priority_stats()
         kv_stats = self.kv.stats()
         with self._mlock:
             m = dict(self._m)
             tenants = {t: dict(v) for t, v in self._tenants.items()}
+            priorities = {
+                p: {"depth": depths[p],
+                    **self._wait_hist(list(self._wait_samples[p]),
+                                      self._prio_m[p])}
+                for p in PRIORITIES
+            }
+            connections = {
+                **self._conn_totals,
+                "open": len(self._conns),
+                "per_connection": {c: dict(v) for c, v in self._conns.items()},
+            }
         parked = kv_stats.get("tenant_bytes", {})
         for tenant, nbytes in parked.items():
             tenants.setdefault(tenant, {"requests": 0, "raw_bytes": 0})
@@ -790,8 +1136,14 @@ class ReductionService:
             stream_serial_degrades=m["stream_serial_degrades"],
             quicklook_requests=m["quicklook_requests"],
             quicklook_bytes=m["quicklook_bytes"],
+            stream_decode_requests=m["stream_decode_requests"],
+            chunk_decodes=m["chunk_decodes"],
+            chunk_coalesce_hits=m["chunk_coalesce_hits"],
             per_tenant=tenants,
+            priorities=priorities,
             executor_lanes=lanes,
+            executor_priorities=prio_lanes,
+            connections=connections,
             kv=kv_stats,
         )
 

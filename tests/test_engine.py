@@ -555,3 +555,69 @@ def test_executor_done_callback_fires_with_submission():
     assert done.wait(30)
     assert seen == ["payload"]
     ex.shutdown()
+
+
+def test_executor_drain_waits_for_completion_callbacks():
+    """Regression: ``drain()`` returned once a *task* finished, before its
+    done-callbacks ran — a callback chaining io-lane work (the serving /
+    checkpoint pattern) could still be submitting after a "successful"
+    drain, and shutdown would strand it.  Drain must not return between a
+    submission completing and its completion callbacks finishing."""
+    import threading
+    import time as _time
+
+    from repro.runtime.executor import DeviceExecutor
+
+    ex = DeviceExecutor(jax.devices())
+    rounds = 25
+    for _ in range(rounds):
+        gate = threading.Event()
+        hits = []
+        first = ex.submit(gate.wait, 30)
+        # continuation rides the io lane, submitted from first's callback
+        chained = ex.submit_after(
+            first, lambda _r: (_time.sleep(0.002), hits.append("io"))[-1],
+            lane="io",
+        )
+        gate.set()
+        assert ex.drain(timeout=30)
+        # a successful drain means the chained io work already RAN
+        assert hits == ["io"]
+        assert chained.done()
+    st = ex.lane_stats()
+    assert st["io"]["submitted"] == rounds
+    assert st["io"]["completed"] == rounds
+    assert st["compute"]["completed"] == st["compute"]["submitted"]
+    # plain done-callbacks too: drain covers them, not just chains
+    flags = []
+    sub = ex.submit(lambda: 41 + 1)
+    sub.add_done_callback(lambda s: (_time.sleep(0.01), flags.append(s.result())))
+    assert ex.drain(timeout=30)
+    assert flags == [42]
+    ex.shutdown()
+
+
+def test_executor_priority_stats_tagged_lanes():
+    """`submit(..., priority=)` feeds per-class counters independent of the
+    physical lane — the serving layer's interactive/bulk split."""
+    import threading
+
+    from repro.runtime.executor import DeviceExecutor
+
+    ex = DeviceExecutor(jax.devices())
+    gate = threading.Event()
+    subs = [ex.submit(gate.wait, 30, priority="bulk") for _ in range(3)]
+    subs.append(ex.submit(gate.wait, 30, lane="io", priority="interactive"))
+    ex.submit(lambda: 0).result()  # untagged: must not appear below
+    st = ex.priority_stats()
+    assert st["bulk"]["submitted"] == 3
+    assert st["interactive"]["submitted"] == 1
+    assert set(st) == {"bulk", "interactive"}
+    gate.set()
+    assert ex.drain(timeout=30)
+    st = ex.priority_stats()
+    for cls in ("bulk", "interactive"):
+        assert st[cls]["completed"] == st[cls]["submitted"]
+        assert st[cls]["depth"] == 0 and st[cls]["inflight"] == 0
+        assert st[cls]["wait_s"] >= 0.0
+    ex.shutdown()

@@ -523,3 +523,55 @@ def test_service_soak_bit_identity_with_direct_api():
         assert snap.fallback_leaves > 0
         assert snap.completed == n_threads * n_rounds  # snapshot pre-decompress
         assert snap.batch_fill_ratio > 1.0  # coalescing demonstrably engaged
+
+
+def test_service_priority_starvation_bound():
+    """Regression (PR 10 priority lanes): interactive work admitted *behind*
+    a saturating bulk backlog must jump the queue — its p99 wait stays below
+    the backlog's — while the starvation bound keeps forcing bulk through
+    between interactive dequeues (no bulk lockout)."""
+    from repro.core.engine import ExecutionEngine
+    from repro.serving import ReductionService
+
+    rng = np.random.default_rng(0)
+    tree = {"w": rng.normal(size=(16, 16)).astype(np.float32)}
+    dwell = 0.15
+
+    def slow_select(key, arr):
+        time.sleep(dwell)  # runs in the dispatcher: one slow bulk dispatch
+        return _zfp_select(key, arr)
+
+    with ExecutionEngine(backend="xla") as eng:
+        with ReductionService(eng, max_queue=64, batch_window=0.0,
+                              max_batch_requests=1,
+                              starvation_limit=2) as svc:
+            svc.park_kv("starve", {"k": tree["w"]})  # interactive target
+            # saturate the bulk lane: 6 dispatch cycles of `dwell` each
+            bulk = [svc.submit_compress(tree, slow_select) for _ in range(6)]
+            time.sleep(dwell / 2)  # dispatcher is inside bulk[0]'s select
+            # interactive arrives LATE, behind the whole bulk backlog
+            inter = [svc.submit_fetch_kv("starve") for _ in range(4)]
+            for s in inter:
+                assert "k" in s.result(timeout=60)
+            for s in bulk:
+                s.result(timeout=60)
+            st = svc.stats()
+
+    pi, pb = st.priorities["interactive"], st.priorities["bulk"]
+    assert pi["admitted"] == pi["dispatched"] == 4
+    assert pb["dispatched"] == 7  # 6 compresses + the park
+    # the histograms exist and carry real samples
+    for h in (pi, pb):
+        assert h["samples"] >= 1
+        assert 0.0 <= h["wait_p50"] <= h["wait_p99"]
+        assert h["wait_p99"] <= h["wait_max"] + 1e-9
+    # interactive jumped a 5-deep bulk backlog it arrived behind: even its
+    # p99 wait undercuts bulk's (which eats the serial `dwell` dispatches)
+    assert pi["wait_p99"] < pb["wait_p99"]
+    # interactive p99 is bounded by the starvation design: at most one
+    # in-progress dispatch + starvation_limit forced-bulk dwells + slack
+    assert pi["wait_p99"] < 4 * dwell
+    # and the bound engaged: bulk was forced through between interactives
+    assert pb["forced"] >= 1
+    # executor saw the same tags end-to-end (engine submissions are bulk)
+    assert st.executor_priorities.get("bulk", {}).get("submitted", 0) >= 1

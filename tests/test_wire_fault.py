@@ -1,0 +1,257 @@
+"""Wire-protocol fault injection (satellite: fault tier).
+
+Kills real client *processes* mid-request (half a frame on the wire) and
+mid-response (request sent, peer gone before the reply lands) and asserts
+the server's containment contract: the dead client's connection is
+reclaimed, only *its* request is lost, every other connection keeps
+streaming — with the accounting (``reclaimed`` / ``torn_frames`` /
+``send_failures``) to prove it.
+
+The ``slow``-marked soak drives N concurrent clients with mixed-priority
+traffic and requires socket-path results byte-identical to the in-process
+:class:`ReductionService` API.
+"""
+
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.serving import protocol as P
+from repro.serving.client import ReductionClient
+from repro.serving.server import ReductionServer
+from repro.serving.service import ReductionService
+
+TIMEOUT = 30.0
+
+# Standalone client bodies (run via `python -c`): frames are built with raw
+# struct+zlib so the subprocess never imports repro (or jax) — the kill
+# lands within milliseconds of launch, while the server is mid-read or
+# mid-compute, not during a 10-second interpreter warm-up.
+_PREAMBLE = """
+import os, socket, struct, sys, zlib
+path = sys.argv[1]
+sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+sock.connect(path)
+def frame(opcode, rid, payload=b"", tenant=b"fault"):
+    hdr = struct.pack("<4sHHQHHI", b"HPRW", 1, opcode, rid,
+                      len(tenant), 0, zlib.crc32(payload) & 0xFFFFFFFF)
+    body = hdr + tenant + payload
+    return struct.pack("<I", len(body)) + body
+"""
+
+# dies after half a frame: the server is left holding a torn read
+_KILL_MID_REQUEST = _PREAMBLE + """
+blob = frame(0x01, 1, b"x" * 4096)
+sock.sendall(blob[: len(blob) // 2])
+os._exit(1)
+"""
+
+# dies after a *complete* request, before reading the response: the server
+# computes an answer for a peer that no longer exists
+_KILL_MID_RESPONSE = _PREAMBLE + """
+sock.sendall(frame(0x01, 1, b"y" * 4096))
+os._exit(1)
+"""
+
+# well-behaved: one ping round-trip, exit 0 (sanity for the harness)
+_PING_OK = _PREAMBLE + """
+sock.sendall(frame(0x01, 7, b"ok"))
+n = struct.unpack("<I", sock.recv(4))[0]
+got = b""
+while len(got) < n:
+    got += sock.recv(n - len(got))
+assert got[6:8] == struct.pack("<H", 0x80), got[:24]
+os._exit(0)
+"""
+
+
+@pytest.fixture(scope="module")
+def server():
+    with ReductionServer(max_queue=32, batch_window=0.002) as srv:
+        yield srv
+
+
+def _run_client(body: str, server, expect_rc: int | None = None):
+    proc = subprocess.run(
+        [sys.executable, "-c", body, server.unix_address],
+        capture_output=True, text=True, timeout=TIMEOUT,
+    )
+    if expect_rc is not None:
+        assert proc.returncode == expect_rc, proc.stderr
+    return proc
+
+
+def _wait_stat(fn, target, timeout=TIMEOUT):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        v = fn()
+        if v >= target:
+            return v
+        time.sleep(0.01)
+    raise AssertionError(f"stat never reached {target}: last {fn()}")
+
+
+@pytest.mark.subprocess
+def test_harness_sanity_wellbehaved_client(server):
+    _run_client(_PING_OK, server, expect_rc=0)
+
+
+@pytest.mark.subprocess
+def test_client_killed_mid_request_is_contained(server):
+    before = server.stats()
+    # a bystander with an open connection through the whole incident
+    with ReductionClient(server.unix_address, timeout=TIMEOUT) as bystander:
+        assert bystander.ping(b"pre") == b"pre"
+        _run_client(_KILL_MID_REQUEST, server, expect_rc=1)
+        # server notices the torn frame and reclaims exactly that peer
+        _wait_stat(lambda: server.stats()["torn_frames"],
+                   before["torn_frames"] + 1)
+        _wait_stat(lambda: server.stats()["reclaimed"],
+                   before["reclaimed"] + 1)
+        # the bystander's connection never blinked
+        assert bystander.ping(b"post") == b"post"
+        assert bystander.client_stats()["reconnects"] == 1  # initial only
+        assert server.service.stats().connections["open"] >= 1  # bystander
+    after = server.stats()
+    # the torn frame produced no request dispatch and no response
+    assert after["requests"] == before["requests"] + 2  # bystander pings
+
+
+@pytest.mark.subprocess
+def test_client_killed_mid_response_fails_only_that_request(server):
+    before = server.stats()
+    with ReductionClient(server.unix_address, timeout=TIMEOUT) as bystander:
+        assert bystander.ping(b"pre") == b"pre"
+        _run_client(_KILL_MID_RESPONSE, server, expect_rc=1)
+        # the request WAS dispatched; its response either hit a dead socket
+        # (send_failures) or drained into a buffer nobody will read —
+        # either way the connection is reclaimed and nobody else pays
+        _wait_stat(lambda: server.stats()["requests"],
+                   before["requests"] + 2)
+        _wait_stat(lambda: server.stats()["reclaimed"],
+                   before["reclaimed"] + 1)
+        assert bystander.ping(b"post") == b"post"
+        assert bystander.client_stats()["retries"] == 0
+    after = server.stats()
+    assert after["send_failures"] >= before["send_failures"]
+
+
+@pytest.mark.subprocess
+def test_kill_storm_then_full_service(server):
+    """A burst of dying clients must leave the server fully functional."""
+    before = server.stats()
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c",
+             _KILL_MID_REQUEST if i % 2 else _KILL_MID_RESPONSE,
+             server.unix_address],
+            stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+        for i in range(6)
+    ]
+    for p in procs:
+        p.wait(timeout=TIMEOUT)
+    _wait_stat(lambda: server.stats()["reclaimed"], before["reclaimed"] + 6)
+    with ReductionClient(server.unix_address, timeout=TIMEOUT) as cli:
+        rng = np.random.default_rng(3)
+        tree = {"w": rng.normal(size=(48, 48)).astype(np.float32)}
+        comp, _ = cli.compress(tree, method="zfp", tolerance=1e-3)
+        out = cli.decompress(comp)
+        ref = server.service.decompress(
+            comp, {"w": np.empty_like(tree["w"])}
+        )
+        assert np.asarray(out["w"]).tobytes() == np.asarray(ref["w"]).tobytes()
+    assert server.stats()["open_connections"] <= 1
+
+
+@pytest.mark.slow
+def test_soak_n_clients_mixed_priorities_byte_identical():
+    """N concurrent socket clients vs the in-process API: byte-identity.
+
+    Mixed traffic — bulk compress/decompress and stream decodes racing
+    interactive KV fetches — through one server; every socket result must
+    equal the in-process ``ReductionService`` answer bit for bit.
+    """
+    rng = np.random.default_rng(7)
+    svc = ReductionService(max_queue=64, batch_window=0.004)
+    n_clients, n_iter = 4, 5
+    failures: list[str] = []
+    with ReductionServer(svc) as srv:
+        # park one session up front so interactive fetches have a target
+        kv_ref = {"k": rng.normal(size=(32, 16)).astype(np.float32)}
+        # KV sessions are tenant-scoped: park the same payload under every
+        # worker tenant (park is deterministic → identical bytes)
+        for wid in range(n_clients):
+            svc.park_kv("soak", kv_ref, tenant=f"w{wid}")
+
+        def blob(v):  # parked buffers mix Compressed and passthrough arrays
+            return (v.to_bytes() if hasattr(v, "to_bytes")
+                    else np.asarray(v).tobytes())
+
+        fetched_ref = {k: blob(v)
+                       for k, v in svc.fetch_kv("soak", tenant="w0").items()}
+        stream_src, _ = svc.compress_stream(
+            rng.normal(size=(8, 64)).astype(np.float32), "zfp",
+            tolerance=1e-3, chunk_size=2, window=2,
+        )
+        stream_ref, _ = svc.decompress_stream(stream_src)
+
+        def worker(wid: int):
+            try:
+                cli = ReductionClient(srv.unix_address, tenant=f"w{wid}",
+                                      timeout=TIMEOUT)
+                w_rng = np.random.default_rng(100 + wid)
+                with cli:
+                    for it in range(n_iter):
+                        tree = {
+                            f"p{wid}/{it}": w_rng.normal(
+                                size=(24, 24)).astype(np.float32),
+                        }
+                        comp, _ = cli.compress(tree, method="zfp",
+                                               tolerance=1e-3)
+                        ref, _ = svc.compress(
+                            tree,
+                            lambda k, a: ("zfp", {"tolerance": 1e-3}),
+                        )
+                        for k in tree:
+                            if comp[k].to_bytes() != ref[k].to_bytes():
+                                failures.append(f"compress {k}")
+                        out = cli.decompress(comp)
+                        ref_out = svc.decompress(
+                            ref, {k: np.empty_like(v)
+                                  for k, v in tree.items()},
+                        )
+                        for k in tree:
+                            if (np.asarray(out[k]).tobytes()
+                                    != np.asarray(ref_out[k]).tobytes()):
+                                failures.append(f"decompress {k}")
+                        # interactive lane, racing the bulk work above
+                        fetched = cli.fetch_kv("soak")
+                        for k, ref_blob in fetched_ref.items():
+                            if blob(fetched[k]) != ref_blob:
+                                failures.append(f"fetch_kv {k}")
+                        arr, _ = cli.decompress_stream(stream_src)
+                        if arr.tobytes() != stream_ref.tobytes():
+                            failures.append("stream")
+            except Exception as e:  # pragma: no cover - diagnostic
+                failures.append(f"worker {wid}: {type(e).__name__}: {e}")
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+        assert failures == []
+        st = svc.stats()
+        # both priority classes actually dispatched during the soak
+        assert st.priorities["interactive"]["dispatched"] >= n_clients * n_iter
+        assert st.priorities["bulk"]["dispatched"] > 0
+        assert st.connections["frames_rx"] >= n_clients * n_iter * 4
+    svc.close()

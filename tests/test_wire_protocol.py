@@ -1,0 +1,303 @@
+"""Wire-protocol frame fuzzing (satellite: fuzz tier).
+
+Every mutation of a valid frame — truncation, bit flips, an oversized or
+undersized length prefix, bad magic/version/opcode, a tampered crc — must
+raise a typed :class:`ProtocolError` naming the offending field, and a
+server fed such garbage must answer (or hang up) without ever crashing its
+accept/read loops or corrupting service for well-behaved connections.
+
+Runs in `scripts/check.sh fast`: no subprocesses, no model weights — one
+small in-process server shared module-wide.
+"""
+
+import random
+import socket
+import struct
+
+import numpy as np
+import pytest
+
+from repro.serving import protocol as P
+from repro.serving.client import ReductionClient
+from repro.serving.server import ReductionServer
+
+TIMEOUT = 30.0  # generous socket timeout: "never hang" is the assertion
+
+
+@pytest.fixture(scope="module")
+def server():
+    with ReductionServer(max_queue=16, batch_window=0.002) as srv:
+        yield srv
+
+
+def _raw_conn(server):
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.settimeout(TIMEOUT)
+    sock.connect(server.unix_address)
+    return sock
+
+
+def _valid_frame(payload=b"hello", rid=7, tenant="fuzz"):
+    return P.encode_frame(P.OP_PING, rid, payload, tenant=tenant)
+
+
+# ---------------------------------------------------------------------------
+# parse_frame: pure-function field validation
+# ---------------------------------------------------------------------------
+
+
+def test_frame_roundtrip_preserves_fields():
+    blob = P.encode_frame(P.OP_COMPRESS, 42, b"xyz", tenant="t0", flags=0)
+    (n,) = struct.unpack_from("<I", blob)
+    assert n == len(blob) - 4
+    f = P.parse_frame(blob[4:])
+    assert (f.opcode, f.request_id, f.payload, f.tenant, f.flags) == (
+        P.OP_COMPRESS, 42, b"xyz", "t0", 0,
+    )
+    assert f.opcode_name == "compress"
+
+
+@pytest.mark.parametrize(
+    "mutate,field",
+    [
+        (lambda b: b[:10], "truncated"),                       # torn header
+        (lambda b: b"JUNK" + b[4:], "magic"),
+        (lambda b: b[:4] + struct.pack("<H", 99) + b[6:], "version"),
+        (lambda b: b[:6] + struct.pack("<H", 0x7F) + b[8:], "opcode"),
+        # tenant_len pointing past the end of the frame
+        (lambda b: b[:16] + struct.pack("<H", 0xFFFF) + b[18:], "tenant"),
+        # flip a payload bit: recorded crc32 no longer matches
+        (lambda b: b[:-1] + bytes([b[-1] ^ 0x01]), "crc32"),
+        # tamper the recorded crc itself
+        (lambda b: b[:20] + struct.pack("<I", 0xDEADBEEF) + b[24:], "crc32"),
+    ],
+)
+def test_parse_frame_names_the_field(mutate, field):
+    body = _valid_frame()[4:]
+    with pytest.raises(P.ProtocolError) as ei:
+        P.parse_frame(mutate(bytes(body)))
+    assert ei.value.field == field
+    assert f"[field={field}]" in str(ei.value)
+
+
+def test_parse_frame_rejects_invalid_utf8_tenant():
+    body = bytearray(_valid_frame(tenant="abcd")[4:])
+    body[P.HEADER_BYTES] = 0xFF  # lone continuation byte: invalid utf-8
+    with pytest.raises(P.ProtocolError) as ei:
+        P.parse_frame(bytes(body))
+    assert ei.value.field == "tenant"
+
+
+def test_parse_frame_attaches_request_id_after_header():
+    # post-header failures carry the (trustworthy) request id so the server
+    # can address its OP_ERROR response
+    body = bytearray(_valid_frame(rid=123)[4:])
+    body[-1] ^= 0x10
+    with pytest.raises(P.ProtocolError) as ei:
+        P.parse_frame(bytes(body))
+    assert getattr(ei.value, "request_id", None) == 123
+
+
+def test_length_prefix_bounds():
+    with pytest.raises(P.ProtocolError) as ei:
+        P.read_length_prefix(struct.pack("<I", P.HEADER_BYTES - 1))
+    assert ei.value.field == "length"
+    with pytest.raises(P.ProtocolError) as ei:
+        P.read_length_prefix(struct.pack("<I", 0xFFFFFFFF), max_frame=1 << 20)
+    assert ei.value.field == "length"
+    with pytest.raises(P.ProtocolError) as ei:
+        P.read_length_prefix(b"\x01\x02")
+    assert ei.value.field == "truncated"
+    assert P.read_length_prefix(struct.pack("<I", 64)) == 64
+
+
+def test_parse_frame_fuzz_never_hangs_or_misparses():
+    """Random mutations: typed ProtocolError or a clean parse — nothing else.
+
+    Bit flips in crc-uncovered header fields (request_id, flags) may yield a
+    *valid* frame with different values; that is fine — the contract is "no
+    hang, no crash, no exception other than ProtocolError".
+    """
+    rng = random.Random(0)
+    base = _valid_frame(payload=b"p" * 64, tenant="tenant-x")[4:]
+    for _ in range(500):
+        b = bytearray(base)
+        op = rng.randrange(3)
+        if op == 0:  # truncate
+            b = b[: rng.randrange(len(b))]
+        elif op == 1:  # bit flips
+            for _ in range(rng.randrange(1, 4)):
+                i = rng.randrange(len(b))
+                b[i] ^= 1 << rng.randrange(8)
+        else:  # splice random garbage
+            i = rng.randrange(len(b))
+            b[i : i + rng.randrange(1, 9)] = rng.randbytes(rng.randrange(9))
+        try:
+            frame = P.parse_frame(bytes(b))
+        except P.ProtocolError as e:
+            assert e.field  # typed, field-attributed
+        else:
+            assert isinstance(frame, P.Frame)
+
+
+def test_loads_payload_fuzz_is_typed():
+    comp_payload = P.dumps_payload(
+        {"a": np.arange(16, dtype=np.float32), "raw": b"\x00\x01"},
+        {"k": 1},
+    )
+    # round-trip sanity first
+    flat, extra = P.loads_payload(comp_payload)
+    assert extra == {"k": 1}
+    np.testing.assert_array_equal(flat["a"], np.arange(16, dtype=np.float32))
+    rng = random.Random(1)
+    for _ in range(300):
+        b = bytearray(comp_payload)
+        if rng.random() < 0.5:
+            b = b[: rng.randrange(len(b))]
+        else:
+            for _ in range(rng.randrange(1, 4)):
+                i = rng.randrange(len(b))
+                b[i] ^= 1 << rng.randrange(8)
+        try:
+            P.loads_payload(bytes(b))
+        except P.ProtocolError as e:
+            assert e.field == "payload"
+
+
+def test_error_payload_roundtrip_does_not_double_field_suffix():
+    e = P.ProtocolError("boom", field="crc32")
+    payload = P.error_payload(e)
+    with pytest.raises(P.ProtocolError) as ei:
+        P.raise_error_payload(payload)
+    assert str(ei.value).count("[field=crc32]") == 1
+    assert ei.value.field == "crc32"
+
+
+# ---------------------------------------------------------------------------
+# server loop survival under garbage
+# ---------------------------------------------------------------------------
+
+
+def test_server_rejects_oversized_length_prefix_and_hangs_up(server):
+    sock = _raw_conn(server)
+    try:
+        sock.sendall(struct.pack("<I", 0xFFFFFFFF))
+        frame = P.recv_frame(sock, max_frame=server.max_frame)
+        assert frame is not None and frame.opcode == P.OP_ERROR
+        with pytest.raises(P.ProtocolError) as ei:
+            P.raise_error_payload(frame.payload)
+        assert ei.value.field == "length"
+        # framing is unrecoverable: server closes the connection
+        assert P.recv_frame(sock, max_frame=server.max_frame) is None
+    finally:
+        sock.close()
+    _assert_still_serving(server)
+
+
+def test_server_survives_bad_magic_then_serves_fresh_connection(server):
+    sock = _raw_conn(server)
+    try:
+        junk = b"GET / HTTP/1.1\r\n\r\n"  # wrong protocol entirely
+        sock.sendall(struct.pack("<I", max(len(junk), P.HEADER_BYTES)))
+        sock.sendall(junk.ljust(P.HEADER_BYTES, b"\x00"))
+        frame = P.recv_frame(sock, max_frame=server.max_frame)
+        assert frame is not None and frame.opcode == P.OP_ERROR
+    finally:
+        sock.close()
+    _assert_still_serving(server)
+
+
+def test_server_reports_crc_error_and_keeps_connection(server):
+    sock = _raw_conn(server)
+    try:
+        blob = bytearray(_valid_frame(payload=b"x" * 32, rid=5))
+        blob[-1] ^= 0x40  # payload bit flip → crc mismatch
+        sock.sendall(bytes(blob))
+        frame = P.recv_frame(sock, max_frame=server.max_frame)
+        assert frame is not None and frame.opcode == P.OP_ERROR
+        assert frame.request_id == 5  # addressed to the mangled request
+        with pytest.raises(P.ProtocolError) as ei:
+            P.raise_error_payload(frame.payload)
+        assert ei.value.field == "crc32"
+        # frame boundary was intact → SAME connection keeps working
+        sock.sendall(_valid_frame(payload=b"alive", rid=6))
+        frame = P.recv_frame(sock, max_frame=server.max_frame)
+        assert frame is not None and frame.opcode == P.OP_OK
+        assert (frame.request_id, frame.payload) == (6, b"alive")
+    finally:
+        sock.close()
+
+
+def test_server_counts_protocol_errors_in_stats(server):
+    before = server.service.stats().connections["protocol_errors"]
+    sock = _raw_conn(server)
+    try:
+        blob = bytearray(_valid_frame(rid=9))
+        blob[-1] ^= 0x01
+        sock.sendall(bytes(blob))
+        assert P.recv_frame(sock).opcode == P.OP_ERROR
+    finally:
+        sock.close()
+    after = server.service.stats().connections["protocol_errors"]
+    assert after == before + 1
+    assert server.stats()["protocol_errors"] >= 1
+
+
+def test_server_fuzzed_frames_never_wedge_the_loop(server):
+    """Fire 60 mutated frames (fresh connection each — some mutations are
+    framing-fatal) and require a typed error or a hangup within the socket
+    timeout every time; the server must still serve afterwards."""
+    rng = random.Random(2)
+    base = _valid_frame(payload=b"q" * 48, tenant="fz")
+    outcomes = {"error_frame": 0, "hangup": 0, "ok": 0}
+    for _ in range(60):
+        b = bytearray(base)
+        op = rng.randrange(3)
+        if op == 0:
+            b = b[:4] + b[4 : 4 + rng.randrange(len(b) - 4)]
+            # fix the prefix so the server waits for exactly what we send,
+            # then close → torn-frame path
+            b[0:4] = struct.pack("<I", max(len(b) - 4 + 1, P.HEADER_BYTES))
+        elif op == 1:
+            i = rng.randrange(4, len(b))
+            b[i] ^= 1 << rng.randrange(8)
+        else:
+            b[0:4] = struct.pack("<I", rng.choice([0, 1, 23, 0x7FFFFFFF]))
+        sock = _raw_conn(server)
+        try:
+            sock.sendall(bytes(b))
+            sock.shutdown(socket.SHUT_WR)
+            frame = P.recv_frame(sock, max_frame=server.max_frame)
+            if frame is None:
+                outcomes["hangup"] += 1
+            elif frame.opcode == P.OP_ERROR:
+                outcomes["error_frame"] += 1
+            else:
+                outcomes["ok"] += 1  # mutation hit a crc-uncovered field
+        except P.ProtocolError:
+            outcomes["hangup"] += 1  # server died mid-response? no — torn
+        finally:
+            sock.close()
+    assert outcomes["error_frame"] > 0  # fuzzer did reach validation
+    _assert_still_serving(server)
+    # every fuzz connection was reclaimed
+    deadline_stats = server.stats()
+    assert deadline_stats["open_connections"] <= 1
+
+
+def test_response_opcode_as_request_is_rejected(server):
+    sock = _raw_conn(server)
+    try:
+        sock.sendall(P.encode_frame(P.OP_OK, 11, b"", tenant="fz"))
+        frame = P.recv_frame(sock)
+        assert frame.opcode == P.OP_ERROR
+        with pytest.raises(P.ProtocolError) as ei:
+            P.raise_error_payload(frame.payload)
+        assert ei.value.field == "opcode"
+    finally:
+        sock.close()
+
+
+def _assert_still_serving(server):
+    with ReductionClient(server.unix_address, timeout=TIMEOUT) as cli:
+        assert cli.ping(b"ok?") == b"ok?"
